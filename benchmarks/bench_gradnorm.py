@@ -1,0 +1,55 @@
+"""Figure 4 analog: gradient-norm inflation under URS.
+
+The paper derives E||w g||^2 = ||g||^2 / p, i.e. grad norms grow ~1/sqrt(p).
+We measure the actual NAT-GRPO gradient norm on a tiny model at several p
+and fit the exponent.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.grpo import GRPOConfig, nat_grpo_loss
+from repro.core.selectors import URSSelector
+
+B, T = 16, 64
+
+
+def run(draws: int = 200) -> None:
+    key = jax.random.PRNGKey(1)
+    k1, k2, k3, km = jax.random.split(key, 4)
+    logp = -jnp.abs(jax.random.normal(k1, (B, T))) * 0.4
+    old = logp + 0.1 * jax.random.normal(k2, (B, T))
+    adv = jax.random.normal(k3, (B,))
+    rm = jnp.ones((B, T), jnp.float32)
+    lengths = rm.sum(-1)
+
+    @jax.jit
+    def gnorm(w):
+        g = jax.grad(lambda lp: nat_grpo_loss(lp, old, adv, w, lengths)[0])(logp)
+        return jnp.linalg.norm(g)
+
+    print("# bench_gradnorm (Fig. 4): ||grad|| vs URS keep-probability p")
+    ps = [1.0, 0.5, 0.25, 0.125]
+    norms = []
+    t0 = time.perf_counter()
+    for p in ps:
+        sel = URSSelector(p=p)
+        vals = [float(gnorm(sel(jax.random.fold_in(km, i), rm).ht_weights))
+                for i in range(draws)]
+        norms.append(np.sqrt(np.mean(np.square(vals))))  # RMS norm
+        print(f"  p={p:5.3f}  rms||g|| = {norms[-1]:.4f}  "
+              f"(x{norms[-1] / norms[0]:.2f})")
+    dt = time.perf_counter() - t0
+    # fit ||g|| ~ p^(-alpha): paper predicts alpha ~= 0.5
+    alpha = -np.polyfit(np.log(ps), np.log(norms), 1)[0]
+    print(f"  fitted exponent alpha = {alpha:.3f} (paper: ~0.5)")
+    emit("gradnorm/urs_scaling", dt / (len(ps) * draws), f"alpha={alpha:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,115 @@
+"""Table 1 analog: measured properties of each token-efficient method.
+
+For each selector we MEASURE (not assert) on a small learner:
+  * forward FLOPs and backward+forward FLOPs of the learner step
+    (XLA cost analysis; RPC/Det-Trunc get their physical repack, so their
+    forward shrinks — URS only zeroes loss terms),
+  * gradient bias vs full-token GRPO (MC),
+giving the Unbiased? / Forward savings / Backward savings matrix.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.grpo import GRPOConfig
+from repro.core.selectors import make_selector
+from repro.models.config import ModelConfig, dense_blocks
+from repro.models import init_params, model_decl
+from repro.models.model import score_tokens
+from repro.rl.learner import make_loss_fn
+
+B, T = 8, 256
+
+
+def flops_of(fn, *args) -> float:
+    c = jax.jit(fn).lower(*args).compile()
+    ca = c.cost_analysis() or {}
+    return float(ca.get("flops", 0.0))
+
+
+def run(draws: int = 150) -> None:
+    cfg = ModelConfig(name="bench", d_model=128, n_heads=4, n_kv_heads=2,
+                      head_dim=32, d_ff=256, vocab_size=512,
+                      blocks=dense_blocks(2), seq_parallel=False,
+                      remat_policy="none", scan_layers=False)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, model_decl(cfg))
+    toks = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    rm = (jnp.arange(T)[None] >= 16).astype(jnp.float32) * jnp.ones((B, 1))
+    lengths = rm.sum(-1)
+    loss_fn = make_loss_fn(cfg, GRPOConfig(), vocab_chunks=1)
+
+    def batch_for(w, t_phys):
+        return {
+            "tokens": toks[:, :t_phys],
+            "old_logp": -jnp.abs(jax.random.normal(key, (B, t_phys))) * rm[:, :t_phys],
+            "advantages": jax.random.normal(key, (B,)),
+            "ht_weights": w[:, :t_phys],
+            "orig_lengths": lengths,
+            "lengths": jnp.full((B,), t_phys, jnp.int32),
+            "response_mask": rm[:, :t_phys],
+        }
+
+    # reference: full tokens
+    full_w = rm
+    f_fwd = flops_of(lambda p, b: loss_fn(p, b)[0], params, batch_for(full_w, T))
+    f_all = flops_of(jax.grad(lambda p, b: loss_fn(p, b)[0]), params,
+                     batch_for(full_w, T))
+
+    # reference gradient for bias measurement
+    grad_fn = jax.jit(jax.grad(lambda p, b: loss_fn(p, b)[0]))
+
+    def flat_grad(batch):
+        g = grad_fn(params, batch)
+        return jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                                for x in jax.tree.leaves(g)])
+
+    g_ref_v = flat_grad(batch_for(full_w, T))
+
+    print("# bench_method_matrix (Table 1): measured method properties")
+    print(f"{'method':11s} {'fwd_flops%':>10s} {'fwd+bwd%':>9s} "
+          f"{'grad_bias':>10s} {'unbiased?':>9s}")
+    rows = [("full", "full", {}, T),
+            ("urs", "urs", {"p": 0.5}, T),
+            ("det_trunc", "det_trunc", {}, T // 2 + 16),
+            ("rpc", "rpc", {"min_cut": 16}, None)]
+    for name, sel_name, kw, t_phys in rows:
+        sel = make_selector(sel_name, **kw)
+        t0 = time.perf_counter()
+        # expected physical length for RPC: bucket at ~E[L] + prompt
+        if t_phys is None:
+            t_phys = 16 + ((T - 16) + 16) // 2 + 32  # prompt + E[L] + slack
+        gsum_a = gsum_b = None
+        for i in range(draws):
+            s = sel(jax.random.fold_in(key, i), rm)
+            g = flat_grad(batch_for(s.ht_weights, T))
+            if i % 2 == 0:
+                gsum_a = g if gsum_a is None else gsum_a + g
+            else:
+                gsum_b = g if gsum_b is None else gsum_b + g
+        na, nb = (draws + 1) // 2, draws // 2
+        gmc = (gsum_a + gsum_b) / draws
+        ref_norm = float(jnp.linalg.norm(g_ref_v))
+        bias = float(jnp.linalg.norm(gmc - g_ref_v)) / ref_norm
+        # split-half MC noise floor: ||mean_a - mean_b||/2 estimates the
+        # sampling error of gmc — "biased" means bias >> noise
+        noise = float(jnp.linalg.norm(gsum_a / na - gsum_b / nb)) / (2 * ref_norm)
+        m_fwd = flops_of(lambda p, b: loss_fn(p, b)[0], params,
+                         batch_for(sel(key, rm).ht_weights, t_phys))
+        m_all = flops_of(jax.grad(lambda p, b: loss_fn(p, b)[0]), params,
+                         batch_for(sel(key, rm).ht_weights, t_phys))
+        unb = "yes" if bias < max(3 * noise, 0.05) else "NO"
+        print(f"{name:11s} {100 * m_fwd / f_fwd:9.1f}% {100 * m_all / f_all:8.1f}% "
+              f"{bias:10.4f} (noise {noise:.3f}) {unb:>4s}")
+        emit(f"method_matrix/{name}", (time.perf_counter() - t0) / draws,
+             f"fwd={m_fwd / f_fwd:.3f};fwdbwd={m_all / f_all:.3f};"
+             f"bias={bias:.4f};noise={noise:.4f}")
+
+
+if __name__ == "__main__":
+    run()

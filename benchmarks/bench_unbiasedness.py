@@ -1,0 +1,59 @@
+"""Proposition 1 (paper §3.1/App. A): Monte-Carlo convergence of the
+HT-masked loss & gradient to the full-token GRPO values, per selector."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.grpo import full_token_loss_reference, nat_grpo_loss
+from repro.core.selectors import DetTruncSelector, RPCSelector, URSSelector
+
+
+def run(draws: int = 600) -> None:
+    b, t = 8, 64
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3, km = jax.random.split(key, 4)
+    logp = -jnp.abs(jax.random.normal(k1, (b, t))) * 0.4
+    old = logp + 0.1 * jax.random.normal(k2, (b, t))
+    adv = jax.random.normal(k3, (b,))
+    rm = (jnp.arange(t)[None] < 48).astype(jnp.float32) * jnp.ones((b, 1))
+    lengths = rm.sum(-1)
+    full = float(full_token_loss_reference(logp, old, adv, rm))
+    g_full = jax.grad(lambda lp: full_token_loss_reference(lp, old, adv, rm))(logp)
+
+    @jax.jit
+    def masked_loss_grad(w):
+        l, _ = nat_grpo_loss(logp, old, adv, w, lengths)
+        g = jax.grad(lambda lp: nat_grpo_loss(lp, old, adv, w, lengths)[0])(logp)
+        return l, g
+
+    print("# bench_unbiasedness (Prop 1): |MC mean - full| after N draws")
+    print(f"{'selector':14s} {'loss_err':>9s} {'grad_rel_err':>12s} {'verdict':>9s}")
+    for name, sel in [("urs_p0.5", URSSelector(p=0.5)),
+                      ("urs_p0.25", URSSelector(p=0.25)),
+                      ("rpc_C4", RPCSelector(min_cut=4)),
+                      ("det_trunc", DetTruncSelector(frac=0.5))]:
+        t0 = time.perf_counter()
+        ls, gs = [], []
+        for i in range(draws):
+            s = sel(jax.random.fold_in(km, i), rm)
+            l, g = masked_loss_grad(s.ht_weights)
+            ls.append(float(l))
+            gs.append(g)
+        dt = time.perf_counter() - t0
+        mc = np.mean(ls)
+        gmc = jnp.mean(jnp.stack(gs), 0)
+        rel = float(jnp.linalg.norm(gmc - g_full) / jnp.linalg.norm(g_full))
+        unbiased = name != "det_trunc"
+        verdict = ("PASS" if (rel < 0.12) == unbiased else "FAIL")
+        print(f"{name:14s} {abs(mc - full):9.4f} {rel:12.4f} {verdict:>9s}")
+        emit(f"unbiasedness/{name}", dt / draws,
+             f"loss_err={abs(mc - full):.4f};grad_rel={rel:.4f}")
+
+
+if __name__ == "__main__":
+    run()

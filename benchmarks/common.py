@@ -1,0 +1,33 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def ci95(xs) -> tuple:
+    xs = np.asarray(xs, np.float64)
+    m = xs.mean()
+    if len(xs) < 2:
+        return m, 0.0
+    half = 1.96 * xs.std(ddof=1) / np.sqrt(len(xs))
+    return float(m), float(half)
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """CSV row the harness scrapes: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

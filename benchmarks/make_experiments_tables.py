@@ -1,0 +1,77 @@
+"""Assemble the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSONL artifacts.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_tables \
+        --in experiments/dryrun.jsonl --out experiments/tables.md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.roofline import fmt_s, load, markdown, table
+
+
+def dryrun_table(recs) -> str:
+    out = ["| arch | shape | mesh | status | compile | peak GiB/dev | "
+           "micro (rows×n) |",
+           "|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        mem = r.get("memory", {})
+        micro = (f"{r.get('micro_rows','-')}×{r.get('num_micro','-')}"
+                 if "micro_rows" in r else "—")
+        out.append(
+            f"| {arch} | {shape} | {mesh} | {r['status']} | "
+            f"{r.get('compile_s', float('nan')):.0f}s | "
+            f"{mem.get('peak_bytes', 0) / 2**30:.1f} | {micro} |")
+    return "\n".join(out)
+
+
+def collective_table(recs, mesh="single") -> str:
+    out = ["| arch | shape | HLO flops/dev | bytes/dev | coll bytes/dev | "
+           "AG | AR | RS | A2A | CP |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh or "probe_total_per_dev" not in r:
+            continue
+        t = r["probe_total_per_dev"]
+        sc = r.get("scan_cost", {}).get("coll", {})
+        gb = 1e9
+
+        def f(k):
+            return f"{sc.get(k, 0) / gb:.1f}"
+
+        out.append(
+            f"| {arch} | {shape} | {t['flops']:.2e} | {t['bytes']:.2e} | "
+            f"{t['coll']:.2e} | {f('all-gather')} | {f('all-reduce')} | "
+            f"{f('reduce-scatter')} | {f('all-to-all')} | "
+            f"{f('collective-permute')} |")
+    out.append("")
+    out.append("(per-op columns in GB/device from the SCANNED compile — "
+               "per-iteration costs, not totals; totals come from the "
+               "probe extrapolation column.)")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inputs", nargs="*",
+                    default=["experiments/dryrun.jsonl"])
+    ap.add_argument("--out", default="experiments/tables.md")
+    args = ap.parse_args()
+    recs = load(args.inputs)
+    parts = [
+        "## Dry-run cells (compile + memory)\n", dryrun_table(recs),
+        "\n\n## Roofline (single-pod, probe-extrapolated)\n",
+        markdown(table(recs, "single")),
+        "\n\n## Collective detail\n", collective_table(recs),
+    ]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write("\n".join(parts) + "\n")
+    print(f"wrote {args.out} ({len(recs)} records)")
+
+
+if __name__ == "__main__":
+    main()

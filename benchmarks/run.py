@@ -1,0 +1,62 @@
+"""Benchmark driver: one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick defaults
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale settings
+
+Emits human tables plus CSV rows ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale draws/steps/seeds (slow)")
+    ap.add_argument("--only", default="",
+                    help="comma list: unbiasedness,gradnorm,matrix,ratio,"
+                         "efficiency,quality,roofline")
+    args = ap.parse_args()
+    want = set(filter(None, args.only.split(",")))
+
+    def on(name):
+        return not want or name in want
+
+    t0 = time.time()
+    if on("unbiasedness"):
+        from benchmarks import bench_unbiasedness
+        bench_unbiasedness.run(draws=1500 if args.full else 400)
+        print()
+    if on("gradnorm"):
+        from benchmarks import bench_gradnorm
+        bench_gradnorm.run(draws=600 if args.full else 150)
+        print()
+    if on("matrix"):
+        from benchmarks import bench_method_matrix
+        bench_method_matrix.run(draws=400 if args.full else 100)
+        print()
+    if on("ratio"):
+        from benchmarks import bench_selected_ratio
+        bench_selected_ratio.run(steps=30 if args.full else 10)
+        print()
+    if on("efficiency"):
+        from benchmarks import bench_efficiency
+        bench_efficiency.run()
+        print()
+    if on("quality"):
+        from benchmarks import bench_quality
+        bench_quality.run(steps=150 if args.full else 40,
+                          seeds=(0, 1, 2, 3, 4) if args.full else (0, 1))
+        print()
+    if on("roofline"):
+        import subprocess
+        import sys
+        subprocess.run([sys.executable, "-m", "benchmarks.roofline"],
+                       check=False)
+    print(f"\n# benchmarks done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

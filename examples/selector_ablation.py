@@ -1,0 +1,58 @@
+"""Ablation: the compute-variance trade-off of NAT selectors (paper §3.1).
+
+For each selector, estimates over many mask draws:
+  * expected kept-token fraction (compute budget),
+  * gradient-estimator variance around the full-token gradient,
+  * bias (should be ~0 for HT schemes; systematically non-zero for
+    deterministic truncation — the paper's Table 1 story).
+
+Run:  PYTHONPATH=src python examples/selector_ablation.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DetTruncSelector, FullSelector, RPCSelector, URSSelector,
+    nat_grpo_loss,
+)
+
+B, T, DRAWS = 16, 96, 400
+key = jax.random.PRNGKey(7)
+k1, k2, k3, km = jax.random.split(key, 4)
+theta = jax.random.normal(k1, (B, T)) * 0.1          # toy "parameters"
+old_logp = -jnp.abs(jax.random.normal(k2, (B, T)))
+adv = jax.random.normal(k3, (B,))
+rmask = (jnp.arange(T)[None] < 80).astype(jnp.float32)
+lengths = rmask.sum(-1)
+
+
+def loss_with(sel_weights, theta):
+    logp = old_logp + theta                           # d logp / d theta = 1
+    loss, _ = nat_grpo_loss(logp, old_logp, adv, sel_weights, lengths)
+    return loss
+
+
+g_full = jax.grad(loss_with, argnums=1)(rmask, theta)
+
+rows = []
+for name, sel in [
+    ("full", FullSelector()),
+    ("urs p=0.5", URSSelector(p=0.5)),
+    ("rpc C=8", RPCSelector(min_cut=8)),
+    ("det_trunc", DetTruncSelector(frac=0.5)),
+]:
+    grads, kept = [], []
+    for i in range(DRAWS):
+        s = sel(jax.random.fold_in(km, i), rmask)
+        grads.append(jax.grad(loss_with, argnums=1)(s.ht_weights, theta))
+        kept.append(s.mask.sum() / rmask.sum())
+    g = jnp.stack(grads)
+    bias = jnp.linalg.norm(jnp.mean(g, 0) - g_full) / jnp.linalg.norm(g_full)
+    var = jnp.mean(jnp.var(g, axis=0))
+    rows.append((name, float(jnp.mean(jnp.stack(kept))), float(bias), float(var)))
+
+print(f"{'selector':12s} {'kept%':>7s} {'rel-bias':>9s} {'grad-var':>9s}")
+for name, kept, bias, var in rows:
+    print(f"{name:12s} {kept * 100:6.1f}% {bias:9.4f} {var:9.2e}")
+print("\nHT schemes (urs/rpc) are unbiased at ~half the tokens;")
+print("deterministic truncation is cheaper but biased — matching Table 1.")

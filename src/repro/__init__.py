@@ -1,0 +1,16 @@
+"""repro: NAT (Not All Tokens are Needed) token-efficient RL framework in JAX.
+
+Layers:
+  repro.core        — NAT selectors + HT-weighted GRPO (the paper)
+  repro.models      — composable decoder model zoo (10 assigned archs)
+  repro.rl          — rollout engine, verifiable envs, NAT-GRPO trainer
+  repro.data        — synthetic prompt pipeline
+  repro.optim       — AdamW + schedules, sharded states
+  repro.dist        — logical-axis sharding rules (FSDP/TP/EP/SP)
+  repro.checkpoint  — fault-tolerant sharded checkpointing
+  repro.kernels     — Pallas TPU kernels (prefix-aware flash attn, fused HT loss)
+  repro.configs     — architecture configs
+  repro.launch      — mesh / dry-run / training entry points
+"""
+
+__version__ = "1.0.0"

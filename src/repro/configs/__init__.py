@@ -1,0 +1,55 @@
+"""Architecture config registry: the 10 assigned architectures plus the
+paper's own Qwen3-8B subject model.  ``get_config(arch_id)`` /
+``get_smoke(arch_id)`` resolve by the public arch id (``--arch`` flag)."""
+from repro.configs import (
+    deepseek_v2_236b,
+    gemma3_27b,
+    h2o_danube_3_4b,
+    llama_3_2_vision_90b,
+    mamba2_130m,
+    mistral_nemo_12b,
+    musicgen_large,
+    nat_qwen3_8b,
+    nemotron_4_340b,
+    qwen3_moe_235b_a22b,
+    recurrentgemma_9b,
+)
+from repro.configs.shapes import SHAPES, ShapeSpec, shapes_for
+
+_MODULES = [
+    llama_3_2_vision_90b,
+    nemotron_4_340b,
+    h2o_danube_3_4b,
+    mistral_nemo_12b,
+    gemma3_27b,
+    recurrentgemma_9b,
+    deepseek_v2_236b,
+    qwen3_moe_235b_a22b,
+    mamba2_130m,
+    musicgen_large,
+    nat_qwen3_8b,
+]
+
+REGISTRY = {m.ARCH_ID: m for m in _MODULES}
+ASSIGNED_ARCHS = [m.ARCH_ID for m in _MODULES[:10]]  # the 10-arch pool
+ALL_ARCHS = list(REGISTRY)
+
+
+def get_config(arch_id: str):
+    try:
+        return REGISTRY[arch_id].config()
+    except KeyError as e:
+        raise ValueError(f"unknown arch {arch_id!r}; known: {ALL_ARCHS}") from e
+
+
+def get_smoke(arch_id: str):
+    try:
+        return REGISTRY[arch_id].smoke()
+    except KeyError as e:
+        raise ValueError(f"unknown arch {arch_id!r}; known: {ALL_ARCHS}") from e
+
+
+__all__ = [
+    "SHAPES", "ShapeSpec", "shapes_for", "REGISTRY", "ASSIGNED_ARCHS",
+    "ALL_ARCHS", "get_config", "get_smoke",
+]

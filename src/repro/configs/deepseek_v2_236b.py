@@ -1,0 +1,47 @@
+"""deepseek-v2-236b [moe] — 60L d_model=5120 128H d_ff=1536(expert)
+vocab=102400.  MLA (kv_lora=512), 2 shared + 160 routed experts top-6;
+first layer dense (d_ff 12288).  [arXiv:2405.04434; hf]
+
+The MLA decode cache stores only (c_kv 512 + k_rope 64) per token — the
+paper's ~24x KV reduction — and decodes in the absorbed form."""
+from repro.models.config import MLAConfig, MoEConfig, ModelConfig
+
+ARCH_ID = "deepseek-v2-236b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        d_model=5120,
+        n_heads=128,
+        n_kv_heads=128,   # MLA: per-head K/V decompressed from the latent
+        head_dim=128,
+        d_ff=12288,       # the single dense layer's FFN
+        vocab_size=102400,
+        blocks=((("mla:dense",), 1), (("mla:moe",), 59)),
+        mlp_kind="swiglu",
+        rope_theta=10_000.0,
+        mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, qk_nope_dim=128,
+                      qk_rope_dim=64, v_head_dim=128),
+        moe=MoEConfig(num_experts=160, top_k=6, num_shared=2, d_ff_expert=1536,
+                      capacity_factor=1.25),
+        long_context_ok=False,  # MLA is latent but still full-span
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=192,
+        vocab_size=251,
+        blocks=((("mla:dense",), 1), (("mla:moe",), 2)),
+        mlp_kind="swiglu",
+        mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16,
+                      qk_rope_dim=8, v_head_dim=16),
+        moe=MoEConfig(num_experts=8, top_k=2, num_shared=1, d_ff_expert=48),
+        seq_parallel=False,
+    )

@@ -1,0 +1,49 @@
+"""gemma3-27b [dense] — 62L d_model=5376 32H (GQA kv=16) d_ff=21504
+vocab=262144.  5:1 local:global interleave, 128k context.
+[hf:google/gemma-3-1b-pt; unverified]
+
+62 layers = (local x5, global) x10 + (local x2).  Mostly-local, so it runs
+the long_500k decode shape: the 10 global layers carry full-length caches
+(sequence-sharded over the mesh); the 52 local layers use window-1024 rings.
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "gemma3-27b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        d_model=5376,
+        n_heads=32,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=21504,
+        vocab_size=262144,
+        blocks=(
+            (("local", "local", "local", "local", "local", "attn"), 10),
+            (("local", "local"), 1),
+        ),
+        window=1024,
+        mlp_kind="geglu",
+        rope_theta=1_000_000.0,
+        emb_scale_by_dim=True,
+        long_context_ok=True,  # mostly-local; global layers seq-shard their cache
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=192,
+        vocab_size=251,
+        blocks=((("local", "local", "attn"), 1), (("local", "local"), 1)),
+        window=8,
+        mlp_kind="geglu",
+        emb_scale_by_dim=True,
+        seq_parallel=False,
+    )

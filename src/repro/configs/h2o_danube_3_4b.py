@@ -1,0 +1,42 @@
+"""h2o-danube-3-4b [dense] — 24L d_model=3840 32H (GQA kv=8) d_ff=10240
+vocab=32000.  llama+mistral mix with sliding-window attention.
+[arXiv:2401.16818; unverified]
+
+All layers use SWA (window 4096), so the arch is sub-quadratic and runs the
+long_500k decode shape (ring-buffer KV caches of window size)."""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "h2o-danube-3-4b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        d_model=3840,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=120,
+        d_ff=10240,
+        vocab_size=32000,
+        blocks=((("local",), 24),),
+        window=4096,
+        mlp_kind="swiglu",
+        rope_theta=10_000.0,
+        long_context_ok=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=160,
+        vocab_size=251,
+        blocks=((("local",), 3),),
+        window=8,
+        mlp_kind="swiglu",
+        seq_parallel=False,
+    )

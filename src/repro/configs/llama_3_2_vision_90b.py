@@ -1,0 +1,44 @@
+"""llama-3.2-vision-90b [vlm] — 100L d_model=8192 64H (GQA kv=8)
+d_ff=28672 vocab=128256.  Cross-attn image layers every 5th layer
+(4 self + 1 cross) × 20.  [hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+
+The vision frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed patch embeddings (B, 1601, d_model); the cross-attention layers
+project them to K/V in-backbone.
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "llama-3.2-vision-90b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=28672,
+        vocab_size=128256,
+        blocks=((("attn", "attn", "attn", "attn", "xattn"), 20),),  # 100 layers
+        mlp_kind="swiglu",
+        rope_theta=500_000.0,
+        num_image_tokens=1601,
+        long_context_ok=False,  # full-span self-attention -> skip long_500k
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=251,
+        blocks=((("attn", "attn", "attn", "attn", "xattn"), 2),),
+        mlp_kind="swiglu",
+        num_image_tokens=7,
+        seq_parallel=False,
+    )

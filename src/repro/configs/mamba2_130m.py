@@ -1,0 +1,43 @@
+"""mamba2-130m [ssm] — 24L d_model=768 (attention-free) vocab=50280,
+ssm_state=128.  SSD (state-space duality).  [arXiv:2405.21060; unverified]
+
+Attention-free: NAT's RPC truncation composes with the linear-time scan
+(forward savings are linear in the cut ratio); decode carries an O(1)
+recurrent state, so long_500k is natural."""
+from repro.models.config import ModelConfig, SSMConfig
+
+ARCH_ID = "mamba2-130m"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        d_model=768,
+        n_heads=0,
+        n_kv_heads=0,
+        head_dim=0,
+        d_ff=0,
+        vocab_size=50280,
+        blocks=((("ssm",), 24),),
+        tie_embeddings=True,
+        ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, conv_width=4,
+                      chunk=128, n_groups=1),
+        long_context_ok=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        d_model=64,
+        n_heads=0,
+        n_kv_heads=0,
+        head_dim=0,
+        d_ff=0,
+        vocab_size=251,
+        blocks=((("ssm",), 3),),
+        tie_embeddings=True,
+        ssm=SSMConfig(state_dim=16, head_dim=16, expand=2, conv_width=4,
+                      chunk=16, n_groups=1),
+        seq_parallel=False,
+    )

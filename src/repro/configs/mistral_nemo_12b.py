@@ -1,0 +1,37 @@
+"""mistral-nemo-12b [dense] — 40L d_model=5120 32H (GQA kv=8) d_ff=14336
+vocab=131072.  128k context window, explicit head_dim=128.
+[hf:mistralai/Mistral-Nemo-Base-2407; hf]"""
+from repro.models.config import ModelConfig, dense_blocks
+
+ARCH_ID = "mistral-nemo-12b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        d_model=5120,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab_size=131072,
+        blocks=dense_blocks(40),
+        mlp_kind="swiglu",
+        rope_theta=1_000_000.0,
+        long_context_ok=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=192,
+        vocab_size=251,
+        blocks=dense_blocks(3),
+        mlp_kind="swiglu",
+        seq_parallel=False,
+    )

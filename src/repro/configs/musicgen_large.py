@@ -1,0 +1,45 @@
+"""musicgen-large [audio] — 48L d_model=2048 32H (kv=32, i.e. MHA) d_ff=8192
+vocab=2048 per codebook.  Decoder-only over EnCodec tokens, 4 codebooks with
+the delay pattern applied upstream.  [arXiv:2306.05284; hf]
+
+Backbone-only per the assignment: the EnCodec frontend is a stub — inputs
+are (B, T, 4) codebook-token frames; the model sums 4 codebook embeddings
+per frame and emits 4 output heads.  RPC cutoffs operate on FRAME positions,
+so all 4 codebooks of a frame share the mask (delay pattern stays coherent).
+"""
+from repro.models.config import ModelConfig, dense_blocks
+
+ARCH_ID = "musicgen-large"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=2048,
+        blocks=dense_blocks(48),
+        mlp_kind="geglu",
+        rope_theta=10_000.0,
+        num_codebooks=4,
+        long_context_ok=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=192,
+        vocab_size=31,
+        blocks=dense_blocks(3),
+        mlp_kind="geglu",
+        num_codebooks=4,
+        seq_parallel=False,
+    )

@@ -1,0 +1,38 @@
+"""nat-qwen3-8b — the paper's own subject model (Qwen3-8B): 36L d_model=4096
+32H (GQA kv=8) d_ff=12288 vocab=151936.  This is the config the NAT paper
+trains with GRPO/URS/RPC on DAPO-Math-17K; we use it for the paper-faithful
+reproduction runs and as the 11th dry-run architecture."""
+from repro.models.config import ModelConfig, dense_blocks
+
+ARCH_ID = "nat-qwen3-8b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=12288,
+        vocab_size=151936,
+        blocks=dense_blocks(36),
+        mlp_kind="swiglu",
+        rope_theta=1_000_000.0,
+        long_context_ok=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=192,
+        vocab_size=251,
+        blocks=dense_blocks(3),
+        mlp_kind="swiglu",
+        seq_parallel=False,
+    )

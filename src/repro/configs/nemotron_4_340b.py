@@ -1,0 +1,36 @@
+"""nemotron-4-340b [dense] — 96L d_model=18432 96H (GQA kv=8) d_ff=73728
+vocab=256000.  GQA + squared-ReLU MLP.  [arXiv:2402.16819; unverified]"""
+from repro.models.config import ModelConfig, dense_blocks
+
+ARCH_ID = "nemotron-4-340b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        d_model=18432,
+        n_heads=96,
+        n_kv_heads=8,
+        head_dim=192,
+        d_ff=73728,
+        vocab_size=256000,
+        blocks=dense_blocks(96),
+        mlp_kind="relu2",
+        rope_theta=10_000.0,
+        long_context_ok=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        d_model=96,
+        n_heads=6,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=384,
+        vocab_size=251,
+        blocks=dense_blocks(3),
+        mlp_kind="relu2",
+        seq_parallel=False,
+    )

@@ -1,0 +1,40 @@
+"""qwen3-moe-235b-a22b [moe] — 94L d_model=4096 64H (GQA kv=4) d_ff=1536
+(expert) vocab=151936.  128 experts, top-8, no shared experts.
+[hf:Qwen/Qwen3-30B-A3B; hf]"""
+from repro.models.config import MoEConfig, ModelConfig
+
+ARCH_ID = "qwen3-moe-235b-a22b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        d_model=4096,
+        n_heads=64,
+        n_kv_heads=4,
+        head_dim=128,
+        d_ff=12288,       # unused (every MLP is routed); kept for reference
+        vocab_size=151936,
+        blocks=((("attn:moe",), 94),),
+        mlp_kind="swiglu",
+        rope_theta=1_000_000.0,
+        moe=MoEConfig(num_experts=128, top_k=8, num_shared=0, d_ff_expert=1536,
+                      capacity_factor=1.25),
+        long_context_ok=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=192,
+        vocab_size=251,
+        blocks=((("attn:moe",), 3),),
+        mlp_kind="swiglu",
+        moe=MoEConfig(num_experts=8, top_k=2, num_shared=0, d_ff_expert=48),
+        seq_parallel=False,
+    )

@@ -1,0 +1,46 @@
+"""recurrentgemma-9b [hybrid] — 38L d_model=4096 16H (GQA kv=1, i.e. MQA)
+d_ff=12288 vocab=256000.  RG-LRU + local attention, 2:1 pattern.
+[arXiv:2402.19427; unverified]
+
+38 layers = (rec, rec, local) x12 + (rec, rec).  Attention layers are MQA
+with window 2048.  Hybrid/linear-time -> runs long_500k."""
+from repro.models.config import ModelConfig, RGLRUConfig
+
+ARCH_ID = "recurrentgemma-9b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        d_model=4096,
+        n_heads=16,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=12288,
+        vocab_size=256000,
+        blocks=((("rec", "rec", "local"), 12), (("rec", "rec"), 1)),
+        window=2048,
+        mlp_kind="geglu",
+        rope_theta=10_000.0,
+        emb_scale_by_dim=True,
+        rglru=RGLRUConfig(lru_width=4096, conv_width=4),
+        long_context_ok=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=1,
+        head_dim=16,
+        d_ff=192,
+        vocab_size=251,
+        blocks=((("rec", "rec", "local"), 1), (("rec", "rec"), 1)),
+        window=8,
+        mlp_kind="geglu",
+        emb_scale_by_dim=True,
+        rglru=RGLRUConfig(lru_width=64, conv_width=4),
+        seq_parallel=False,
+    )

@@ -1,0 +1,35 @@
+"""Assigned input shapes (same four for every LM-family architecture).
+
+``train_*`` lowers ``train_step`` (NAT-GRPO learner fwd+bwd+optimizer).
+``prefill_*`` lowers the prefill forward (builds the decode cache).
+``decode_*`` / ``long_*`` lower ``serve_step`` — ONE new token against a KV
+cache of the given sequence length.  ``long_500k`` runs only for archs whose
+``supports_long_context`` resolves True (sub-quadratic / mostly-local).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def shapes_for(cfg) -> list:
+    """The shape cells this architecture runs (long_500k gated)."""
+    out = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if cfg.supports_long_context:
+        out.append(SHAPES["long_500k"])
+    return out

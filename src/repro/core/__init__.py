@@ -1,0 +1,43 @@
+"""NAT core: token selectors, Horvitz-Thompson reweighting, GRPO objective,
+and physical prefix repacking — the paper's primary contribution."""
+from repro.core.grpo import (
+    GRPOConfig,
+    clipped_surrogate,
+    full_token_loss_reference,
+    group_advantages,
+    kl_k3,
+    nat_grpo_loss,
+    token_entropy_from_logits,
+    token_logprobs_from_logits,
+)
+from repro.core.repack import (
+    RepackPlan,
+    apply_plan,
+    bucket_ladder,
+    expected_token_savings,
+    pick_bucket,
+    plan_microbatches,
+    repack_batch,
+)
+from repro.core.selectors import (
+    DetTruncSelector,
+    EntropySelector,
+    FullSelector,
+    RPCSelector,
+    Selection,
+    URSSelector,
+    make_selector,
+    response_positions,
+    rpc_survival,
+)
+
+__all__ = [
+    "GRPOConfig", "clipped_surrogate", "full_token_loss_reference",
+    "group_advantages", "kl_k3", "nat_grpo_loss",
+    "token_entropy_from_logits", "token_logprobs_from_logits",
+    "RepackPlan", "apply_plan", "bucket_ladder", "expected_token_savings",
+    "pick_bucket", "plan_microbatches", "repack_batch",
+    "DetTruncSelector", "EntropySelector", "FullSelector", "RPCSelector",
+    "Selection", "URSSelector", "make_selector", "response_positions",
+    "rpc_survival",
+]

@@ -1,0 +1,156 @@
+"""GRPO objective with NAT token masking and Horvitz-Thompson reweighting.
+
+Implements paper Eqs. (1)-(6) and (9): group-relative advantages, PPO-style
+clipped surrogate, optional k3 KL regularizer against a reference policy,
+and the HT-weighted per-sequence-mean aggregation.
+
+The loss consumes *token logprobs* so it composes with either the reference
+jnp path (``token_logprobs_from_logits``) or the fused Pallas head
+(``repro.kernels.ht_loss``) that never materializes the (B, T, V) softmax.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GRPOConfig:
+    clip_eps: float = 0.2
+    kl_beta: float = 0.0          # DAPO-style default: KL disabled
+    adv_eps: float = 1e-4         # epsilon in Eq. (2)
+    clip_eps_high: Optional[float] = None  # DAPO clip-higher; None = symmetric
+
+
+def group_advantages(rewards: Array, eps: float = 1e-4) -> Array:
+    """Eq. (2): normalized group-relative advantages.
+
+    rewards: (num_prompts, G) rewards for G rollouts of each prompt.
+    Returns advantages of the same shape.  Uses the biased (1/G) std exactly
+    as written in the paper.
+    """
+    mu = jnp.mean(rewards, axis=-1, keepdims=True)
+    sigma = jnp.sqrt(jnp.mean((rewards - mu) ** 2, axis=-1, keepdims=True))
+    return (rewards - mu) / (sigma + eps)
+
+
+def token_logprobs_from_logits(logits: Array, tokens: Array) -> Array:
+    """log pi(o_t | ...) for the realized tokens.  logits: (..., T, V)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tok = jnp.take_along_axis(logits, tokens[..., None], axis=-1)[..., 0]
+    return tok - logz
+
+
+def token_entropy_from_logits(logits: Array) -> Array:
+    """Exact categorical entropy per position: H = logZ - E_p[logit]."""
+    logz = jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - logz)
+    return (logz[..., 0] - jnp.sum(p * logits, axis=-1))
+
+
+def clipped_surrogate(
+    logp: Array, old_logp: Array, adv: Array, clip_eps: float,
+    clip_eps_high: Optional[float] = None,
+) -> tuple[Array, Array]:
+    """Eq. (3): PPO clipped surrogate per token (to be MAXIMIZED).
+
+    Returns (surrogate, clip_fraction_indicator).
+    """
+    hi = clip_eps if clip_eps_high is None else clip_eps_high
+    ratio = jnp.exp(logp - old_logp)
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + hi)
+    s = jnp.minimum(ratio * adv, clipped * adv)
+    was_clipped = (ratio * adv > clipped * adv).astype(jnp.float32)
+    return s, was_clipped
+
+
+def kl_k3(logp: Array, ref_logp: Array) -> Array:
+    """k3 estimator of KL(pi_theta || pi_ref) from sampled-action logprobs:
+    exp(ref - theta) - (ref - theta) - 1  (non-negative, low variance)."""
+    d = ref_logp - logp
+    return jnp.exp(d) - d - 1.0
+
+
+def nat_grpo_loss(
+    logp: Array,
+    old_logp: Array,
+    advantages: Array,
+    ht_weights: Array,
+    orig_lengths: Array,
+    cfg: GRPOConfig = GRPOConfig(),
+    ref_logp: Optional[Array] = None,
+    entropies: Optional[Array] = None,
+) -> tuple[Array, dict]:
+    """The NAT objective (Eqs. 5, 6, 9) — returns (loss, metrics).
+
+    Args:
+      logp:        (B, T) current-policy logprobs of realized tokens.
+      old_logp:    (B, T) behaviour-policy logprobs (from rollout scoring).
+      advantages:  (B,) or (B, T) group-relative advantages (shared per row).
+      ht_weights:  (B, T) w = m/p from the selector (0 on excluded/prompt
+                   tokens).  Full-token GRPO is the special case w = m = 1.
+      orig_lengths:(B,) ORIGINAL response length T_i — the HT estimator
+                   divides by the full-sequence length even when only a
+                   prefix was physically processed (Eq. 9).
+      ref_logp:    optional (B, T) reference-policy logprobs for the KL term.
+      entropies:   optional (B, T) per-token entropies for metrics.
+
+    The loss is the negative of Eq. (5) with L_{i,t} replaced by the HT
+    estimate: mean_i [ (1/T_i) sum_t w_{i,t} (S_{i,t} - beta*KL_{i,t}) ].
+    """
+    if advantages.ndim == 1:
+        advantages = advantages[:, None]
+    s, was_clipped = clipped_surrogate(
+        logp, old_logp, advantages, cfg.clip_eps, cfg.clip_eps_high
+    )
+    per_token = s
+    metrics: dict = {}
+    if cfg.kl_beta > 0.0 and ref_logp is not None:
+        kl = kl_k3(logp, ref_logp)
+        per_token = per_token - cfg.kl_beta * kl
+        metrics["kl"] = _masked_mean(kl, ht_weights > 0)
+
+    inv_len = 1.0 / jnp.maximum(orig_lengths.astype(jnp.float32), 1.0)
+    per_seq = jnp.sum(ht_weights * per_token, axis=-1) * inv_len  # Eq. 6/9
+    j = jnp.mean(per_seq)
+    loss = -j
+
+    sel = ht_weights > 0
+    n_sel = jnp.maximum(jnp.sum(sel), 1.0)
+    metrics.update(
+        loss=loss,
+        surrogate=j,
+        clip_frac=jnp.sum(was_clipped * sel) / n_sel,
+        ratio_mean=_masked_mean(jnp.exp(logp - old_logp), sel),
+        selected_tokens=jnp.sum(sel),
+        selected_ratio=jnp.sum(sel)
+        / jnp.maximum(jnp.sum(orig_lengths.astype(jnp.float32)), 1.0),
+        ht_weight_max=jnp.max(ht_weights),
+    )
+    if entropies is not None:
+        metrics["entropy"] = _masked_mean(entropies, sel)
+    return loss, metrics
+
+
+def _masked_mean(x: Array, mask: Array) -> Array:
+    m = mask.astype(jnp.float32)
+    return jnp.sum(x * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def full_token_loss_reference(
+    logp: Array, old_logp: Array, advantages: Array, response_mask: Array,
+    cfg: GRPOConfig = GRPOConfig(), ref_logp: Optional[Array] = None,
+) -> Array:
+    """Vanilla full-token GRPO loss (Eq. 5) — the oracle the HT estimator
+    must match in expectation.  Used by unbiasedness tests/benchmarks."""
+    rm = response_mask.astype(jnp.float32)
+    lengths = rm.sum(axis=-1)
+    loss, _ = nat_grpo_loss(
+        logp, old_logp, advantages, rm, lengths, cfg, ref_logp
+    )
+    return loss

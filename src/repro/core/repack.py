@@ -1,0 +1,119 @@
+"""Physical prefix truncation + TPU length bucketing for RPC.
+
+RPC's system win comes from *actually shortening* the sequences the learner
+processes.  Because RPC masks are contiguous prefixes, truncation is a slice
+— no gather.  XLA/TPU needs static shapes, so instead of slicing each batch
+to its own max cut (a recompile per batch), we slice to the smallest bucket
+of a static ladder; one executable per bucket is compiled once and reused.
+
+The ladder defaults to {T/4, T/2, 3T/4, T} rounded up to multiples of 128
+(MXU/lane alignment).  Under the paper's uniform cutoff, E[L] ~ T/2 + C/2,
+so steady state mostly hits the T/2 and 3T/4 buckets.
+
+``plan_microbatches`` goes further (beyond-paper): it sorts rows by keep
+length and splits the batch into microbatches so short-cut rows do not pay
+for a long straggler's bucket — the learner-side analogue of the rollout
+length-scheduling systems the paper cites (RollPacker/SortedRL).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def bucket_ladder(max_len: int, num_buckets: int = 4, align: int = 128) -> tuple[int, ...]:
+    """Static ladder of padded lengths, each a multiple of ``align``."""
+    out = []
+    for i in range(1, num_buckets + 1):
+        l = math.ceil(max_len * i / num_buckets / align) * align
+        out.append(min(l, math.ceil(max_len / align) * align))
+    ladder = tuple(sorted(set(out)))
+    return ladder
+
+
+def pick_bucket(needed: int, ladder: Sequence[int]) -> int:
+    """Smallest ladder entry >= needed (host-side planning; static result)."""
+    for b in ladder:
+        if b >= needed:
+            return b
+    return ladder[-1]
+
+
+@dataclasses.dataclass(frozen=True)
+class RepackPlan:
+    """Host-side plan: which rows go to which bucket, in what order."""
+
+    bucket_len: int
+    row_order: np.ndarray  # permutation of row indices
+
+    @property
+    def num_rows(self) -> int:
+        return len(self.row_order)
+
+
+def repack_batch(batch: dict, keep_total: np.ndarray, ladder: Sequence[int]) -> dict:
+    """Slice every (B, T) leaf of ``batch`` to the bucket covering
+    max(keep_total).  ``keep_total`` = prompt_len + RPC keep_len per row
+    (total tokens that must stay in the physical buffer).
+
+    Returns a new dict with shorter T.  1-D / scalar leaves pass through.
+    """
+    t_new = pick_bucket(int(np.max(keep_total)), ladder)
+
+    def slc(x):
+        if hasattr(x, "ndim") and x.ndim >= 2 and x.shape[1] >= t_new:
+            return x[:, :t_new]
+        return x
+
+    return {k: slc(v) for k, v in batch.items()}
+
+
+def plan_microbatches(
+    keep_total: np.ndarray,
+    num_microbatches: int,
+    ladder: Sequence[int],
+) -> list[RepackPlan]:
+    """Sort rows by keep length (desc) and split into equal microbatches,
+    each padded only to its own bucket.  Deterministic given inputs.
+    """
+    order = np.argsort(-keep_total, kind="stable")
+    b = len(keep_total)
+    assert b % num_microbatches == 0, (b, num_microbatches)
+    per = b // num_microbatches
+    plans = []
+    for i in range(num_microbatches):
+        rows = order[i * per : (i + 1) * per]
+        need = int(keep_total[rows].max()) if len(rows) else ladder[0]
+        plans.append(RepackPlan(bucket_len=pick_bucket(need, ladder), row_order=rows))
+    return plans
+
+
+def apply_plan(batch: dict, plan: RepackPlan) -> dict:
+    """Gather the plan's rows and slice to its bucket length."""
+    rows = jnp.asarray(plan.row_order)
+
+    def take(x):
+        x = jnp.asarray(x)
+        if x.ndim == 0:
+            return x
+        x = x[rows]
+        if x.ndim >= 2 and x.shape[1] >= plan.bucket_len:
+            x = x[:, : plan.bucket_len]
+        return x
+
+    return {k: take(v) for k, v in batch.items()}
+
+
+def expected_token_savings(lengths: np.ndarray, min_cut: int) -> float:
+    """E[kept]/E[full] under uniform-cutoff RPC with minimum C — the paper's
+    Fig. 3 prediction 0.5 + C/(2 E[T])."""
+    t = np.asarray(lengths, dtype=np.float64)
+    c = np.minimum(min_cut, t)
+    return float(((c + t) / 2).sum() / np.maximum(t.sum(), 1.0))

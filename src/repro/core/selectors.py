@@ -1,0 +1,239 @@
+"""Token selectors: the NAT framework's sampling designs.
+
+A selector draws a binary inclusion mask ``m`` over *response* tokens and
+reports the per-token inclusion probability ``p`` so the learner can form the
+Horvitz-Thompson weight ``w = m / p`` (paper Eq. 6).  Everything is laid out
+on the padded ``(B, T)`` token grid; prompt and padding positions always have
+``m = 0`` and ``p = 1`` (they never enter the loss, so their weight is 0).
+
+Selectors are pure functions of a PRNG key and the batch geometry, so the
+same code path runs on host (data pipeline) and on device (inside jit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Selection:
+    """Result of a token-selection draw.
+
+    Attributes:
+      mask:       (B, T) float32 in {0, 1}; 1 = token participates in update.
+      inclusion:  (B, T) float32 in (0, 1]; Pr[m=1] under the design.
+      keep_len:   (B,)   int32; number of *response* tokens kept when the
+                  design is prefix-structured (RPC / Det-Trunc); for
+                  unstructured designs it is the count of selected tokens.
+      prefix_structured: static bool — True when ``mask`` is guaranteed to be
+                  a contiguous prefix of the response (enables repacking).
+    """
+
+    mask: Array
+    inclusion: Array
+    keep_len: Array
+    prefix_structured: bool = dataclasses.field(default=False)
+
+    @property
+    def ht_weights(self) -> Array:
+        """Horvitz-Thompson weights m/p (zero on excluded tokens)."""
+        return self.mask / self.inclusion
+
+    def tree_flatten(self):
+        return (self.mask, self.inclusion, self.keep_len), (self.prefix_structured,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, prefix_structured=aux[0])
+
+
+def response_positions(response_mask: Array) -> tuple[Array, Array]:
+    """Per-token index within the response and per-row response length.
+
+    ``response_mask`` is (B, T) with 1 on response (generated) tokens.
+    Returns (pos, length): ``pos[b, t]`` is the 0-based index of token t
+    within row b's response (undefined but finite on non-response tokens),
+    and ``length[b]`` is the number of response tokens.
+    """
+    rm = response_mask.astype(jnp.int32)
+    pos = jnp.cumsum(rm, axis=-1) - 1  # 0-based; -1 before response starts
+    length = rm.sum(axis=-1)
+    return pos, length
+
+
+@dataclasses.dataclass(frozen=True)
+class FullSelector:
+    """Vanilla GRPO: every response token participates (m=1, p=1)."""
+
+    name: str = "full"
+
+    def __call__(self, key: Optional[Array], response_mask: Array) -> Selection:
+        rm = response_mask.astype(jnp.float32)
+        _, length = response_positions(response_mask)
+        return Selection(
+            mask=rm,
+            inclusion=jnp.ones_like(rm),
+            keep_len=length,
+            prefix_structured=True,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class URSSelector:
+    """Uniform Random Sampling: i.i.d. Bernoulli(p) token masks (paper §3.1).
+
+    Unbiased under HT reweighting; saves backward FLOPs only.
+    """
+
+    p: float = 0.5
+    name: str = "urs"
+
+    def __call__(self, key: Array, response_mask: Array) -> Selection:
+        rm = response_mask.astype(jnp.float32)
+        bern = jax.random.bernoulli(key, self.p, shape=response_mask.shape)
+        mask = bern.astype(jnp.float32) * rm
+        inclusion = jnp.where(rm > 0, jnp.float32(self.p), jnp.float32(1.0))
+        return Selection(
+            mask=mask,
+            inclusion=inclusion,
+            keep_len=mask.sum(axis=-1).astype(jnp.int32),
+            prefix_structured=False,
+        )
+
+
+def rpc_survival(pos: Array, length: Array, min_cut: int) -> Array:
+    """Survival function p_{i,t} = Pr(L_i >= t) for uniform cutoff on
+    {C..T_i} (paper §4, Minimum-cutoff RPC).  ``pos`` is 0-based so token
+    index t (1-based) = pos + 1:
+
+        p = 1                       for t <= C
+        p = (T - t + 1)/(T - C + 1) for t  > C
+    """
+    t = pos + 1  # 1-based token index within the response
+    length = length[:, None].astype(jnp.float32)
+    c = jnp.minimum(jnp.float32(min_cut), length)  # C cannot exceed T_i
+    tf = t.astype(jnp.float32)
+    tail = (length - tf + 1.0) / jnp.maximum(length - c + 1.0, 1.0)
+    p = jnp.where(tf <= c, 1.0, tail)
+    return jnp.clip(p, 1e-9, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class RPCSelector:
+    """Random Prefix Cutting with a minimum retained prefix (paper §4).
+
+    Samples L_i ~ Uniform({min(C,T_i) .. T_i}) per row and keeps tokens with
+    index <= L_i.  Inclusion probabilities follow the survival function; the
+    mask is a contiguous prefix, enabling *physical* truncation of the
+    forward pass (see repack.py).
+    """
+
+    min_cut: int = 100
+    name: str = "rpc"
+
+    def __call__(self, key: Array, response_mask: Array) -> Selection:
+        pos, length = response_positions(response_mask)
+        b = length.shape[0]
+        c = jnp.minimum(jnp.int32(self.min_cut), length)
+        # L ~ Uniform({C..T}); randint high is exclusive.
+        u = jax.random.uniform(key, (b,))
+        span = (length - c + 1).astype(jnp.float32)
+        cut = c + jnp.floor(u * span).astype(jnp.int32)
+        cut = jnp.clip(cut, c, length)
+        rm = response_mask.astype(jnp.float32)
+        mask = (pos < cut[:, None]).astype(jnp.float32) * rm
+        inclusion = jnp.where(rm > 0, rpc_survival(pos, length, self.min_cut), 1.0)
+        return Selection(
+            mask=mask, inclusion=inclusion, keep_len=cut, prefix_structured=True
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class DetTruncSelector:
+    """Deterministic prefix truncation (the paper's *biased* baseline).
+
+    Keeps the first floor(frac * T_i) tokens with weight 1.  Violates the HT
+    requirement p>0 on the suffix — implemented exactly as the paper's
+    baseline for the bias ablations, NOT as an HT design.
+    """
+
+    frac: float = 0.5
+    name: str = "det_trunc"
+
+    def __call__(self, key: Optional[Array], response_mask: Array) -> Selection:
+        pos, length = response_positions(response_mask)
+        cut = jnp.maximum(
+            jnp.floor(length.astype(jnp.float32) * self.frac).astype(jnp.int32), 1
+        )
+        cut = jnp.minimum(cut, length)
+        rm = response_mask.astype(jnp.float32)
+        mask = (pos < cut[:, None]).astype(jnp.float32) * rm
+        # p=1 on the kept prefix: this is what makes the estimator biased.
+        return Selection(
+            mask=mask,
+            inclusion=jnp.ones_like(rm),
+            keep_len=cut,
+            prefix_structured=True,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class EntropySelector:
+    """Information-aware selector (paper §7 future work, implemented here).
+
+    Sets p_{i,t} = clip(p_floor + (1 - p_floor) * h_t / max_h, p_floor, 1)
+    from per-token predictive entropies h_t of the behaviour policy, so
+    compute concentrates on high-entropy "decision" tokens (Wang et al. 2025)
+    while the HT weights keep the estimator unbiased.
+    """
+
+    p_floor: float = 0.2
+    budget: float = 0.5  # target expected fraction of tokens kept
+    name: str = "entropy"
+
+    def __call__(self, key: Array, response_mask: Array, entropies: Array) -> Selection:
+        rm = response_mask.astype(jnp.float32)
+        h = jnp.where(rm > 0, entropies, 0.0)
+        denom = jnp.sum(h, axis=-1, keepdims=True)
+        n_resp = jnp.maximum(jnp.sum(rm, axis=-1, keepdims=True), 1.0)
+        # Scale so that mean p over the response ~= budget, then floor/clip.
+        raw = jnp.where(denom > 0, h / jnp.maximum(denom, 1e-9) * n_resp * self.budget,
+                        self.budget)
+        p = jnp.clip(raw, self.p_floor, 1.0)
+        p = jnp.where(rm > 0, p, 1.0)
+        bern = jax.random.uniform(key, response_mask.shape) < p
+        mask = bern.astype(jnp.float32) * rm
+        return Selection(
+            mask=mask,
+            inclusion=p,
+            keep_len=mask.sum(axis=-1).astype(jnp.int32),
+            prefix_structured=False,
+        )
+
+
+_REGISTRY = {
+    "full": FullSelector,
+    "grpo": FullSelector,
+    "urs": URSSelector,
+    "rpc": RPCSelector,
+    "det_trunc": DetTruncSelector,
+    "entropy": EntropySelector,
+}
+
+
+def make_selector(name: str, **kwargs):
+    """Factory: ``make_selector('rpc', min_cut=100)``."""
+    try:
+        cls = _REGISTRY[name]
+    except KeyError as e:
+        raise ValueError(
+            f"unknown selector {name!r}; available: {sorted(_REGISTRY)}"
+        ) from e
+    return cls(**kwargs)

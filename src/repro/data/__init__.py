@@ -1,0 +1,4 @@
+"""Synthetic prompt data pipeline (deterministic, host-sharded, prefetched)."""
+from repro.data.pipeline import Prefetcher, PromptBatch, PromptPipeline
+
+__all__ = ["Prefetcher", "PromptBatch", "PromptPipeline"]

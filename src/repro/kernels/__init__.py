@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the learner's two compute hot spots:
+
+* ``prefix_attn`` — prefix-aware causal flash attention (RPC's forward
+  truncation realized at block level),
+* ``ht_loss`` — fused vocab-tiled HT-GRPO logprob head (never materializes
+  the (N, V) softmax).
+
+Both ship kernel.py (pallas_call + BlockSpec), ops.py (jit + custom_vjp) and
+ref.py (pure-jnp oracle); validated on CPU in interpret mode, targeted at
+TPU v5e VMEM/MXU tile sizes.
+"""
+from repro.kernels import ht_loss, prefix_attn
+
+__all__ = ["ht_loss", "prefix_attn"]

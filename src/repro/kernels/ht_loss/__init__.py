@@ -1,0 +1,5 @@
+from repro.kernels.ht_loss.ops import fused_score_grid, fused_token_logprobs
+from repro.kernels.ht_loss.ref import ht_grpo_loss_ref, logprob_ref
+
+__all__ = ["fused_score_grid", "fused_token_logprobs", "ht_grpo_loss_ref",
+           "logprob_ref"]

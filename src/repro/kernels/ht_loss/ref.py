@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the fused HT-GRPO loss head.
+
+Materializes the full (N, V) logits/softmax — the memory hot spot the Pallas
+kernel exists to avoid — and is the ground truth for all kernel tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def logprob_ref(hidden, w, tokens):
+    """hidden: (N, D), w: (D, V), tokens: (N,) ->
+    (logp (N,), logz (N,), entropy (N,)) in f32."""
+    logits = jnp.einsum("nd,dv->nv", hidden, w, preferred_element_type=F32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, tokens[:, None], axis=-1)[:, 0]
+    p = jax.nn.softmax(logits, axis=-1)
+    ent = logz - jnp.sum(p * logits, axis=-1)
+    return tgt - logz, logz, ent
+
+
+def ht_grpo_loss_ref(hidden, w, tokens, old_logp, adv, ht_w, inv_len,
+                     clip_eps: float = 0.2):
+    """Full fused objective: chunk-free reference of what kernel+glue compute.
+
+    hidden: (N, D); tokens/old_logp/ht_w/adv/inv_len: (N,).
+    Returns scalar loss = -(1/N_seq-ish) handled by caller weights: here we
+    return  -sum_n ht_w[n] * inv_len[n] * S_n  with S the clipped surrogate.
+    """
+    logp, _, _ = logprob_ref(hidden, w, tokens)
+    ratio = jnp.exp(logp - old_logp)
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)
+    s = jnp.minimum(ratio * adv, clipped * adv)
+    return -jnp.sum(ht_w * inv_len * s)

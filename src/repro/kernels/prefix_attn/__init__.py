@@ -1,0 +1,4 @@
+from repro.kernels.prefix_attn.ops import attention_bthd, prefix_flash_attention
+from repro.kernels.prefix_attn.ref import attention_ref
+
+__all__ = ["attention_bthd", "prefix_flash_attention", "attention_ref"]

@@ -1,0 +1,264 @@
+"""Pallas TPU kernels: prefix-aware causal flash attention.
+
+This is the TPU realization of RPC's forward saving (DESIGN.md §3): each
+sequence carries a cut length L_b; query/key blocks past the cut frontier
+are SKIPPED with ``pl.when`` — compute drops from O(T^2) to O(L_b^2) per
+sequence while shapes stay static (the repack bucket ladder handles the
+batch-level savings; this kernel handles the per-sequence remainder).
+
+Layout: q (B, H, T, D), k/v (B, KV, T, D); GQA is handled in the BlockSpec
+index map (query head h reads kv head h // (H // KV) — no kv repeat in HBM).
+
+Three kernels (flash-standard decomposition):
+  fwd     — grid (B, H, Tq/bq, Tk/bk), online softmax, saves (O, LSE)
+  bwd dq  — same grid, accumulates dq over k blocks
+  bwd dkv — grid (B, H, Tk/bk, Tq/bq) (k outer), accumulates dk/dv over
+            q blocks
+cut_lens rides in as a scalar-prefetch operand.  All accumulation f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _block_mask(q0, k0, bq, bk, cut, window):
+    """(bq, bk) validity mask for global query offset q0, key offset k0."""
+    qi = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kj = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    m = (kj <= qi) & (kj < cut) & (qi < cut)
+    if window > 0:
+        m &= (qi - kj) < window
+    return m
+
+
+def _needed(qi, ki, bq, bk, cut, window):
+    """Whether key block ki contributes to query block qi (block-level skip)."""
+    q0, k0 = qi * bq, ki * bk
+    need = (k0 <= q0 + bq - 1) & (k0 < cut) & (q0 < cut)
+    if window > 0:
+        need &= (k0 + bk - 1) > (q0 - window)
+    return need
+
+
+# -------------------------------------------------------------------- fwd
+def _fwd_kernel(cut_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_sc, l_sc, acc_sc, *, bq, bk, nk, window, scale):
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    cut = cut_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    @pl.when(_needed(qi, ki, bq, bk, cut, window))
+    def _compute():
+        q = q_ref[0, 0].astype(F32)                     # (bq, D)
+        k = k_ref[0, 0].astype(F32)                     # (bk, D)
+        v = v_ref[0, 0].astype(F32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                precision=jax.lax.Precision.HIGHEST) * scale
+        mask = _block_mask(qi * bq, ki * bk, bq, bk, cut, window)
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=-1)
+        acc_sc[...] = acc_sc[...] * corr[:, None] + jax.lax.dot(
+            p, v, precision=jax.lax.Precision.HIGHEST)
+        m_sc[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        l = l_sc[...]
+        ok = l > 0
+        lsafe = jnp.where(ok, l, 1.0)
+        o_ref[0, 0] = jnp.where(ok[:, None], acc_sc[...] / lsafe[:, None],
+                                0.0).astype(o_ref.dtype)
+        lse_ref[0, 0] = jnp.where(ok, m_sc[...] + jnp.log(lsafe), 0.0)
+
+
+def fwd_pallas(q, k, v, cut_lens, *, window: int = 0, bq: int = 128,
+               bk: int = 128, interpret: bool = True):
+    b, h, t, d = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    nq, nk = t // bq, t // bk
+    scale = 1.0 / (d ** 0.5)
+    kern = functools.partial(_fwd_kernel, bq=bq, bk=bk, nk=nk, window=window,
+                             scale=scale)
+    grid = (b, h, nq, nk)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki, cut: (b_, h_, qi, 0)),
+                pl.BlockSpec((1, 1, bk, d), lambda b_, h_, qi, ki, cut: (b_, h_ // g, ki, 0)),
+                pl.BlockSpec((1, 1, bk, d), lambda b_, h_, qi, ki, cut: (b_, h_ // g, ki, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki, cut: (b_, h_, qi, 0)),
+                pl.BlockSpec((1, 1, bq), lambda b_, h_, qi, ki, cut: (b_, h_, qi)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((bq,), F32),
+                pltpu.VMEM((bq,), F32),
+                pltpu.VMEM((bq, d), F32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, t), F32),
+        ],
+        interpret=interpret,
+    )(cut_lens, q, k, v)
+    return out
+
+
+# ----------------------------------------------------------------- bwd: dq
+def _bwd_dq_kernel(cut_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                   dq_ref, acc_sc, *, bq, bk, nk, window, scale):
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    cut = cut_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    @pl.when(_needed(qi, ki, bq, bk, cut, window))
+    def _compute():
+        q = q_ref[0, 0].astype(F32)
+        k = k_ref[0, 0].astype(F32)
+        v = v_ref[0, 0].astype(F32)
+        do = do_ref[0, 0].astype(F32)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                precision=jax.lax.Precision.HIGHEST) * scale
+        mask = _block_mask(qi * bq, ki * bk, bq, bk, cut, window)
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 precision=jax.lax.Precision.HIGHEST)
+        ds = p * (dp - delta[:, None]) * scale
+        acc_sc[...] += jax.lax.dot(ds, k, precision=jax.lax.Precision.HIGHEST)
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        dq_ref[0, 0] = acc_sc[...].astype(dq_ref.dtype)
+
+
+# ---------------------------------------------------------------- bwd: dkv
+def _bwd_dkv_kernel(cut_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, dk_sc, dv_sc, *, bq, bk, nq, window, scale):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    qi = pl.program_id(3)
+    cut = cut_ref[b]
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_sc[...] = jnp.zeros_like(dk_sc)
+        dv_sc[...] = jnp.zeros_like(dv_sc)
+
+    @pl.when(_needed(qi, ki, bq, bk, cut, window))
+    def _compute():
+        q = q_ref[0, 0].astype(F32)
+        k = k_ref[0, 0].astype(F32)
+        v = v_ref[0, 0].astype(F32)
+        do = do_ref[0, 0].astype(F32)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                precision=jax.lax.Precision.HIGHEST) * scale
+        mask = _block_mask(qi * bq, ki * bk, bq, bk, cut, window)
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)          # (bq, bk)
+        dv_sc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                          precision=jax.lax.Precision.HIGHEST)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 precision=jax.lax.Precision.HIGHEST)
+        ds = p * (dp - delta[:, None]) * scale                       # (bq, bk)
+        dk_sc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                          precision=jax.lax.Precision.HIGHEST)
+
+    @pl.when(qi == nq - 1)
+    def _fin():
+        dk_ref[0, 0] = dk_sc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_sc[...].astype(dv_ref.dtype)
+
+
+def bwd_pallas(q, k, v, o, lse, do, cut_lens, *, window: int = 0,
+               bq: int = 128, bk: int = 128, interpret: bool = True):
+    """Returns (dq (B,H,T,D), dk (B,H,T,D), dv (B,H,T,D)) — dk/dv are
+    PER-QUERY-HEAD here; ops.py reduces them over GQA groups."""
+    b, h, t, d = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    nq, nk = t // bq, t // bk
+    scale = 1.0 / (d ** 0.5)
+    delta = jnp.sum(do.astype(F32) * o.astype(F32), axis=-1)  # (B,H,T)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, bq=bq, bk=bk, nk=nk, window=window,
+                          scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, h, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki, c: (b_, h_, qi, 0)),
+                pl.BlockSpec((1, 1, bk, d), lambda b_, h_, qi, ki, c: (b_, h_ // g, ki, 0)),
+                pl.BlockSpec((1, 1, bk, d), lambda b_, h_, qi, ki, c: (b_, h_ // g, ki, 0)),
+                pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki, c: (b_, h_, qi, 0)),
+                pl.BlockSpec((1, 1, bq), lambda b_, h_, qi, ki, c: (b_, h_, qi)),
+                pl.BlockSpec((1, 1, bq), lambda b_, h_, qi, ki, c: (b_, h_, qi)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki, c: (b_, h_, qi, 0)),
+            scratch_shapes=[pltpu.VMEM((bq, d), F32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, d), q.dtype),
+        interpret=interpret,
+    )(cut_lens, q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, bq=bq, bk=bk, nq=nq, window=window,
+                          scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, h, nk, nq),
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, d), lambda b_, h_, ki, qi, c: (b_, h_, qi, 0)),
+                pl.BlockSpec((1, 1, bk, d), lambda b_, h_, ki, qi, c: (b_, h_ // g, ki, 0)),
+                pl.BlockSpec((1, 1, bk, d), lambda b_, h_, ki, qi, c: (b_, h_ // g, ki, 0)),
+                pl.BlockSpec((1, 1, bq, d), lambda b_, h_, ki, qi, c: (b_, h_, qi, 0)),
+                pl.BlockSpec((1, 1, bq), lambda b_, h_, ki, qi, c: (b_, h_, qi)),
+                pl.BlockSpec((1, 1, bq), lambda b_, h_, ki, qi, c: (b_, h_, qi)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, bk, d), lambda b_, h_, ki, qi, c: (b_, h_, ki, 0)),
+                pl.BlockSpec((1, 1, bk, d), lambda b_, h_, ki, qi, c: (b_, h_, ki, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((bk, d), F32), pltpu.VMEM((bk, d), F32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, t, d), q.dtype),
+        ],
+        interpret=interpret,
+    )(cut_lens, q, k, v, do, lse, delta)
+    return dq, dk, dv

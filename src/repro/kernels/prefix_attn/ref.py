@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for prefix-aware causal (windowed) attention.
+
+Semantics shared with the kernel:
+  * causal: query i attends keys j <= i,
+  * window w > 0: additionally j > i - w,
+  * cut_lens (B,): positions t >= cut_lens[b] are INVALID — both as queries
+    and keys (RPC physical truncation).  Outputs at invalid query rows are 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def attention_ref(q, k, v, cut_lens, *, window: int = 0):
+    """q: (B, H, T, D); k/v: (B, KV, T, D) with H % KV == 0; cut_lens (B,).
+
+    Returns (out (B, H, T, D), logsumexp (B, H, T))."""
+    b, h, t, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    scale = 1.0 / jnp.sqrt(d)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(F32), k.astype(F32)) * scale
+    qi = jnp.arange(t)[:, None]
+    kj = jnp.arange(t)[None, :]
+    mask = kj <= qi
+    if window > 0:
+        mask &= (qi - kj) < window
+    mask = mask[None, None]
+    valid_k = (kj[None, None] < cut_lens[:, None, None, None])
+    valid_q = (qi[None, None] < cut_lens[:, None, None, None])
+    mask = mask & valid_k & valid_q
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(F32))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    row_ok = l > 0
+    o = jnp.where(row_ok[..., None], o, 0.0)
+    lse = jnp.where(row_ok, m_safe + jnp.log(jnp.maximum(l, 1e-30)), 0.0)
+    return o.astype(q.dtype), lse

@@ -1,0 +1,199 @@
+"""Builders for the three lowered entry points (train / prefill / decode):
+abstract inputs (ShapeDtypeStruct — never allocated) + NamedShardings from
+the logical-axis rules.  Shared by the dry-run and the real launcher so the
+thing we validate is the thing we'd run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.core.grpo import GRPOConfig
+from repro.dist.sharding import (
+    DEFAULT_RULES,
+    ShardingRules,
+    logical_to_sharding,
+    tree_shardings,
+)
+from repro.models.config import ModelConfig
+from repro.models.model import cache_axes, cache_decl, model_decl, prefill
+from repro.models.params import abstract_params, param_specs
+from repro.optim.adamw import AdamWConfig, init_opt_state, opt_state_shardings
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+
+    fn: callable              # the step function to jit
+    args: tuple               # abstract args
+    in_shardings: tuple
+    out_shardings: object     # tree or None
+    donate: tuple = ()
+
+
+def _sh(mesh, rules, shape, axes):
+    return logical_to_sharding(shape, axes, mesh, rules)
+
+
+def params_and_shardings(cfg: ModelConfig, mesh, rules: ShardingRules):
+    decl = model_decl(cfg)
+    abs_p = abstract_params(decl)
+    shard_p = tree_shardings(abs_p, param_specs(decl), mesh, rules)
+    return abs_p, shard_p
+
+
+# ------------------------------------------------------------------- train
+def train_inputs(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                 rules: ShardingRules = DEFAULT_RULES):
+    """Abstract NAT-GRPO learner batch for the (global_batch, seq) grid."""
+    b, t = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": SDS((b, t, cfg.num_codebooks) if cfg.num_codebooks else (b, t),
+                      jnp.int32),
+        "response_mask": SDS((b, t), jnp.float32),
+        "old_logp": SDS((b, t), jnp.float32),
+        "advantages": SDS((b,), jnp.float32),
+        "ht_weights": SDS((b, t), jnp.float32),
+        "orig_lengths": SDS((b,), jnp.float32),
+        "lengths": SDS((b,), jnp.int32),
+    }
+    axes = {
+        "tokens": ("batch", None, None) if cfg.num_codebooks else ("batch", None),
+        "response_mask": ("batch", None),
+        "old_logp": ("batch", None),
+        "advantages": ("batch",),
+        "ht_weights": ("batch", None),
+        "orig_lengths": ("batch",),
+        "lengths": ("batch",),
+    }
+    if cfg.num_image_tokens:
+        batch["image_embeds"] = SDS(
+            (b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+        axes["image_embeds"] = ("batch", "image_tokens", None)
+    shards = {k: _sh(mesh, rules, batch[k].shape, axes[k]) for k in batch}
+    return batch, shards
+
+
+def make_train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                    rules: ShardingRules = DEFAULT_RULES,
+                    opt_cfg: Optional[AdamWConfig] = None,
+                    grpo_cfg: GRPOConfig = GRPOConfig(),
+                    num_microbatches: int = 1,
+                    unroll_microbatches: bool = False,
+                    vocab_chunks: int = 8,
+                    constrain_grads: bool = True) -> CellSpec:
+    from repro.rl.learner import make_train_step
+
+    opt_cfg = opt_cfg or AdamWConfig(moment_dtype="int8")
+    abs_p, shard_p = params_and_shardings(cfg, mesh, rules)
+    abs_opt = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), abs_p)
+    decl = model_decl(cfg)
+    shard_opt = opt_state_shardings(abs_opt, param_specs(decl), mesh, rules)
+    batch, shard_b = train_inputs(cfg, shape, mesh, rules)
+
+    step = make_train_step(cfg, grpo_cfg, opt_cfg,
+                           num_microbatches=num_microbatches,
+                           mesh=mesh, rules=rules, vocab_chunks=vocab_chunks,
+                           unroll_microbatches=unroll_microbatches,
+                           param_shardings=shard_p if constrain_grads else None)
+    metrics_shard = None  # replicated scalars
+    return CellSpec(
+        fn=step,
+        args=(abs_p, abs_opt, batch),
+        in_shardings=(shard_p, shard_opt, shard_b),
+        out_shardings=(shard_p, shard_opt, metrics_shard),
+        donate=(0, 1),
+    )
+
+
+# ----------------------------------------------------------------- prefill
+def make_prefill_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                      rules: ShardingRules = DEFAULT_RULES) -> CellSpec:
+    b, t = shape.global_batch, shape.seq_len
+    abs_p, shard_p = params_and_shardings(cfg, mesh, rules)
+    tokens = SDS((b, t, cfg.num_codebooks) if cfg.num_codebooks else (b, t),
+                 jnp.int32)
+    plens = SDS((b,), jnp.int32)
+    tok_sh = _sh(mesh, rules, tokens.shape,
+                 ("batch", None, None) if cfg.num_codebooks else ("batch", None))
+    plen_sh = _sh(mesh, rules, plens.shape, ("batch",))
+    extra_args, extra_shard = (), ()
+    if cfg.num_image_tokens:
+        img = SDS((b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+        extra_args = (img,)
+        extra_shard = (_sh(mesh, rules, img.shape, ("batch", "image_tokens", None)),)
+
+    cache_sh = tree_shardings(cache_decl(cfg, b, t), cache_axes(cfg), mesh, rules)
+
+    def fn(params, tokens, plens, *img):
+        return prefill(params, cfg, tokens, cache_len=t, prefill_len=plens,
+                       image_embeds=img[0] if img else None, mesh=mesh,
+                       rules=rules)
+
+    logits_sh = None
+    return CellSpec(
+        fn=fn,
+        args=(abs_p, tokens, plens) + extra_args,
+        in_shardings=(shard_p, tok_sh, plen_sh) + extra_shard,
+        out_shardings=(logits_sh, cache_sh),
+    )
+
+
+# ------------------------------------------------------------------ decode
+def make_decode_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                     rules: ShardingRules = DEFAULT_RULES) -> CellSpec:
+    from repro.models.model import decode_step
+
+    b, t = shape.global_batch, shape.seq_len
+    abs_p, shard_p = params_and_shardings(cfg, mesh, rules)
+    abs_cache = cache_decl(cfg, b, t)
+    shard_cache = tree_shardings(abs_cache, cache_axes(cfg), mesh, rules)
+    tokens = SDS((b, cfg.num_codebooks) if cfg.num_codebooks else (b,), jnp.int32)
+    pos = SDS((b,), jnp.int32)
+    tok_sh = _sh(mesh, rules, tokens.shape,
+                 ("batch", None) if cfg.num_codebooks else ("batch",))
+    pos_sh = _sh(mesh, rules, pos.shape, ("batch",))
+
+    def fn(params, tokens, cache, pos):
+        return decode_step(params, cfg, tokens, cache, pos)
+
+    return CellSpec(
+        fn=fn,
+        args=(abs_p, tokens, abs_cache, pos),
+        in_shardings=(shard_p, tok_sh, shard_cache, pos_sh),
+        out_shardings=(None, shard_cache),
+        donate=(2,),
+    )
+
+
+def make_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+              rules: ShardingRules = DEFAULT_RULES, **kw) -> CellSpec:
+    if shape.kind == "train":
+        return make_train_cell(cfg, shape, mesh, rules, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_cell(cfg, shape, mesh, rules)
+    if shape.kind == "decode":
+        return make_decode_cell(cfg, shape, mesh, rules)
+    raise ValueError(shape.kind)
+
+
+def rules_for(shape: ShapeSpec, rules: ShardingRules = DEFAULT_RULES,
+              profile: str = "default") -> ShardingRules:
+    """Shape-dependent rule overrides: long-context decode (batch=1) shards
+    the KV-cache sequence over BOTH mesh axes.  ``profile`` selects a named
+    base rule-set (e.g. "small_model" replicates weights, full DP)."""
+    from repro.dist.sharding import RULE_PROFILES
+
+    if profile != "default":
+        rules = RULE_PROFILES[profile]
+    if shape.kind == "decode" and shape.global_batch == 1:
+        return rules.override(kv_seq=("data", "model"))
+    return rules

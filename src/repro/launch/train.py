@@ -1,0 +1,133 @@
+"""Real training entry point (the launcher a cluster job would run).
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch nat-qwen3-8b --preset smoke --selector rpc --steps 50 \
+        --ckpt-dir /tmp/nat_ckpt --ckpt-every 10
+
+On this CPU container the ``smoke`` preset (reduced config) actually trains;
+the ``full`` preset builds the exact assigned architecture and is what a TPU
+job would launch (same code path the dry-run compiles).  Fault tolerance:
+periodic async checkpoints (params, optimizer, data cursor, PRNG, step),
+SIGTERM triggers a final save, and restart auto-resumes from the latest
+checkpoint — onto whatever mesh the restarted job has (elastic restore).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import signal
+import sys
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, get_smoke
+from repro.core.grpo import GRPOConfig
+from repro.optim import AdamWConfig
+from repro.rl import NATGRPOTrainer, NATTrainerConfig, RolloutConfig, VOCAB_SIZE
+from repro.rl.env import VOCAB_SIZE as ENV_VOCAB
+
+
+def build_model_cfg(arch: str, preset: str):
+    cfg = get_smoke(arch) if preset == "smoke" else get_config(arch)
+    if preset == "smoke":
+        # the RL env has its own tiny vocabulary
+        cfg = dataclasses.replace(cfg, vocab_size=max(ENV_VOCAB, 32))
+    return cfg
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="nat-qwen3-8b")
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--selector", default="rpc",
+                    choices=["full", "grpo", "urs", "rpc", "det_trunc", "entropy"])
+    ap.add_argument("--min-cut", type=int, default=8)
+    ap.add_argument("--urs-p", type=float, default=0.5)
+    ap.add_argument("--env", default="mod_arith", choices=["mod_arith", "copy_calc"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--prompts-per-step", type=int, default=8)
+    ap.add_argument("--group-size", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--overprovision", type=float, default=1.25)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--eval-prompts", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    model_cfg = build_model_cfg(args.arch, args.preset)
+    sel_kwargs = ()
+    if args.selector == "rpc":
+        sel_kwargs = (("min_cut", args.min_cut),)
+    elif args.selector == "urs":
+        sel_kwargs = (("p", args.urs_p),)
+    tcfg = NATTrainerConfig(
+        env=args.env,
+        selector=args.selector,
+        selector_kwargs=sel_kwargs,
+        prompts_per_step=args.prompts_per_step,
+        rollout=RolloutConfig(max_new_tokens=args.max_new,
+                              group_size=args.group_size,
+                              overprovision=args.overprovision),
+        adamw=AdamWConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps),
+        seed=args.seed,
+    )
+    trainer = NATGRPOTrainer(model_cfg, tcfg)
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if ckpt is not None and ckpt.latest_step() is not None:
+        step = ckpt.latest_step()
+        tree = {"params": trainer.params, "opt": trainer.opt_state}
+        restored, extra = ckpt.restore(step, tree)
+        trainer.params = restored["params"]
+        trainer.opt_state = restored["opt"]
+        trainer.pipeline.load_state_dict(extra["pipeline"])
+        trainer.key = jax.random.PRNGKey(extra["seed_counter"])
+        trainer.step_count = step
+        print(f"resumed from step {step}")
+
+    def save(step):
+        if ckpt is None:
+            return
+        ckpt.save(step, {"params": trainer.params, "opt": trainer.opt_state},
+                  extra={"pipeline": trainer.pipeline.state_dict(),
+                         "seed_counter": int(step) + args.seed},
+                  blocking=False)
+
+    def on_sigterm(signum, frame):
+        print("SIGTERM received: saving final checkpoint", file=sys.stderr)
+        if ckpt is not None:
+            ckpt.save(trainer.step_count,
+                      {"params": trainer.params, "opt": trainer.opt_state},
+                      extra={"pipeline": trainer.pipeline.state_dict(),
+                             "seed_counter": trainer.step_count + args.seed})
+        sys.exit(0)
+
+    signal.signal(signal.SIGTERM, on_sigterm)
+
+    while trainer.step_count < args.steps:
+        m = trainer.train_step()
+        s = trainer.step_count
+        if args.log_every and s % args.log_every == 0:
+            print(f"step {s:4d} reward={m['reward_mean']:.3f} "
+                  f"loss={m['loss']:+.4f} sel={m.get('selected_ratio', 1.0):.2f} "
+                  f"grad={m['grad_norm']:.2f} t={m['time_total']:.2f}s")
+        if ckpt is not None and s % args.ckpt_every == 0:
+            save(s)
+
+    if ckpt is not None:
+        ckpt.wait()
+        save(trainer.step_count)
+        ckpt.wait()
+    ev = trainer.evaluate(args.eval_prompts)
+    print(f"final eval: accuracy={ev['accuracy']:.3f} "
+          f"mean_resp_len={ev['resp_len']:.1f}")
+    return trainer
+
+
+if __name__ == "__main__":
+    main()

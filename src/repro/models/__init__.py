@@ -1,0 +1,34 @@
+"""Composable decoder model zoo covering all 10 assigned architectures."""
+from repro.models.config import (
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    RGLRUConfig,
+    SSMConfig,
+    dense_blocks,
+)
+from repro.models.model import (
+    cache_axes,
+    cache_decl,
+    decode_step,
+    forward_hidden,
+    full_logits,
+    model_decl,
+    prefill,
+    score_tokens,
+)
+from repro.models.params import (
+    ParamDecl,
+    abstract_params,
+    count_params,
+    init_params,
+    param_specs,
+)
+
+__all__ = [
+    "MLAConfig", "MoEConfig", "ModelConfig", "RGLRUConfig", "SSMConfig",
+    "dense_blocks", "cache_axes", "cache_decl", "decode_step",
+    "forward_hidden", "full_logits", "model_decl", "prefill", "score_tokens",
+    "ParamDecl", "abstract_params", "count_params", "init_params",
+    "param_specs",
+]

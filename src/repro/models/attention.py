@@ -1,0 +1,284 @@
+"""Attention mixers: GQA self-attention (full / sliding-window / banded
+local), decode attention against a KV cache (including ring buffers for
+local layers and sequence-sharded caches for long-context decode), and
+cross-attention to frontend embeddings (VLM).
+
+TPU notes (hardware adaptation):
+* GQA uses the kv-repeat scheme — queries keep a flat head axis that shards
+  cleanly over the "model" mesh axis even when kv_heads < model parallelism.
+* Sliding-window prefill uses an exact two-block banded computation so HLO
+  FLOPs reflect the O(T·w) cost instead of a masked O(T^2) einsum.
+* The Pallas kernel (repro.kernels.prefix_attn) implements the same math
+  with per-sequence cut lengths for RPC's physical forward truncation; this
+  module is the jnp reference / SPMD path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope
+from repro.models.params import ParamDecl
+
+Array = jax.Array
+F32 = jnp.float32
+NEG_INF = -2.0 ** 30  # large-but-finite; keeps softmax NaN-free on empty rows
+
+
+# ------------------------------------------------------------ declarations
+def attn_decl(d_model: int, n_heads: int, n_kv: int, head_dim: int):
+    return {
+        "wq": ParamDecl((d_model, n_heads, head_dim), ("embed", "heads", "head_dim")),
+        "wk": ParamDecl((d_model, n_kv, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDecl((d_model, n_kv, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDecl((n_heads, head_dim, d_model), ("heads", "head_dim", "embed")),
+    }
+
+
+def xattn_decl(d_model: int, n_heads: int, n_kv: int, head_dim: int):
+    d = attn_decl(d_model, n_heads, n_kv, head_dim)
+    d["gate"] = ParamDecl((1,), (None,), init="zeros")  # llama-3.2 tanh gate
+    return d
+
+
+def repeat_kv(k: Array, groups: int) -> Array:
+    """(B, S, KV, D) -> (B, S, KV*groups, D)."""
+    if groups == 1:
+        return k
+    b, s, kv, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, d)).reshape(
+        b, s, kv * groups, d)
+
+
+# ------------------------------------------------------ full/masked attention
+def sdpa(q: Array, k: Array, v: Array, mask: Optional[Array], scale: float) -> Array:
+    """q: (B, T, H, D), k/v: (B, S, H, D), mask broadcastable to (B, H, T, S)."""
+    s = jnp.einsum("bthd,bshd->bhts", q, k, preferred_element_type=F32) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", p.astype(v.dtype), v)
+
+
+def causal_window_mask(t: int, s: int, window: int, offset: int = 0) -> Array:
+    """(T, S) mask: query i (absolute i+offset) sees keys j with
+    j <= i+offset and (window <= 0 or i+offset - j < window)."""
+    qi = jnp.arange(t)[:, None] + offset
+    kj = jnp.arange(s)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m &= (qi - kj) < window
+    return m
+
+
+def self_attention(
+    p,
+    x: Array,
+    positions: Array,
+    *,
+    window: int,
+    rope_theta: float,
+    lengths: Optional[Array] = None,
+) -> Array:
+    """Full-sequence self-attention (train / prefill).
+
+    window <= 0 -> full causal.  ``lengths`` (B,) masks keys past each
+    sequence's valid length (padding from the repack bucket ladder).
+    """
+    b, t, _ = x.shape
+    h = p["wq"].shape[1]
+    kv = p["wk"].shape[1]
+    dh = p["wq"].shape[2]
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    scale = 1.0 / jnp.sqrt(dh).astype(F32)
+
+    use_banded = window > 0 and t % window == 0 and t // window >= 2
+    if use_banded:
+        o = _banded_local_attention(q, repeat_kv(k, h // kv),
+                                    repeat_kv(v, h // kv), window, scale, lengths)
+    else:
+        mask = causal_window_mask(t, t, window)[None, None]
+        if lengths is not None:
+            mask = mask & (jnp.arange(t)[None, None, None, :] < lengths[:, None, None, None])
+        o = sdpa(q, repeat_kv(k, h // kv), repeat_kv(v, h // kv), mask, scale)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+    return out, (k, v)
+
+
+def _banded_local_attention(q, k, v, w: int, scale, lengths) -> Array:
+    """Exact sliding-window attention via two-block banding: token t attends
+    to keys in (t-w, t]; with block size w the current + previous key blocks
+    cover exactly that span.  FLOPs O(T * 2w) instead of O(T^2)."""
+    b, t, h, d = q.shape
+    nb = t // w
+    qb = q.reshape(b, nb, w, h, d)
+    kb = k.reshape(b, nb, w, h, d)
+    vb = v.reshape(b, nb, w, h, d)
+    kprev = jnp.pad(kb[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    vprev = jnp.pad(vb[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    k2 = jnp.concatenate([kprev, kb], axis=2)  # (B, nb, 2w, H, D)
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    s = jnp.einsum("bnqhd,bnshd->bnhqs", qb, k2, preferred_element_type=F32) * scale
+    # relative mask: query index w+i (in the 2w frame), key index j:
+    # attend iff j <= w+i and (w+i) - j < w  -> i < j <= w+i
+    qi = jnp.arange(w)[:, None] + w
+    kj = jnp.arange(2 * w)[None, :]
+    m = (kj <= qi) & ((qi - kj) < w)
+    # first block has no previous block: mask the left half
+    first = (jnp.arange(nb) == 0)[:, None, None] & (kj < w)[None]
+    m = m[None] & ~first
+    if lengths is not None:
+        abs_k = (jnp.arange(nb)[:, None] - 1) * w + kj   # (nb, 2w) abs key pos
+        len_ok = abs_k[None] < lengths[:, None, None]    # (B, nb, 2w)
+        m = m[None] & len_ok[:, :, None, :]              # (B, nb, w, 2w)
+        m = m[:, :, None]                                # (B, nb, 1, q, s)
+    else:
+        m = m[None, :, None]
+    s = jnp.where(m, s, NEG_INF)
+    pa = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bnhqs,bnshd->bnqhd", pa.astype(v.dtype), v2)
+    return o.reshape(b, t, h, d)
+
+
+def _norm_pos(pos, b: int):
+    """Normalize a position argument to (B, 1) int32."""
+    p = jnp.asarray(pos)
+    if p.ndim == 0:
+        p = jnp.broadcast_to(p[None], (b,))
+    return p.reshape(b, 1).astype(jnp.int32)
+
+
+# -------------------------------------------------------------- decode step
+def decode_attention(
+    p,
+    x: Array,
+    cache: dict,
+    pos: Array,
+    *,
+    window: int,
+    rope_theta: float,
+) -> tuple:
+    """One-token decode.  x: (B, 1, D).  cache:
+      {"k": (B, S, KV, D), "v": ..., "pos": (B, S) int32 absolute positions}
+    For local layers S is the ring-buffer size (window); writes go to
+    pos % S.  Returns (out (B, 1, D), new_cache).
+    """
+    b = x.shape[0]
+    h = p["wq"].shape[1]
+    kvh = p["wk"].shape[1]
+    dh = p["wq"].shape[2]
+    s_len = cache["k"].shape[1]
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    posb = _norm_pos(pos, b)
+    q = apply_rope(q, posb, rope_theta)
+    k = apply_rope(k, posb, rope_theta)
+
+    slot = (posb[:, 0] % s_len).astype(jnp.int32)  # ring for local, linear else
+    bi = jnp.arange(b)
+    new_k = cache["k"].at[bi, slot].set(k[:, 0].astype(cache["k"].dtype))
+    new_v = cache["v"].at[bi, slot].set(v[:, 0].astype(cache["v"].dtype))
+    new_pos = cache["pos"].at[bi, slot].set(posb[:, 0].astype(jnp.int32))
+
+    valid = new_pos >= 0
+    if window > 0:
+        valid &= (posb[:, :1] - new_pos) < window
+    valid &= new_pos <= posb[:, :1]
+
+    scale = 1.0 / jnp.sqrt(dh).astype(F32)
+    kf = repeat_kv(new_k, h // kvh)
+    vf = repeat_kv(new_v, h // kvh)
+    s = jnp.einsum("bthd,bshd->bhts", q, kf.astype(q.dtype),
+                   preferred_element_type=F32) * scale
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    pa = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhts,bshd->bthd", pa.astype(vf.dtype), vf)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+    return out, {"k": new_k, "v": new_v, "pos": new_pos}
+
+
+def attn_cache_decl(batch: int, s_len: int, n_kv: int, head_dim: int, dtype=jnp.bfloat16):
+    """Abstract cache layout for one attention layer (ring if s_len=window)."""
+    return {
+        "k": jax.ShapeDtypeStruct((batch, s_len, n_kv, head_dim), dtype),
+        "v": jax.ShapeDtypeStruct((batch, s_len, n_kv, head_dim), dtype),
+        "pos": jax.ShapeDtypeStruct((batch, s_len), jnp.int32),
+    }
+
+
+def attn_cache_axes():
+    return {
+        "k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+        "v": ("batch", "kv_seq", "kv_heads", "head_dim"),
+        "pos": ("batch", "kv_seq"),
+    }
+
+
+def cache_from_prefill(k: Array, v: Array, s_len: int, prefill_len, window: int) -> dict:
+    """Build a decode cache from prefill k/v (B, T, KV, D).
+
+    For global layers s_len >= T and entries [0, prefill_len) are valid.
+    For local layers (s_len == window ring) the last `window` positions are
+    written at their ring slots.
+    """
+    b, t, kvh, dh = k.shape
+    if s_len >= t:
+        pad = ((0, 0), (0, s_len - t), (0, 0), (0, 0))
+        kc = jnp.pad(k, pad)
+        vc = jnp.pad(v, pad)
+        pos = jnp.broadcast_to(jnp.arange(s_len)[None], (b, s_len)).astype(jnp.int32)
+        valid = pos < jnp.asarray(prefill_len).reshape(-1, 1)
+        pos = jnp.where(valid, pos, -1)
+        return {"k": kc, "v": vc, "pos": pos}
+    # ring: absolute position p lives at slot p % s_len; take last s_len tokens
+    plen = jnp.asarray(prefill_len).reshape(-1)
+    start = jnp.maximum(plen - s_len, 0)  # (B,)
+    offs = jnp.arange(s_len)[None, :]
+    src = jnp.minimum(start[:, None] + offs, t - 1)          # gather index
+    gk = jnp.take_along_axis(k, src[:, :, None, None], axis=1)
+    gv = jnp.take_along_axis(v, src[:, :, None, None], axis=1)
+    abs_pos = start[:, None] + offs
+    valid = abs_pos < plen[:, None]
+    slot = (abs_pos % s_len).astype(jnp.int32)
+    kc = jnp.zeros((b, s_len, kvh, dh), k.dtype)
+    vc = jnp.zeros((b, s_len, kvh, dh), v.dtype)
+    pc = jnp.full((b, s_len), -1, jnp.int32)
+    bi = jnp.arange(b)[:, None]
+    kc = kc.at[bi, slot].set(jnp.where(valid[:, :, None, None], gk, 0))
+    vc = vc.at[bi, slot].set(jnp.where(valid[:, :, None, None], gv, 0))
+    pc = pc.at[bi, slot].set(jnp.where(valid, abs_pos, -1).astype(jnp.int32))
+    return {"k": kc, "v": vc, "pos": pc}
+
+
+# ---------------------------------------------------------- cross-attention
+def cross_attention(p, x: Array, image_kv: tuple, *, gated: bool = True) -> Array:
+    """Cross-attend text states to precomputed frontend K/V.
+
+    image_kv: (k, v) each (B, N_img, H_kv, D) — computed once per request
+    from the stub frontend embeddings; no causal mask, no rope.
+    """
+    h = p["wq"].shape[1]
+    kvh = p["wk"].shape[1]
+    dh = p["wq"].shape[2]
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k, v = image_kv
+    scale = 1.0 / jnp.sqrt(dh).astype(F32)
+    o = sdpa(q, repeat_kv(k, h // kvh), repeat_kv(v, h // kvh), None, scale)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+    if gated:
+        out = out * jnp.tanh(p["gate"].astype(F32)).astype(out.dtype)
+    return out
+
+
+def image_kv_from_embeds(p, image_embeds: Array) -> tuple:
+    """Project stub frontend embeddings to cross-attention K/V once."""
+    k = jnp.einsum("bnd,dhk->bnhk", image_embeds, p["wk"])
+    v = jnp.einsum("bnd,dhk->bnhk", image_embeds, p["wv"])
+    return k, v

@@ -1,0 +1,219 @@
+"""Block-level glue: declaration / train-apply / decode-apply / cache layout
+for every mixer kind, dispatched by the block-kind strings in
+``ModelConfig.blocks``.
+
+A block = pre-norm mixer + residual, then (unless the kind's MLP is "none")
+pre-norm MLP/MoE + residual.  All functions are shape-polymorphic and pure,
+so the model can lax.scan over stacked layer parameters.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    bf16_grad, mlp_apply, mlp_decl, rmsnorm, rmsnorm_decl,
+)
+from repro.models.params import ParamDecl
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------- declarations
+def block_decl(cfg: ModelConfig, kind: str) -> dict:
+    mixer = cfg.mixer_of(kind)
+    mlp = cfg.mlp_of(kind)
+    d = {"ln1": rmsnorm_decl(cfg.d_model)}
+    if mixer in ("attn", "local"):
+        d["mixer"] = attn.attn_decl(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.head_dim)
+    elif mixer == "xattn":
+        d["mixer"] = attn.xattn_decl(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.head_dim)
+    elif mixer == "mla":
+        d["mixer"] = mla_mod.mla_decl(cfg.d_model, cfg.n_heads, cfg.mla)
+    elif mixer == "ssm":
+        d["mixer"] = ssm_mod.ssm_decl(cfg.d_model, cfg.ssm)
+    elif mixer == "rec":
+        d["mixer"] = rg_mod.rglru_decl(cfg.d_model, cfg.rglru)
+    else:
+        raise ValueError(f"unknown mixer {mixer!r}")
+    if mlp != "none":
+        d["ln2"] = rmsnorm_decl(cfg.d_model)
+        if mlp == "moe":
+            d["mlp"] = moe_mod.moe_decl(cfg.d_model, cfg.moe)
+        else:
+            d["mlp"] = mlp_decl(cfg.d_model, cfg.d_ff, mlp)
+    return d
+
+
+def _window_of(cfg: ModelConfig, mixer: str) -> int:
+    return cfg.window if mixer == "local" else 0
+
+
+# ---------------------------------------------------------------- training
+def block_apply(
+    cfg: ModelConfig,
+    kind: str,
+    p: dict,
+    x: Array,
+    *,
+    positions: Array,
+    lengths: Optional[Array],
+    image_embeds: Optional[Array],
+    collect_cache: bool,
+    shard=None,
+):
+    """Full-sequence application.  Returns (x, cache_entry_or_None, aux)."""
+    mixer = cfg.mixer_of(kind)
+    mlp = cfg.mlp_of(kind)
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    cache_entry = None
+    if mixer in ("attn", "local"):
+        out, (k, v) = attn.self_attention(
+            p["mixer"], h, positions, window=_window_of(cfg, mixer),
+            rope_theta=cfg.rope_theta, lengths=lengths)
+        if collect_cache:
+            cache_entry = {"k": k, "v": v}
+    elif mixer == "xattn":
+        ikv = attn.image_kv_from_embeds(p["mixer"], image_embeds)
+        out = attn.cross_attention(p["mixer"], h, ikv)
+        if collect_cache:
+            cache_entry = {"ik": ikv[0], "iv": ikv[1]}
+    elif mixer == "mla":
+        out, (c_kv, k_rope) = mla_mod.mla_attention(
+            p["mixer"], h, positions, cfg.mla, norm_eps=cfg.norm_eps,
+            lengths=lengths)
+        if collect_cache:
+            cache_entry = {"c_kv": c_kv, "k_rope": k_rope}
+    elif mixer == "ssm":
+        out, st = ssm_mod.ssm_apply(p["mixer"], h, cfg.ssm, lengths=lengths,
+                                    return_state=collect_cache)
+        cache_entry = st
+    elif mixer == "rec":
+        out, st = rg_mod.rglru_apply(p["mixer"], h, cfg.rglru, lengths=lengths,
+                                     return_state=collect_cache)
+        cache_entry = st
+    else:
+        raise ValueError(mixer)
+    x = x + out
+    if mlp != "none":
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if mlp == "moe":
+            out2, metrics = moe_mod.moe_apply(p["mlp"], h2, cfg.moe, shard=shard)
+            aux = aux + metrics["moe_aux_loss"]
+        else:
+            out2 = mlp_apply(p["mlp"], h2, mlp)
+        x = x + out2
+    # cotangents crossing block boundaries travel in bf16 (see bf16_grad);
+    # ensures all backward psums of the residual stream are half-width
+    x = bf16_grad(x)
+    if shard is not None:
+        x = shard(x, ("batch", "act_seq", None))
+    return x, cache_entry, aux
+
+
+# ------------------------------------------------------------------ decode
+def block_decode(
+    cfg: ModelConfig,
+    kind: str,
+    p: dict,
+    x: Array,
+    cache: dict,
+    pos: Array,
+):
+    """One-token decode.  x: (B, 1, D).  Returns (x, new_cache)."""
+    mixer = cfg.mixer_of(kind)
+    mlp = cfg.mlp_of(kind)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if mixer in ("attn", "local"):
+        out, new_cache = attn.decode_attention(
+            p["mixer"], h, cache, pos, window=_window_of(cfg, mixer),
+            rope_theta=cfg.rope_theta)
+    elif mixer == "xattn":
+        out = attn.cross_attention(p["mixer"], h, (cache["ik"], cache["iv"]))
+        new_cache = cache
+    elif mixer == "mla":
+        out, new_cache = mla_mod.mla_decode(p["mixer"], h, cache, pos, cfg.mla,
+                                            norm_eps=cfg.norm_eps)
+    elif mixer == "ssm":
+        out, new_cache = ssm_mod.ssm_decode(p["mixer"], h, cache, cfg.ssm)
+    elif mixer == "rec":
+        out, new_cache = rg_mod.rglru_decode(p["mixer"], h, cache, cfg.rglru)
+    else:
+        raise ValueError(mixer)
+    x = x + out
+    if mlp != "none":
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if mlp == "moe":
+            out2 = moe_mod.moe_decode_apply(p["mlp"], h2, cfg.moe)
+        else:
+            out2 = mlp_apply(p["mlp"], h2, mlp)
+        x = x + out2
+    return x, new_cache
+
+
+# ----------------------------------------------------------- cache layouts
+def block_cache_decl(cfg: ModelConfig, kind: str, batch: int, cache_len: int):
+    """Abstract decode-cache entry for one layer of this kind (or None)."""
+    mixer = cfg.mixer_of(kind)
+    if mixer == "attn":
+        return attn.attn_cache_decl(batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    if mixer == "local":
+        return attn.attn_cache_decl(batch, min(cache_len, cfg.window),
+                                    cfg.n_kv_heads, cfg.head_dim)
+    if mixer == "xattn":
+        n = cfg.num_image_tokens
+        sds = jax.ShapeDtypeStruct
+        return {"ik": sds((batch, n, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+                "iv": sds((batch, n, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)}
+    if mixer == "mla":
+        return mla_mod.mla_cache_decl(batch, cache_len, cfg.mla)
+    if mixer == "ssm":
+        return ssm_mod.ssm_cache_decl(batch, cfg.d_model, cfg.ssm)
+    if mixer == "rec":
+        return rg_mod.rglru_cache_decl(batch, cfg.d_model, cfg.rglru)
+    raise ValueError(mixer)
+
+
+def block_cache_axes(cfg: ModelConfig, kind: str):
+    mixer = cfg.mixer_of(kind)
+    if mixer in ("attn", "local"):
+        return attn.attn_cache_axes()
+    if mixer == "xattn":
+        return {"ik": ("batch", "image_tokens", "kv_heads", "head_dim"),
+                "iv": ("batch", "image_tokens", "kv_heads", "head_dim")}
+    if mixer == "mla":
+        return mla_mod.mla_cache_axes()
+    if mixer == "ssm":
+        return ssm_mod.ssm_cache_axes()
+    if mixer == "rec":
+        return rg_mod.rglru_cache_axes()
+    raise ValueError(mixer)
+
+
+def block_cache_from_prefill(cfg: ModelConfig, kind: str, entry, cache_len: int,
+                             prefill_len):
+    """Convert a prefill cache entry into the decode cache layout."""
+    mixer = cfg.mixer_of(kind)
+    if mixer in ("attn", "local"):
+        s_len = cache_len if mixer == "attn" else min(cache_len, cfg.window)
+        return attn.cache_from_prefill(entry["k"], entry["v"], s_len,
+                                       prefill_len, _window_of(cfg, mixer))
+    if mixer == "xattn":
+        return entry
+    if mixer == "mla":
+        return mla_mod.mla_cache_from_prefill(entry["c_kv"], entry["k_rope"],
+                                              cache_len, prefill_len)
+    if mixer in ("ssm", "rec"):
+        return entry
+    raise ValueError(mixer)

@@ -1,0 +1,134 @@
+"""ModelConfig: one composable description covering all 10 assigned
+architecture families (dense / GQA / SWA / local:global / cross-attn VLM /
+MLA / MoE / SSD / RG-LRU / codebook-audio)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# A block kind is "mixer" or "mixer:mlp_override".
+#   mixers: attn (full causal), local (sliding window), xattn (cross-attn to
+#           image embeds), mla (latent attention), ssm (mamba-2 SSD),
+#           rec (RG-LRU)
+#   mlp override: "moe" routes this layer's MLP through experts; "dense"
+#           forces the dense MLP; "none" removes the MLP (mamba blocks).
+BlockGroups = Tuple[Tuple[Tuple[str, ...], int], ...]  # ((pattern, repeat), ...)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    num_shared: int = 0          # shared (always-on) experts, DeepSeek-style
+    d_ff_expert: int = 1024
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 1e-3  # load-balance loss weight
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536      # 0 = full-rank q projection
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128
+    head_dim: int = 64           # P; n_heads = d_inner / head_dim
+    expand: int = 2              # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk: int = 128             # SSD chunk length
+    n_groups: int = 1            # B/C groups
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0           # 0 -> d_model
+    conv_width: int = 4
+    c_exponent: float = 8.0      # a_t = exp(c * softplus(Lambda) * r_t) decay
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    blocks: BlockGroups
+    mlp_kind: str = "swiglu"          # swiglu | relu2 | geglu
+    window: int = 4096                # for "local" mixers
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    logits_softcap: float = 0.0       # gemma-style tanh soft cap (0 = off)
+    emb_scale_by_dim: bool = False    # gemma multiplies embeds by sqrt(d)
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # modality frontend stubs
+    num_image_tokens: int = 0         # vlm: length of precomputed patch embeds
+    num_codebooks: int = 0            # audio: EnCodec codebooks (0 = text LM)
+    # numerics / training
+    remat_policy: str = "full"        # none | full | dots
+    scan_layers: bool = True
+    # Shard residual seq dim over "model" (Megatron SP).  Default OFF: §Perf
+    # measured 2.7x collective inflation (per-layer activation all-gathers +
+    # grad psums over both axes) while full remat already bounds activation
+    # memory — SP pays off only when remat is off and memory binds.
+    seq_parallel: bool = False
+    # long_500k eligibility override (None -> derived: no full-span attention;
+    # mostly-local archs like gemma3 set True explicitly per DESIGN.md)
+    long_context_ok: Optional[bool] = None
+
+    @property
+    def n_layers(self) -> int:
+        return sum(len(p) * r for p, r in self.blocks)
+
+    def mixer_of(self, kind: str) -> str:
+        return kind.split(":")[0]
+
+    def mlp_of(self, kind: str) -> str:
+        parts = kind.split(":")
+        if len(parts) > 1:
+            # ":dense" forces the config's dense MLP kind; ":moe"/":none" literal
+            return self.mlp_kind if parts[1] == "dense" else parts[1]
+        if self.mixer_of(kind) == "ssm":
+            return "none"             # mamba blocks are mixer-only
+        return "moe" if self.moe is not None and self._default_moe else self.mlp_kind
+
+    @property
+    def _default_moe(self) -> bool:
+        # if a config has MoE and never says ":moe"/":dense" explicitly,
+        # every MLP is routed (qwen3-moe style)
+        return not any(":" in k for p, _ in self.blocks for k in p)
+
+    @property
+    def is_recurrent_only(self) -> bool:
+        mixers = {self.mixer_of(k) for p, _ in self.blocks for k in p}
+        return mixers <= {"ssm", "rec"}
+
+    @property
+    def has_full_attention(self) -> bool:
+        return any(self.mixer_of(k) in ("attn", "xattn", "mla")
+                   for p, _ in self.blocks for k in p)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Eligible for the long_500k decode shape.  Default: no full-span
+        self-attention mixers (xattn spans only the fixed image tokens, so it
+        does not disqualify).  Configs may override via ``long_context_ok``."""
+        if self.long_context_ok is not None:
+            return self.long_context_ok
+        return not any(self.mixer_of(k) in ("attn", "mla")
+                       for p, _ in self.blocks for k in p)
+
+
+def dense_blocks(n_layers: int, mixer: str = "attn") -> BlockGroups:
+    return (((mixer,), n_layers),)

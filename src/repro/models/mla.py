@@ -1,0 +1,158 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Keys/values are compressed into a per-token latent ``c_kv`` of rank
+``kv_lora_rank`` plus a single shared rotary key ``k_rope``; the cache stores
+only (c_kv, k_rope) — the paper's ~1/24 KV-cache reduction.
+
+Train/prefill uses the decompressed (matmul-friendly) form.  Decode uses the
+*absorbed* form: W_uk is folded into the query and W_uv into the output
+projection, so attention contracts directly against the cached latents and
+never materializes per-head K/V for the whole history.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import MLAConfig
+from repro.models.layers import apply_rope, rmsnorm, rmsnorm_decl
+from repro.models.params import ParamDecl
+
+Array = jax.Array
+F32 = jnp.float32
+NEG_INF = -2.0 ** 30
+
+
+def mla_decl(d_model: int, n_heads: int, m: MLAConfig):
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    d = {
+        "w_dkv": ParamDecl((d_model, m.kv_lora_rank), ("embed", "kv_lora")),
+        "w_kr": ParamDecl((d_model, m.qk_rope_dim), ("embed", "head_dim")),
+        "kv_norm": rmsnorm_decl(m.kv_lora_rank),
+        "w_uk": ParamDecl((m.kv_lora_rank, n_heads, m.qk_nope_dim),
+                          ("kv_lora", "heads", "head_dim")),
+        "w_uv": ParamDecl((m.kv_lora_rank, n_heads, m.v_head_dim),
+                          ("kv_lora", "heads", "head_dim")),
+        "wo": ParamDecl((n_heads, m.v_head_dim, d_model),
+                        ("heads", "head_dim", "embed")),
+    }
+    if m.q_lora_rank:
+        d["w_dq"] = ParamDecl((d_model, m.q_lora_rank), ("embed", "q_lora"))
+        d["q_norm"] = rmsnorm_decl(m.q_lora_rank)
+        d["w_uq"] = ParamDecl((m.q_lora_rank, n_heads, qk), ("q_lora", "heads", "head_dim"))
+    else:
+        d["wq"] = ParamDecl((d_model, n_heads, qk), ("embed", "heads", "head_dim"))
+    return d
+
+
+def _queries(p, x: Array, m: MLAConfig, norm_eps: float):
+    if "w_dq" in p:
+        cq = jnp.einsum("btd,dr->btr", x, p["w_dq"])
+        cq = rmsnorm(p["q_norm"], cq, norm_eps)
+        q = jnp.einsum("btr,rhk->bthk", cq, p["w_uq"])
+    else:
+        q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    return jnp.split(q, [m.qk_nope_dim], axis=-1)  # q_nope, q_rope
+
+
+def _latents(p, x: Array, m: MLAConfig, norm_eps: float, positions: Array):
+    c_kv = jnp.einsum("btd,dr->btr", x, p["w_dkv"])
+    c_kv = rmsnorm(p["kv_norm"], c_kv, norm_eps)
+    k_rope = jnp.einsum("btd,dk->btk", x, p["w_kr"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, 10_000.0)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention(
+    p, x: Array, positions: Array, m: MLAConfig, *,
+    norm_eps: float, lengths=None,
+) -> tuple:
+    """Full-sequence MLA (train/prefill), decompressed form.
+
+    Returns (out, (c_kv, k_rope)) — the latter is the decode cache content.
+    """
+    b, t, _ = x.shape
+    q_nope, q_rope = _queries(p, x, m, norm_eps)
+    q_rope = apply_rope(q_rope, positions, 10_000.0)
+    c_kv, k_rope = _latents(p, x, m, norm_eps, positions)
+
+    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uk"])
+    v = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uv"])
+
+    scale = 1.0 / jnp.sqrt(m.qk_nope_dim + m.qk_rope_dim).astype(F32)
+    s = jnp.einsum("bthk,bshk->bhts", q_nope, k_nope, preferred_element_type=F32)
+    s += jnp.einsum("bthk,bsk->bhts", q_rope, k_rope, preferred_element_type=F32)
+    s *= scale
+    mask = jnp.tril(jnp.ones((t, t), bool))[None, None]
+    if lengths is not None:
+        mask = mask & (jnp.arange(t)[None, None, None, :] < lengths[:, None, None, None])
+    s = jnp.where(mask, s, NEG_INF)
+    pa = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhts,bshk->bthk", pa.astype(v.dtype), v)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(p, x: Array, cache: dict, pos: Array, m: MLAConfig, *, norm_eps: float):
+    """One-token decode in the absorbed form.
+
+    cache: {"c_kv": (B, S, R), "k_rope": (B, S, Dr), "pos": (B, S)}.
+    Scores: q_nope @ W_uk absorbed -> contract against latents directly:
+        s = (q_nope W_uk) . c_kv + q_rope . k_rope
+        o = (softmax(s) @ c_kv) W_uv
+    """
+    from repro.models.attention import _norm_pos
+
+    b = x.shape[0]
+    s_len = cache["c_kv"].shape[1]
+    q_nope, q_rope = _queries(p, x, m, norm_eps)      # (B, 1, H, *)
+    posb = _norm_pos(pos, b)
+    q_rope = apply_rope(q_rope, posb, 10_000.0)
+    c_new, kr_new = _latents(p, x, m, norm_eps, posb)  # (B, 1, R), (B, 1, Dr)
+
+    slot = (posb[:, 0] % s_len).astype(jnp.int32)
+    bi = jnp.arange(b)
+    c_kv = cache["c_kv"].at[bi, slot].set(c_new[:, 0].astype(cache["c_kv"].dtype))
+    k_rope = cache["k_rope"].at[bi, slot].set(kr_new[:, 0].astype(cache["k_rope"].dtype))
+    cpos = cache["pos"].at[bi, slot].set(posb[:, 0].astype(jnp.int32))
+
+    q_abs = jnp.einsum("bthk,rhk->bthr", q_nope, p["w_uk"])  # absorbed query
+    scale = 1.0 / jnp.sqrt(m.qk_nope_dim + m.qk_rope_dim).astype(F32)
+    s = jnp.einsum("bthr,bsr->bhts", q_abs, c_kv.astype(q_abs.dtype),
+                   preferred_element_type=F32)
+    s += jnp.einsum("bthk,bsk->bhts", q_rope, k_rope.astype(q_rope.dtype),
+                    preferred_element_type=F32)
+    s *= scale
+    valid = (cpos >= 0) & (cpos <= posb[:, :1])
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    pa = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhts,bsr->bthr", pa, c_kv.astype(pa.dtype))  # (B,1,H,R)
+    o = jnp.einsum("bthr,rhk->bthk", o_lat.astype(x.dtype), p["w_uv"])
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+    return out, {"c_kv": c_kv, "k_rope": k_rope, "pos": cpos}
+
+
+def mla_cache_decl(batch: int, s_len: int, m: MLAConfig, dtype=jnp.bfloat16):
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, s_len, m.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, s_len, m.qk_rope_dim), dtype),
+        "pos": jax.ShapeDtypeStruct((batch, s_len), jnp.int32),
+    }
+
+
+def mla_cache_axes():
+    return {
+        "c_kv": ("batch", "kv_seq", "kv_lora"),
+        "k_rope": ("batch", "kv_seq", "head_dim"),
+        "pos": ("batch", "kv_seq"),
+    }
+
+
+def mla_cache_from_prefill(c_kv: Array, k_rope: Array, s_len: int, prefill_len) -> dict:
+    b, t, _ = c_kv.shape
+    pad = s_len - t
+    ckv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
+    kr = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+    pos = jnp.broadcast_to(jnp.arange(s_len)[None], (b, s_len)).astype(jnp.int32)
+    valid = pos < jnp.asarray(prefill_len).reshape(-1, 1)
+    return {"c_kv": ckv, "k_rope": kr, "pos": jnp.where(valid, pos, -1)}

@@ -1,0 +1,325 @@
+"""Model assembly: declaration tree, full-sequence forward (train / scoring),
+prefill, and single-token decode — all built from the block zoo and scanned
+over stacked layer groups so HLO size stays O(#groups), not O(#layers).
+
+Public surface:
+    model_decl(cfg)                        -> ParamDecl tree
+    forward_hidden(params, cfg, tokens, …) -> (hidden, caches|None, aux)
+    score_tokens(params, cfg, tokens, …)   -> per-token logprobs (B, T)
+    prefill(params, cfg, tokens, …)        -> (last_logits, decode_cache)
+    decode_step(params, cfg, tokens, cache, pos) -> (logits, new_cache)
+    cache_decl(cfg, batch, cache_len)      -> abstract cache tree
+    cache_axes(cfg)                        -> logical-axes tree for sharding
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ShardingRules, DEFAULT_RULES, shard_constraint
+from repro.models import blocks as B
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    chunked_token_logprobs,
+    embed_apply,
+    embed_decl,
+    head_decl,
+    head_weight,
+    logits_apply,
+    rmsnorm,
+    rmsnorm_decl,
+)
+from repro.models.params import stack_decls
+
+Array = jax.Array
+
+
+# -------------------------------------------------------------- declaration
+def model_decl(cfg: ModelConfig) -> dict:
+    d = {
+        "embed": embed_decl(cfg.vocab_size, cfg.d_model, cfg.num_codebooks),
+        "final_norm": rmsnorm_decl(cfg.d_model),
+        "head": head_decl(cfg.vocab_size, cfg.d_model, cfg.num_codebooks,
+                          cfg.tie_embeddings),
+    }
+    for gi, (pattern, repeat) in enumerate(cfg.blocks):
+        layer = {f"l{j}": B.block_decl(cfg, kind) for j, kind in enumerate(pattern)}
+        d[f"group{gi}"] = stack_decls(layer, repeat)
+    return d
+
+
+def _make_shard(cfg: ModelConfig, mesh, rules):
+    if mesh is None:
+        return None
+    if not cfg.seq_parallel:  # keep batch/vocab constraints, drop seq-parallel
+        rules = rules.override(act_seq=None)
+    return partial(shard_constraint, mesh=mesh, rules=rules)
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.checkpoint(fn)
+
+
+# -------------------------------------------------------------- forward
+def forward_hidden(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Array,
+    *,
+    positions: Optional[Array] = None,
+    lengths: Optional[Array] = None,
+    image_embeds: Optional[Array] = None,
+    mesh=None,
+    rules: ShardingRules = DEFAULT_RULES,
+    collect_cache: bool = False,
+):
+    """tokens: (B, T) int32 (or (B, T, K) codebook grid).
+
+    Returns (hidden (B, T, D) after final norm, caches or None, aux scalar).
+    Caches (when collected) are per-group dicts of stacked prefill entries.
+    """
+    shard = _make_shard(cfg, mesh, rules)
+    bsz, t = tokens.shape[:2]
+    scale = math.sqrt(cfg.d_model) if cfg.emb_scale_by_dim else None
+    x = embed_apply(params["embed"], tokens, scale=scale, shard=shard)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (bsz, t))
+    if shard is not None:
+        x = shard(x, ("batch", "act_seq", None))
+
+    caches = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for gi, (pattern, repeat) in enumerate(cfg.blocks):
+        gp = params[f"group{gi}"]
+
+        def body(carry, layer_p, _pattern=pattern):
+            xx = carry
+            entries = {}
+            aux = jnp.zeros((), jnp.float32)
+            for j, kind in enumerate(_pattern):
+                xx, ce, a = B.block_apply(
+                    cfg, kind, layer_p[f"l{j}"], xx,
+                    positions=positions, lengths=lengths,
+                    image_embeds=image_embeds,
+                    collect_cache=collect_cache, shard=shard)
+                if collect_cache:
+                    entries[f"l{j}"] = ce
+                aux = aux + a
+            return xx, (entries, aux)
+
+        body = _remat(cfg, body)
+        if cfg.scan_layers and repeat > 1:
+            x, (entries, aux) = jax.lax.scan(body, x, gp)
+            aux = jnp.sum(aux)
+        else:
+            entries_list, aux = [], jnp.zeros((), jnp.float32)
+            for r in range(repeat):
+                lp = jax.tree.map(lambda a: a[r], gp)
+                x, (e, a) = body(x, lp)
+                entries_list.append(e)
+                aux = aux + a
+            entries = (jax.tree.map(lambda *xs: jnp.stack(xs), *entries_list)
+                       if collect_cache else {})
+        if collect_cache:
+            caches[f"group{gi}"] = entries
+        aux_total = aux_total + aux
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if shard is not None:
+        x = shard(x, ("batch", "act_seq", None))
+    return x, (caches if collect_cache else None), aux_total
+
+
+# -------------------------------------------------------------- scoring
+def score_tokens(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Array,
+    *,
+    lengths: Optional[Array] = None,
+    image_embeds: Optional[Array] = None,
+    mesh=None,
+    rules: ShardingRules = DEFAULT_RULES,
+    with_entropy: bool = False,
+    vocab_chunks: int = 8,
+):
+    """Per-token logprobs on the (B, T) grid.
+
+    logp[:, t] = log pi(tokens[:, t] | tokens[:, <t]); logp[:, 0] = 0.
+    Uses the chunked head — the (B, T, V) softmax is never materialized
+    (pure-jnp analogue of the fused Pallas HT head).
+    """
+    hidden, _, aux = forward_hidden(
+        params, cfg, tokens, lengths=lengths, image_embeds=image_embeds,
+        mesh=mesh, rules=rules)
+    shard = _make_shard(cfg, mesh, rules)
+    w = head_weight(params.get("head", {}), params["embed"], cfg.tie_embeddings)
+    h = hidden[:, :-1]
+    tgt = tokens[:, 1:]
+    bsz = tokens.shape[0]
+    if cfg.num_codebooks:
+        # sum logp over codebooks of each frame: (B, T-1, K)
+        outs = [chunked_token_logprobs(
+            w[k], h, tgt[..., k], softcap=cfg.logits_softcap,
+            num_chunks=vocab_chunks, with_entropy=with_entropy, shard=shard)
+            for k in range(cfg.num_codebooks)]
+        if with_entropy:
+            logp = sum(o[0] for o in outs)
+            ent = sum(o[1] for o in outs)
+        else:
+            logp = sum(outs)
+            ent = None
+    else:
+        out = chunked_token_logprobs(
+            w, h, tgt, softcap=cfg.logits_softcap,
+            num_chunks=vocab_chunks, with_entropy=with_entropy, shard=shard)
+        logp, ent = out if with_entropy else (out, None)
+    pad = jnp.zeros((bsz, 1), logp.dtype)
+    logp = jnp.concatenate([pad, logp], axis=1)
+    if with_entropy:
+        ent = jnp.concatenate([pad, ent], axis=1)
+        return logp, ent, aux
+    return logp, aux
+
+
+def full_logits(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Array,
+    *,
+    lengths: Optional[Array] = None,
+    image_embeds: Optional[Array] = None,
+    mesh=None,
+    rules: ShardingRules = DEFAULT_RULES,
+):
+    """(B, T, V) logits — small-model tests and decode sampling only."""
+    hidden, _, _ = forward_hidden(params, cfg, tokens, lengths=lengths,
+                                  image_embeds=image_embeds, mesh=mesh, rules=rules)
+    w = head_weight(params.get("head", {}), params["embed"], cfg.tie_embeddings)
+    return logits_apply(w, hidden, cfg.logits_softcap)
+
+
+# -------------------------------------------------------------- prefill
+def prefill(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Array,
+    *,
+    cache_len: int,
+    prefill_len: Optional[Array] = None,
+    image_embeds: Optional[Array] = None,
+    mesh=None,
+    rules: ShardingRules = DEFAULT_RULES,
+):
+    """Run the prompt through the model, build the decode cache.
+
+    Returns (last_logits (B, V) [or (B, K, V)], cache).
+    """
+    bsz, t = tokens.shape[:2]
+    if prefill_len is None:
+        prefill_len = jnp.full((bsz,), t, jnp.int32)
+    hidden, raw, _ = forward_hidden(
+        params, cfg, tokens, lengths=prefill_len, image_embeds=image_embeds,
+        mesh=mesh, rules=rules, collect_cache=True)
+
+    cache = {}
+    for gi, (pattern, repeat) in enumerate(cfg.blocks):
+        entries = raw[f"group{gi}"]
+        out = {}
+        for j, kind in enumerate(pattern):
+            conv = partial(B.block_cache_from_prefill, cfg, kind,
+                           cache_len=cache_len, prefill_len=prefill_len)
+            out[f"l{j}"] = jax.vmap(lambda e, _c=conv: _c(e))(entries[f"l{j}"])
+        cache[f"group{gi}"] = out
+
+    w = head_weight(params.get("head", {}), params["embed"], cfg.tie_embeddings)
+    idx = jnp.maximum(prefill_len - 1, 0)
+    last_h = jnp.take_along_axis(hidden, idx[:, None, None], axis=1)  # (B,1,D)
+    logits = logits_apply(w, last_h, cfg.logits_softcap)[:, 0]
+    return logits, cache
+
+
+# -------------------------------------------------------------- decode
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Array,
+    cache: dict,
+    pos: Array,
+):
+    """One decode step.  tokens: (B,) int32 (or (B, K)); pos: (B,) int32
+    absolute position of the NEW token.  Returns (logits (B, V) | (B, K, V),
+    new_cache)."""
+    if cfg.num_codebooks:
+        tok = tokens[:, None, :]  # (B, 1, K)
+    else:
+        tok = tokens[:, None]     # (B, 1)
+    scale = math.sqrt(cfg.d_model) if cfg.emb_scale_by_dim else None
+    x = embed_apply(params["embed"], tok, scale=scale)
+
+    new_cache = {}
+    for gi, (pattern, repeat) in enumerate(cfg.blocks):
+        gp = params[f"group{gi}"]
+        cg = cache[f"group{gi}"]
+
+        def body(carry, xs, _pattern=pattern):
+            xx = carry
+            layer_p, cache_l = xs
+            entries = {}
+            for j, kind in enumerate(_pattern):
+                xx, nc = B.block_decode(cfg, kind, layer_p[f"l{j}"], xx,
+                                        cache_l[f"l{j}"], pos)
+                entries[f"l{j}"] = nc
+            return xx, entries
+
+        if cfg.scan_layers and repeat > 1:
+            x, nc = jax.lax.scan(body, x, (gp, cg))
+        else:
+            ncs = []
+            for r in range(repeat):
+                lp = jax.tree.map(lambda a: a[r], gp)
+                cl = jax.tree.map(lambda a: a[r], cg)
+                x, e = body(x, (lp, cl))
+                ncs.append(e)
+            nc = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+        new_cache[f"group{gi}"] = nc
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    w = head_weight(params.get("head", {}), params["embed"], cfg.tie_embeddings)
+    logits = logits_apply(w, x, cfg.logits_softcap)[:, 0]
+    return logits, new_cache
+
+
+# -------------------------------------------------------------- cache decl
+def cache_decl(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    out = {}
+    for gi, (pattern, repeat) in enumerate(cfg.blocks):
+        layer = {}
+        for j, kind in enumerate(pattern):
+            entry = B.block_cache_decl(cfg, kind, batch, cache_len)
+            layer[f"l{j}"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((repeat,) + s.shape, s.dtype), entry)
+        out[f"group{gi}"] = layer
+    return out
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    out = {}
+    for gi, (pattern, repeat) in enumerate(cfg.blocks):
+        layer = {}
+        for j, kind in enumerate(pattern):
+            ax = B.block_cache_axes(cfg, kind)
+            layer[f"l{j}"] = jax.tree.map(
+                lambda a: ("layers",) + a, ax,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    isinstance(e, (str, type(None))) for e in x))
+        out[f"group{gi}"] = layer
+    return out

@@ -1,0 +1,97 @@
+"""Parameter declaration trees.
+
+Model code builds a tree of ``ParamDecl`` (shape + logical axes + init) once
+from the config; three materializers derive everything else from it:
+
+* ``init_params``     — random concrete arrays (for real training)
+* ``abstract_params`` — ShapeDtypeStructs (for the dry-run; no allocation)
+* ``param_specs``     — logical-axis tuples (for sharding resolution)
+
+Keeping shapes and shardings in one declaration removes the usual drift
+between init code and sharding tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: tuple
+    axes: tuple  # logical axis names (or None), len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | value
+    scale: Optional[float] = None  # stddev; default 1/sqrt(fan_in)
+    dtype: Any = jnp.bfloat16
+    value: Optional[float] = None  # for init == "value"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def stack_decls(tree, repeat: int):
+    """Add a leading stacked-layer dim to every decl in the tree."""
+    return jax.tree.map(
+        lambda d: ParamDecl(
+            shape=(repeat,) + d.shape,
+            axes=("layers",) + d.axes,
+            init=d.init,
+            scale=d.scale,
+            dtype=d.dtype,
+            value=d.value,
+        ),
+        tree,
+        is_leaf=is_decl,
+    )
+
+
+def _fan_in(shape: tuple) -> int:
+    if len(shape) <= 1:
+        return max(shape[0] if shape else 1, 1)
+    # all dims but the last are treated as inputs (matches our einsum layouts)
+    return max(int(np.prod(shape[:-1])), 1)
+
+
+def _init_one(key, d: ParamDecl, stacked: bool):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "value":
+        return jnp.full(d.shape, d.value, d.dtype)
+    shape = d.shape
+    fan_shape = shape[1:] if (stacked and d.axes and d.axes[0] == "layers") else shape
+    std = d.scale if d.scale is not None else 1.0 / math.sqrt(_fan_in(fan_shape))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(d.dtype)
+
+
+def init_params(key, decl_tree):
+    leaves, treedef = jax.tree.flatten(decl_tree, is_leaf=is_decl)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(k, d, stacked=True) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(decl_tree):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), decl_tree, is_leaf=is_decl
+    )
+
+
+def param_specs(decl_tree):
+    """Tree of logical-axes tuples parallel to the params tree."""
+    return jax.tree.map(lambda d: d.axes, decl_tree, is_leaf=is_decl)
+
+
+def count_params(decl_tree) -> int:
+    leaves = jax.tree.leaves(decl_tree, is_leaf=is_decl)
+    return sum(int(np.prod(d.shape)) for d in leaves)

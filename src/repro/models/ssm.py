@@ -1,0 +1,225 @@
+"""Mamba-2 SSD (state-space duality) mixer.
+
+Training/prefill uses the chunked SSD algorithm (arXiv:2405.21060 §6):
+quadratic attention-like compute *within* chunks plus a linear scan of
+inter-chunk states — O(T·Q) FLOPs for chunk length Q, TPU-friendly (all
+einsums, one short lax.scan over chunks).
+
+Decode is the exact SSM recurrence on a (B, H, P, N) state.
+
+NAT note: a prefix is a valid computation for any left-to-right SSM, so RPC
+physical truncation composes directly — savings are linear in the cut ratio
+(the forward was never quadratic), as recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import SSMConfig
+from repro.models.params import ParamDecl
+
+Array = jax.Array
+F32 = jnp.float32
+
+
+def ssm_decl(d_model: int, s: SSMConfig):
+    d_inner = s.expand * d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.state_dim
+    return {
+        # in_proj emits [z (gate), x, B, C, dt]
+        "w_in": ParamDecl(
+            (d_model, 2 * d_inner + 2 * s.n_groups * s.state_dim + n_heads),
+            ("embed", "mlp")),
+        "conv_w": ParamDecl((s.conv_width, conv_dim), ("conv", "mlp"), scale=0.5),
+        "conv_b": ParamDecl((conv_dim,), ("mlp",), init="zeros"),
+        "a_log": ParamDecl((n_heads,), ("ssm_heads",), init="value", value=0.0,
+                           dtype=jnp.float32),
+        "dt_bias": ParamDecl((n_heads,), ("ssm_heads",), init="zeros",
+                             dtype=jnp.float32),
+        "d_skip": ParamDecl((n_heads,), ("ssm_heads",), init="ones",
+                            dtype=jnp.float32),
+        "norm_w": ParamDecl((d_inner,), ("mlp",), init="zeros"),
+        "w_out": ParamDecl((d_inner, d_model), ("mlp", "embed")),
+    }
+
+
+def _split_proj(cfg: SSMConfig, d_model: int, zxbcdt: Array):
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    gn = cfg.n_groups * cfg.state_dim
+    z, xin, bc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + 2 * gn],
+                               axis=-1)
+    b, c = jnp.split(bc, 2, axis=-1)
+    return z, xin, b, c, dt, d_inner, n_heads
+
+
+def _gated_norm(w: Array, x: Array, z: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(F32) * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(F32))).astype(x.dtype)
+
+
+def ssm_apply(p, x: Array, cfg: SSMConfig, *, lengths=None,
+              return_state: bool = False):
+    """Full-sequence SSD.  x: (B, T, D) -> (B, T, D).
+
+    ``lengths`` (B,) marks valid prefixes: padded positions become identity
+    transitions (decay 1, zero input) so the final state equals the state at
+    position lengths-1 — required for variable-length prefill and for the
+    internal pad-to-chunk-multiple.
+    """
+    bsz, t_orig, d_model = x.shape
+    q = min(cfg.chunk, t_orig)
+    if t_orig % q:
+        pad = q - t_orig % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        if lengths is None:
+            lengths = jnp.full((bsz,), t_orig, jnp.int32)
+    bsz, t, d_model = x.shape
+    nc = t // q
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["w_in"])
+    z, xin, bmat, cmat, dt, d_inner, n_heads = _split_proj(cfg, d_model, zxbcdt)
+    valid = (None if lengths is None
+             else (jnp.arange(t)[None, :] < lengths[:, None]))  # (B, T)
+
+    # causal depthwise conv over [x, B, C]
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xin, bmat, cmat = jnp.split(conv, [d_inner, d_inner + cfg.n_groups * cfg.state_dim],
+                                axis=-1)
+
+    h, pdim, n = n_heads, cfg.head_dim, cfg.state_dim
+    g = cfg.n_groups
+    rep = h // g
+    xh = xin.reshape(bsz, t, h, pdim)
+    # expand B/C groups to heads once: (B, T, H, N)
+    bh = jnp.repeat(bmat.reshape(bsz, t, g, n), rep, axis=2)
+    ch = jnp.repeat(cmat.reshape(bsz, t, g, n), rep, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])             # (B, T, H)
+    if valid is not None:
+        dt = dt * valid[:, :, None]  # identity transition on padding
+    a = -jnp.exp(p["a_log"])                                        # (H,)
+    da = dt * a                                                     # (B, T, H) <= 0
+
+    # --- chunked SSD ---
+    dac = da.reshape(bsz, nc, q, h)
+    cum = jnp.cumsum(dac, axis=2)                                   # within-chunk
+    seg_total = cum[:, :, -1]                                       # (B, nc, H)
+
+    bq = bh.reshape(bsz, nc, q, h, n).astype(F32)
+    cq = ch.reshape(bsz, nc, q, h, n).astype(F32)
+    xq = xh.reshape(bsz, nc, q, h, pdim).astype(F32)
+    dtq = dt.reshape(bsz, nc, q, h)
+
+    # intra-chunk (quadratic in q): L[i,j] = exp(cum_i - cum_j) for i >= j
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]              # (B,nc,q,q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    cb = jnp.einsum("bnihs,bnjhs->bnijh", cq, bq)                   # (B,nc,q,q,H)
+    att = cb * decay * dtq[:, :, None, :, :]                        # weight by dt_j
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", att, xq)
+
+    # inter-chunk: states carried by a scan
+    # chunk state contribution: S_n = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+    w_state = jnp.exp(seg_total[:, :, None, :] - cum) * dtq         # (B,nc,q,H)
+    bx = jnp.einsum("bnjh,bnjhs,bnjhp->bnhps", w_state, bq, xq)     # (B,nc,H,P,N)
+
+    def scan_fn(state, inp):
+        bx_n, seg_n = inp                                           # (B,H,P,N), (B,H)
+        new = state * jnp.exp(seg_n)[:, :, None, None] + bx_n
+        return new, state                                           # emit PREVIOUS
+
+    init = jnp.zeros((bsz, h, pdim, n), F32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init, (jnp.moveaxis(bx, 1, 0), jnp.moveaxis(seg_total, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                   # (B,nc,H,P,N)
+
+    # contribution of carried state to each position: C_i exp(cum_i) S_prev
+    y_inter = jnp.einsum("bnihs,bnhps,bnih->bnihp", cq, prev_states, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(bsz, t, h, pdim)
+    y = y + xh.astype(F32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, t, d_inner)
+    y = _gated_norm(p["norm_w"], y.astype(x.dtype), z)
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"])[:, :t_orig]
+    if return_state:
+        conv_tail = conv_tail_at(conv_in, p["conv_w"].shape[0], lengths)
+        return out, {"state": final_state.astype(jnp.float32), "conv": conv_tail}
+    return out, None
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv, width K.  x: (B, T, C), w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu((out + b[None, None, :]).astype(F32)).astype(x.dtype)
+
+
+def conv_tail_at(x: Array, k: int, lengths=None) -> Array:
+    """Last K-1 raw conv inputs *per row* (the decode-time conv state).
+    With ``lengths`` the tail ends at position lengths-1; out-of-range
+    entries (length < K-1) are zero."""
+    b, t, c = x.shape
+    if lengths is None:
+        return x[:, -(k - 1):, :].astype(jnp.float32)
+    idx = lengths[:, None] - (k - 1) + jnp.arange(k - 1)[None, :]   # (B, K-1)
+    ok = idx >= 0
+    g = jnp.take_along_axis(x, jnp.maximum(idx, 0)[:, :, None], axis=1)
+    return jnp.where(ok[:, :, None], g, 0).astype(jnp.float32)
+
+
+def ssm_decode(p, x: Array, cache: dict, cfg: SSMConfig):
+    """Exact single-step recurrence.  x: (B, 1, D).
+    cache: {"state": (B,H,P,N) f32, "conv": (B, K-1, conv_dim) f32}."""
+    bsz, _, d_model = x.shape
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["w_in"])
+    z, xin, bmat, cmat, dt, d_inner, n_heads = _split_proj(cfg, d_model, zxbcdt)
+
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)           # (B,1,C)
+    k = p["conv_w"].shape[0]
+    hist = jnp.concatenate([cache["conv"].astype(conv_in.dtype), conv_in], axis=1)
+    w = p["conv_w"]
+    conv = sum(hist[:, i:i + 1] * w[i][None, None, :] for i in range(k))
+    conv = jax.nn.silu((conv + p["conv_b"][None, None, :]).astype(F32)).astype(x.dtype)
+    new_conv = hist[:, 1:, :].astype(jnp.float32)
+
+    xin, bmat, cmat = jnp.split(conv, [d_inner, d_inner + cfg.n_groups * cfg.state_dim],
+                                axis=-1)
+    h, pdim, n = n_heads, cfg.head_dim, cfg.state_dim
+    rep = h // cfg.n_groups
+    xh = xin.reshape(bsz, h, pdim)
+    bh = jnp.repeat(bmat.reshape(bsz, cfg.n_groups, n), rep, axis=1)  # (B, H, N)
+    ch = jnp.repeat(cmat.reshape(bsz, cfg.n_groups, n), rep, axis=1)
+    dt = jax.nn.softplus(dt[:, 0].astype(F32) + p["dt_bias"])       # (B, H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a)                                         # (B, H)
+
+    state = cache["state"]
+    new_state = (state * decay[:, :, None, None]
+                 + jnp.einsum("bh,bhn,bhp->bhpn", dt, bh.astype(F32), xh.astype(F32)))
+    y = jnp.einsum("bhn,bhpn->bhp", ch.astype(F32), new_state)
+    y = y + xh.astype(F32) * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, d_inner)
+    y = _gated_norm(p["norm_w"], y.astype(x.dtype), z)
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"])
+    return out, {"state": new_state, "conv": new_conv}
+
+
+def ssm_cache_decl(batch: int, d_model: int, cfg: SSMConfig):
+    d_inner = cfg.expand * d_model
+    h = d_inner // cfg.head_dim
+    conv_dim = d_inner + 2 * cfg.n_groups * cfg.state_dim
+    return {
+        "state": jax.ShapeDtypeStruct((batch, h, cfg.head_dim, cfg.state_dim),
+                                      jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, conv_dim),
+                                     jnp.float32),
+    }
+
+
+def ssm_cache_axes():
+    return {"state": ("batch", "ssm_heads", None, "ssm_state"),
+            "conv": ("batch", "conv", "mlp")}

@@ -1,0 +1,19 @@
+"""Optimizer substrate: AdamW + schedules + int8 moment compression."""
+from repro.optim.adamw import (
+    AdamWConfig,
+    QTensor,
+    adamw_update,
+    clip_by_global_norm,
+    dequantize,
+    global_norm,
+    init_opt_state,
+    opt_state_shardings,
+    quantize,
+    schedule,
+)
+
+__all__ = [
+    "AdamWConfig", "QTensor", "adamw_update", "clip_by_global_norm",
+    "dequantize", "global_norm", "init_opt_state", "opt_state_shardings",
+    "quantize", "schedule",
+]

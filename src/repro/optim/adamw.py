@@ -1,0 +1,205 @@
+"""AdamW (decoupled weight decay) with:
+
+* global-norm gradient clipping,
+* linear-warmup + cosine-decay schedule,
+* optional **int8 block-quantized moments** (bitsandbytes-style, block 128
+  along the flattened last axis) — the distributed-optimization trick that
+  makes 340B-scale training fit a 16 GB/chip v5e pod: moments drop from
+  8 bytes/param (fp32 m+v) to ~2.06 bytes/param,
+* states sharded exactly like their parameters (same logical axes).
+
+Everything is pure pytree code — no optax dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+F32 = jnp.float32
+QBLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-5
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    warmup_steps: int = 10
+    total_steps: int = 1000
+    end_lr_frac: float = 0.1
+    moment_dtype: str = "fp32"  # fp32 | int8
+
+
+def schedule(cfg: AdamWConfig, step: Array) -> Array:
+    """Linear warmup then cosine decay to end_lr_frac * lr."""
+    s = step.astype(F32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.end_lr_frac + (1.0 - cfg.end_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+# ----------------------------------------------------- int8 moment storage
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """Block-quantized int8 tensor with per-block fp32 scales.
+
+    Blocks run along the LAST axis only; all leading axes keep the parent
+    parameter's layout, so the quantized moments inherit the parameter's
+    sharding dim-for-dim and (de)quantization never reshapes across a
+    sharded boundary (a flat-block layout forced XLA to replicate 500 GB+
+    fp32 temporaries on the 340B config — EXPERIMENTS.md §Perf)."""
+
+    q: Array        # int8  (..., n_blocks, QBLOCK)
+    scale: Array    # f32   (..., n_blocks, 1)
+    shape: tuple    # original shape (static)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+
+def quantize(x: Array) -> QTensor:
+    shape = x.shape
+    last = shape[-1] if shape else 1
+    pad = (-last) % QBLOCK
+    xf = x.astype(F32).reshape(shape if shape else (1,))
+    if pad:
+        widths = [(0, 0)] * (xf.ndim - 1) + [(0, pad)]
+        xf = jnp.pad(xf, widths)
+    blocked = xf.reshape(xf.shape[:-1] + (-1, QBLOCK))
+    scale = jnp.max(jnp.abs(blocked), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocked / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q=q, scale=scale, shape=shape)
+
+
+def dequantize(t: QTensor) -> Array:
+    blocked = t.q.astype(F32) * t.scale
+    flat_last = blocked.reshape(blocked.shape[:-2] + (-1,))
+    last = t.shape[-1] if t.shape else 1
+    return flat_last[..., :last].reshape(t.shape)
+
+
+def _is_q(x) -> bool:
+    return isinstance(x, QTensor)
+
+
+# ------------------------------------------------------------- optimizer
+def quantize_v(x: Array) -> QTensor:
+    """Second moments are quantized in the SQRT domain: linear int8 maps
+    zero out entries ~254x below the block max, and a zeroed v blows up
+    m/(sqrt(v)+eps).  sqrt halves the dynamic range (64k:1 in v maps to
+    254:1 in sqrt(v)), which keeps the Adam denominator stable."""
+    return quantize(jnp.sqrt(jnp.maximum(x, 0.0)))
+
+
+def dequantize_v(t: QTensor) -> Array:
+    return jnp.square(dequantize(t))
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    int8 = cfg.moment_dtype == "int8"
+
+    def zeros_m(p):
+        z = jnp.zeros(p.shape, F32)
+        return quantize(z) if int8 else z
+
+    def zeros_v(p):
+        z = jnp.zeros(p.shape, F32)
+        return quantize_v(z) if int8 else z
+
+    return {
+        "m": jax.tree.map(zeros_m, params),
+        "v": jax.tree.map(zeros_v, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(F32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(F32) * factor).astype(g.dtype), grads), gn
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(F32)
+    bc2 = 1.0 - b2 ** step.astype(F32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(F32)
+        mf = dequantize(m) if _is_q(m) else m
+        vf = dequantize_v(v) if _is_q(v) else v
+        mf = b1 * mf + (1.0 - b1) * gf
+        vf = b2 * vf + (1.0 - b2) * jnp.square(gf)
+        mh = mf / bc1
+        vh = vf / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(F32)
+        new_p = (p.astype(F32) - lr * delta).astype(p.dtype)
+        new_m = quantize(mf) if _is_q(m) else mf
+        new_v = quantize_v(vf) if _is_q(v) else vf
+        return new_p, new_m, new_v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"], is_leaf=_is_q)
+    flat_v = jax.tree.leaves(state["v"], is_leaf=_is_q)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def opt_state_shardings(abs_opt, param_specs_tree, mesh, rules):
+    """NamedShardings for the optimizer state: fp32 moments shard like their
+    parameters; int8 QTensors (flattened into aligned blocks) shard block-dim
+    over the FSDP axes."""
+    from repro.dist.sharding import is_axes_tuple, logical_to_sharding
+
+    def moment(axes, leaf):
+        if _is_q(leaf):
+            # blocks run along the last axis: q/scale inherit the parameter's
+            # axes with the last one applied to the block dim
+            q_axes = tuple(axes[:-1]) + (axes[-1] if axes else None, None)
+            return QTensor(
+                q=logical_to_sharding(leaf.q.shape, q_axes, mesh, rules),
+                scale=logical_to_sharding(leaf.scale.shape, q_axes, mesh, rules),
+                shape=leaf.shape)
+        return logical_to_sharding(leaf.shape, axes, mesh, rules)
+
+    def moments(abs_moments):
+        return jax.tree.map(moment, param_specs_tree, abs_moments,
+                            is_leaf=is_axes_tuple)
+
+    return {
+        "m": moments(abs_opt["m"]),
+        "v": moments(abs_opt["v"]),
+        "step": logical_to_sharding((), (), mesh, rules),
+    }

@@ -1,0 +1,21 @@
+"""RL substrate: verifiable envs, rollout engine, NAT-GRPO learner/trainer."""
+from repro.rl.env import (
+    EOS,
+    PAD,
+    VOCAB_SIZE,
+    CopyCalcEnv,
+    ModArithEnv,
+    decode_tokens,
+    encode,
+    make_env,
+)
+from repro.rl.learner import make_loss_fn, make_train_step
+from repro.rl.rollout import RolloutBatch, RolloutConfig, generate, rollout_group
+from repro.rl.trainer import NATGRPOTrainer, NATTrainerConfig
+
+__all__ = [
+    "EOS", "PAD", "VOCAB_SIZE", "CopyCalcEnv", "ModArithEnv", "decode_tokens",
+    "encode", "make_env", "make_loss_fn", "make_train_step", "RolloutBatch",
+    "RolloutConfig", "generate", "rollout_group", "NATGRPOTrainer",
+    "NATTrainerConfig",
+]

@@ -1,0 +1,109 @@
+"""Verifiable-reward environments (the RLVR substrate).
+
+The paper trains on math benchmarks with exact-answer verifiers; we replace
+the datasets with hermetic synthetic tasks that keep the *reward interface*
+identical (``reward(prompt, response) -> float`` on full responses) so the
+whole RLVR loop runs on CPU:
+
+* ``ModArithEnv`` — "a OP b mod m = ?": the model must emit the answer digits
+  then EOS.  Exact-match reward with optional partial credit.
+* ``CopyCalcEnv`` — the prompt embeds a key-value table and asks for the
+  value at a key ("ctx k1:v1 k2:v2 ... q k2 = ?") — a retrieval-flavoured
+  task whose answers get *longer* with difficulty, exercising NAT's
+  long-trajectory regime.
+
+Tokenizer: a tiny fixed character vocabulary shared by both tasks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+PAD, BOS, EOS = 0, 1, 2
+_CHARS = "0123456789+-*%=?:# "
+CHAR_BASE = 3
+VOCAB_SIZE = CHAR_BASE + len(_CHARS)  # 23
+_C2T = {c: CHAR_BASE + i for i, c in enumerate(_CHARS)}
+_T2C = {v: k for k, v in _C2T.items()}
+
+
+def encode(s: str) -> list:
+    return [_C2T[c] for c in s]
+
+
+def decode_tokens(toks) -> str:
+    out = []
+    for t in toks:
+        t = int(t)
+        if t == EOS:
+            break
+        out.append(_T2C.get(t, ""))
+    return "".join(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class Prompt:
+    tokens: np.ndarray  # (Tp,) int32, BOS-prefixed
+    answer: str
+
+
+class ModArithEnv:
+    """(a OP b) mod m with OP in {+, -, *}.  Difficulty scales digit count."""
+
+    name = "mod_arith"
+
+    def __init__(self, max_val: int = 99, mod: int = 97, partial_credit: bool = True):
+        self.max_val = max_val
+        self.mod = mod
+        self.partial_credit = partial_credit
+
+    def sample(self, rng: np.random.Generator) -> Prompt:
+        a = int(rng.integers(0, self.max_val + 1))
+        b = int(rng.integers(0, self.max_val + 1))
+        op = "+-*"[int(rng.integers(0, 3))]
+        val = {"+": a + b, "-": a - b, "*": a * b}[op] % self.mod
+        text = f"{a}{op}{b}%{self.mod}=?"
+        return Prompt(
+            tokens=np.array([BOS] + encode(text), np.int32), answer=str(val))
+
+    def reward(self, prompt: Prompt, response_tokens) -> float:
+        got = decode_tokens(response_tokens).strip()
+        want = prompt.answer
+        if got == want:
+            return 1.0
+        if self.partial_credit and got and want.startswith(got):
+            return 0.2 * len(got) / len(want)
+        return 0.0
+
+
+class CopyCalcEnv:
+    """Retrieval + copy: "#k:v " pairs then "?k=" — answer is that v."""
+
+    name = "copy_calc"
+
+    def __init__(self, n_pairs: int = 4, val_digits: int = 3):
+        self.n_pairs = n_pairs
+        self.val_digits = val_digits
+
+    def sample(self, rng: np.random.Generator) -> Prompt:
+        keys = rng.choice(90, size=self.n_pairs, replace=False) + 10
+        vals = rng.integers(10 ** (self.val_digits - 1), 10 ** self.val_digits,
+                            size=self.n_pairs)
+        qi = int(rng.integers(0, self.n_pairs))
+        parts = [f"#{k}:{v} " for k, v in zip(keys, vals)]
+        text = "".join(parts) + f"?{keys[qi]}="
+        return Prompt(
+            tokens=np.array([BOS] + encode(text), np.int32), answer=str(vals[qi]))
+
+    def reward(self, prompt: Prompt, response_tokens) -> float:
+        got = decode_tokens(response_tokens).strip()
+        return 1.0 if got == prompt.answer else 0.0
+
+
+ENVS = {"mod_arith": ModArithEnv, "copy_calc": CopyCalcEnv}
+
+
+def make_env(name: str, **kw):
+    return ENVS[name](**kw)

@@ -1,0 +1,170 @@
+"""Batched rollout engine on the training model.
+
+The paper's pipeline pairs an external inference engine (SGLang) with an
+FSDP learner and ships weights between them.  On TPU we colocate: rollout is
+a ``lax.scan`` decode over the SAME sharded parameters the learner updates —
+no weight transfer, no second engine (DESIGN.md §3).
+
+Features:
+* temperature sampling with per-row EOS stopping,
+* behaviour logprobs + per-token entropies collected *during* decode (the
+  forward-scoring stage of GRPO is fused into rollout),
+* APRIL-style over-provisioning: sample ``G' >= G`` rollouts per prompt and
+  keep the first G completed ones — straggler mitigation for long-tail
+  generations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, prefill
+from repro.models.config import ModelConfig
+from repro.rl.env import EOS, PAD
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RolloutConfig:
+    max_new_tokens: int = 64
+    temperature: float = 1.0
+    group_size: int = 8           # G rollouts kept per prompt
+    overprovision: float = 1.0    # G' = ceil(G * overprovision) sampled
+    eos_id: int = EOS
+    pad_id: int = PAD
+
+
+@dataclasses.dataclass
+class RolloutBatch:
+    """Learner-ready (B, T) grid: prompt + response, right-padded."""
+
+    tokens: np.ndarray          # (B, T) int32
+    response_mask: np.ndarray   # (B, T) f32 — 1 on generated tokens
+    old_logp: np.ndarray        # (B, T) f32 — behaviour logprobs
+    entropies: np.ndarray       # (B, T) f32 — behaviour entropies
+    prompt_lens: np.ndarray     # (B,)
+    response_lens: np.ndarray   # (B,)
+    completed: np.ndarray       # (B,) bool — emitted EOS within budget
+
+
+def _sample_logits(key, logits, temperature):
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("cfg", "rcfg"))
+def generate(
+    params,
+    cfg: ModelConfig,
+    rcfg: RolloutConfig,
+    prompt_tokens: Array,     # (B, Tp) PAD-right
+    prompt_lens: Array,       # (B,)
+    key: Array,
+):
+    """Returns (tokens (B, Tp+N), logp (B, N), entropy (B, N), resp_len (B,),
+    completed (B,))."""
+    b, tp = prompt_tokens.shape
+    n = rcfg.max_new_tokens
+    cache_len = tp + n
+
+    logits0, cache = prefill(params, cfg, prompt_tokens, cache_len=cache_len,
+                             prefill_len=prompt_lens)
+
+    def step(carry, _):
+        cache, cur_logits, pos, done, key = carry
+        key, k1 = jax.random.split(key)
+        nxt = _sample_logits(k1, cur_logits, rcfg.temperature)
+        logp_all = jax.nn.log_softmax(cur_logits, axis=-1)
+        logp = jnp.take_along_axis(logp_all, nxt[:, None], axis=-1)[:, 0]
+        ent = -jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1)
+        nxt = jnp.where(done, rcfg.pad_id, nxt).astype(jnp.int32)
+        new_logits, cache = decode_step(params, cfg, nxt, cache, pos)
+        new_done = done | (nxt == rcfg.eos_id)
+        emitted = ~done
+        return (cache, new_logits, pos + 1, new_done, key), (
+            nxt, logp * emitted, ent * emitted, emitted)
+
+    done0 = jnp.zeros((b,), bool)
+    carry0 = (cache, logits0, prompt_lens, done0, key)
+    _, (toks, logps, ents, emitted) = jax.lax.scan(step, carry0, None, length=n)
+    toks = jnp.moveaxis(toks, 0, 1)          # (B, N)
+    logps = jnp.moveaxis(logps, 0, 1)
+    ents = jnp.moveaxis(ents, 0, 1)
+    emitted = jnp.moveaxis(emitted, 0, 1)    # (B, N) True while generating
+
+    resp_len = jnp.sum(emitted, axis=1).astype(jnp.int32)
+    completed = jnp.any(toks == rcfg.eos_id, axis=1)
+    full = jnp.concatenate([prompt_tokens, jnp.where(emitted, toks, rcfg.pad_id)],
+                           axis=1)
+    return full, logps, ents, resp_len, completed
+
+
+def _pack_grid(prompt_tokens, prompt_lens, gen_tokens, logps, ents, resp_len):
+    """Host-side: compact each row to [prompt | response] with no gap, build
+    the learner (B, T) grid and aligned per-token arrays."""
+    b, tp = prompt_tokens.shape
+    n = gen_tokens.shape[1] - tp
+    t = tp + n
+    tokens = np.full((b, t), PAD, np.int32)
+    rmask = np.zeros((b, t), np.float32)
+    logp = np.zeros((b, t), np.float32)
+    ent = np.zeros((b, t), np.float32)
+    for i in range(b):
+        pl, rl = int(prompt_lens[i]), int(resp_len[i])
+        tokens[i, :pl] = prompt_tokens[i, :pl]
+        tokens[i, pl:pl + rl] = gen_tokens[i, tp:tp + rl]
+        rmask[i, pl:pl + rl] = 1.0
+        logp[i, pl:pl + rl] = logps[i, :rl]
+        ent[i, pl:pl + rl] = ents[i, :rl]
+    return tokens, rmask, logp, ent
+
+
+def rollout_group(
+    params,
+    cfg: ModelConfig,
+    rcfg: RolloutConfig,
+    prompt_tokens: np.ndarray,   # (P, Tp) — P distinct prompts
+    prompt_lens: np.ndarray,
+    key: Array,
+) -> RolloutBatch:
+    """Sample G' rollouts per prompt, keep G per prompt (completed first —
+    the APRIL-style quota), return the flattened (P*G, T) learner batch."""
+    p, tp = prompt_tokens.shape
+    g = rcfg.group_size
+    gp = int(np.ceil(g * rcfg.overprovision))
+    rep_toks = jnp.asarray(np.repeat(prompt_tokens, gp, axis=0))
+    rep_lens = jnp.asarray(np.repeat(prompt_lens, gp, axis=0))
+
+    full, logps, ents, resp_len, completed = generate(
+        params, cfg, rcfg, rep_toks, rep_lens, key)
+    full = np.asarray(full)
+    logps = np.asarray(logps)
+    ents = np.asarray(ents)
+    resp_len = np.asarray(resp_len)
+    completed = np.asarray(completed)
+
+    # quota selection: per prompt keep G rollouts, completed ones first,
+    # shorter stragglers preferred among the incomplete
+    keep_rows = []
+    for i in range(p):
+        rows = np.arange(i * gp, (i + 1) * gp)
+        order = np.lexsort((resp_len[rows], ~completed[rows]))
+        keep_rows.extend(rows[order[:g]])
+    keep_rows = np.array(sorted(keep_rows))
+
+    toks, rmask, logp, ent = _pack_grid(
+        np.repeat(prompt_tokens, gp, axis=0)[keep_rows],
+        np.repeat(prompt_lens, gp, axis=0)[keep_rows],
+        full[keep_rows], logps[keep_rows], ents[keep_rows],
+        resp_len[keep_rows])
+    return RolloutBatch(
+        tokens=toks, response_mask=rmask, old_logp=logp, entropies=ent,
+        prompt_lens=np.repeat(prompt_lens, gp, axis=0)[keep_rows],
+        response_lens=resp_len[keep_rows], completed=completed[keep_rows])

@@ -1,0 +1,16 @@
+"""Shared fixtures.  NOTE: no xla_force_host_platform_device_count here —
+tests and benches must see the real single CPU device; only the dry-run
+(launch/dryrun.py) overrides the device count, in its own process."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,83 @@
+"""GRPO objective components (Eqs. 1-5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grpo import (
+    GRPOConfig, clipped_surrogate, group_advantages, kl_k3, nat_grpo_loss,
+    token_entropy_from_logits, token_logprobs_from_logits,
+)
+
+
+def test_group_advantages_normalization():
+    r = jnp.array([[1.0, 0.0, 1.0, 0.0], [1.0, 1.0, 1.0, 1.0]])
+    a = np.asarray(group_advantages(r))
+    np.testing.assert_allclose(a[0].mean(), 0.0, atol=1e-6)
+    np.testing.assert_allclose(a[0].std(), 1.0, atol=1e-3)
+    # degenerate group (all equal): advantages ~ 0, no NaN
+    assert np.all(np.isfinite(a[1]))
+    np.testing.assert_allclose(a[1], 0.0, atol=1e-3)
+
+
+def test_token_logprobs_and_entropy(key):
+    logits = jax.random.normal(key, (2, 5, 11))
+    toks = jax.random.randint(key, (2, 5), 0, 11)
+    lp = token_logprobs_from_logits(logits, toks)
+    ref = np.take_along_axis(
+        np.asarray(jax.nn.log_softmax(logits, -1)),
+        np.asarray(toks)[..., None], axis=-1)[..., 0]
+    np.testing.assert_allclose(np.asarray(lp), ref, rtol=1e-5, atol=1e-6)
+    ent = token_entropy_from_logits(logits)
+    p = np.asarray(jax.nn.softmax(logits, -1))
+    ref_e = -(p * np.log(p)).sum(-1)
+    np.testing.assert_allclose(np.asarray(ent), ref_e, rtol=1e-4, atol=1e-5)
+
+
+def f(x):
+    return float(jnp.asarray(x).reshape(()))
+
+
+def test_clipping_behavior():
+    adv = jnp.array([[1.0]])
+    # ratio above 1+eps with positive advantage -> clipped
+    s_hi, clipped = clipped_surrogate(jnp.array([[1.0]]), jnp.array([[0.0]]),
+                                      adv, clip_eps=0.2)
+    np.testing.assert_allclose(f(s_hi), 1.2, rtol=1e-5)
+    assert f(clipped) == 1.0
+    # ratio inside the trust region -> untouched
+    s_in, cl2 = clipped_surrogate(jnp.array([[0.05]]), jnp.array([[0.0]]),
+                                  adv, clip_eps=0.2)
+    np.testing.assert_allclose(f(s_in), float(jnp.exp(0.05)), rtol=1e-5)
+    assert f(cl2) == 0.0
+    # negative advantage: min() takes the unclipped (more pessimistic) branch
+    s_neg, _ = clipped_surrogate(jnp.array([[1.0]]), jnp.array([[0.0]]),
+                                 -adv, clip_eps=0.2)
+    np.testing.assert_allclose(f(s_neg), -float(jnp.exp(1.0)), rtol=1e-5)
+
+
+def test_kl_k3_nonnegative(key):
+    a = jax.random.normal(key, (100,))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (100,))
+    kl = kl_k3(a, b)
+    assert np.all(np.asarray(kl) >= 0)
+    np.testing.assert_allclose(np.asarray(kl_k3(a, a)), 0.0, atol=1e-6)
+
+
+def test_kl_regularizer_enters_loss(key):
+    logp = -jnp.abs(jax.random.normal(key, (2, 8)))
+    rm = jnp.ones((2, 8))
+    adv = jnp.array([1.0, -1.0])
+    ref_logp = logp - 0.5
+    l0, _ = nat_grpo_loss(logp, logp, adv, rm, rm.sum(-1),
+                          GRPOConfig(kl_beta=0.0), ref_logp=ref_logp)
+    l1, m1 = nat_grpo_loss(logp, logp, adv, rm, rm.sum(-1),
+                           GRPOConfig(kl_beta=0.5), ref_logp=ref_logp)
+    assert float(l1) > float(l0)  # KL penalty reduces the objective
+    assert m1["kl"] > 0
+
+
+def test_dapo_clip_higher():
+    adv = jnp.array([[1.0]])
+    s, _ = clipped_surrogate(jnp.array([[1.0]]), jnp.array([[0.0]]), adv,
+                             clip_eps=0.2, clip_eps_high=0.5)
+    np.testing.assert_allclose(f(s), 1.5, rtol=1e-5)

@@ -1,0 +1,147 @@
+"""Model-zoo correctness: for EVERY mixer family, the chunked scorer matches
+full logits, and prefill+decode matches the teacher-forced forward (the
+strongest cross-check of cache semantics: rings, MLA latents, SSD states,
+RG-LRU recurrence, cross-attn K/V)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (
+    MLAConfig, MoEConfig, ModelConfig, RGLRUConfig, SSMConfig, decode_step,
+    dense_blocks, forward_hidden, full_logits, init_params, model_decl,
+    prefill, score_tokens,
+)
+
+
+def mk(name, **kw):
+    base = dict(name=name, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                d_ff=128, vocab_size=97, seq_parallel=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+CFGS = {
+    "dense": mk("dense", blocks=dense_blocks(3)),
+    "local": mk("local", blocks=((("local", "local", "attn"), 2),), window=8),
+    "moe": mk("moe", blocks=((("attn:moe",), 3),),
+              moe=MoEConfig(num_experts=4, top_k=2, num_shared=1, d_ff_expert=32)),
+    "mla": mk("mla", blocks=((("mla:dense",), 1), (("mla",), 2)),
+              mla=MLAConfig(q_lora_rank=24, kv_lora_rank=16, qk_nope_dim=16,
+                            qk_rope_dim=8, v_head_dim=16)),
+    "ssm": mk("ssm", blocks=((("ssm",), 3),), d_ff=0, n_heads=0, n_kv_heads=0,
+              head_dim=0,
+              ssm=SSMConfig(state_dim=16, head_dim=16, expand=2, conv_width=4,
+                            chunk=8)),
+    "rec": mk("rec", blocks=((("rec", "rec", "local"), 2),), window=8,
+              rglru=RGLRUConfig(lru_width=64, conv_width=4)),
+    "vlm": mk("vlm", blocks=((("attn", "attn", "xattn"), 2),),
+              num_image_tokens=5),
+    "audio": mk("audio", blocks=dense_blocks(3), num_codebooks=2,
+                vocab_size=17),
+}
+
+B, T = 2, 32
+
+
+def setup(name):
+    cfg = CFGS[name]
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, model_decl(cfg))
+    shape = (B, T, cfg.num_codebooks) if cfg.num_codebooks else (B, T)
+    toks = jax.random.randint(key, shape, 0, cfg.vocab_size)
+    img = (jax.random.normal(key, (B, 5, cfg.d_model), jnp.bfloat16)
+           if cfg.num_image_tokens else None)
+    return cfg, params, toks, img
+
+
+@pytest.mark.parametrize("name", list(CFGS))
+def test_forward_shapes_no_nan(name):
+    cfg, params, toks, img = setup(name)
+    hidden, _, aux = forward_hidden(params, cfg, toks, image_embeds=img)
+    assert hidden.shape == (B, T, cfg.d_model)
+    assert np.all(np.isfinite(np.asarray(hidden, np.float32)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("name", list(CFGS))
+def test_chunked_scoring_matches_full_logits(name):
+    cfg, params, toks, img = setup(name)
+    logp, _ = score_tokens(params, cfg, toks, image_embeds=img, vocab_chunks=1)
+    fl = full_logits(params, cfg, toks, image_embeds=img)
+    if cfg.num_codebooks:
+        ref = sum(
+            np.take_along_axis(
+                np.asarray(jax.nn.log_softmax(fl[:, :-1, k], -1)),
+                np.asarray(toks)[:, 1:, k][..., None], -1)[..., 0]
+            for k in range(cfg.num_codebooks))
+    else:
+        ref = np.take_along_axis(
+            np.asarray(jax.nn.log_softmax(fl[:, :-1], -1)),
+            np.asarray(toks)[:, 1:][..., None], -1)[..., 0]
+    np.testing.assert_allclose(np.asarray(logp)[:, 1:], ref, rtol=2e-2,
+                               atol=2e-2)
+    assert np.all(np.asarray(logp) <= 1e-4)
+
+
+@pytest.mark.parametrize("name", list(CFGS))
+def test_prefill_decode_matches_teacher_forcing(name):
+    cfg, params, toks, img = setup(name)
+    pl = jnp.full((B,), T, jnp.int32)
+    last_logits, cache = prefill(params, cfg, toks, cache_len=T + 8,
+                                 prefill_len=pl, image_embeds=img)
+    fl = full_logits(params, cfg, toks, image_embeds=img)
+    np.testing.assert_allclose(np.asarray(last_logits, np.float32),
+                               np.asarray(fl[:, -1], np.float32),
+                               rtol=5e-2, atol=5e-2)
+    if cfg.num_codebooks:
+        nxt = jax.random.randint(jax.random.PRNGKey(1),
+                                 (B, cfg.num_codebooks), 0, cfg.vocab_size)
+        toks2 = jnp.concatenate([toks, nxt[:, None, :]], axis=1)
+    else:
+        nxt = jax.random.randint(jax.random.PRNGKey(1), (B,), 0, cfg.vocab_size)
+        toks2 = jnp.concatenate([toks, nxt[:, None]], axis=1)
+    dl, _ = decode_step(params, cfg, nxt, cache, jnp.full((B,), T, jnp.int32))
+    fl2 = full_logits(params, cfg, toks2, image_embeds=img)
+    np.testing.assert_allclose(np.asarray(dl, np.float32),
+                               np.asarray(fl2[:, -1], np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_variable_prefill_lengths():
+    """Rows with different prompt lengths decode correctly (padding never
+    leaks into caches — incl. recurrent states)."""
+    for name in ("dense", "ssm", "rec", "local"):
+        cfg, params, toks, img = setup(name)
+        if cfg.num_codebooks:
+            continue
+        pl = jnp.array([T, T // 2], jnp.int32)
+        _, cache = prefill(params, cfg, toks, cache_len=T + 8, prefill_len=pl)
+        nxt = jax.random.randint(jax.random.PRNGKey(2), (B,), 0, cfg.vocab_size)
+        dl, _ = decode_step(params, cfg, nxt, cache, pl)
+        # row 1 reference: forward on its true prefix + the new token
+        short = jnp.concatenate([toks[1:2, :T // 2], nxt[1:2][:, None]], axis=1)
+        fl = full_logits(params, cfg, short)
+        np.testing.assert_allclose(
+            np.asarray(dl[1], np.float32), np.asarray(fl[0, -1], np.float32),
+            rtol=6e-2, atol=6e-2, err_msg=name)
+
+
+def test_banded_local_attention_exact():
+    """The O(T·w) banded path must equal the masked O(T^2) path."""
+    from repro.models import attention as A
+    key = jax.random.PRNGKey(3)
+    b, t, h, d, w = 2, 64, 4, 16, 16
+    q = jax.random.normal(key, (b, t, h, d), jnp.float32) * 0.3
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, t, h, d)) * 0.3
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, t, h, d)) * 0.3
+    lengths = jnp.array([64, 40])
+    scale = 1.0 / np.sqrt(d)
+    banded = A._banded_local_attention(q, k, v, w, scale, lengths)
+    mask = A.causal_window_mask(t, t, w)[None, None]
+    mask = mask & (jnp.arange(t)[None, None, None, :] < lengths[:, None, None, None])
+    full = A.sdpa(q, k, v, mask, scale)
+    valid_q = np.arange(t)[None, :] < np.asarray(lengths)[:, None]
+    np.testing.assert_allclose(
+        np.asarray(banded)[valid_q], np.asarray(full)[valid_q],
+        rtol=1e-4, atol=1e-5)

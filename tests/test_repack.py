@@ -1,0 +1,46 @@
+"""Bucket ladder / physical repacking properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.repack import (
+    bucket_ladder, expected_token_savings, pick_bucket, plan_microbatches,
+)
+
+
+def test_ladder_alignment():
+    lad = bucket_ladder(4096, num_buckets=4, align=128)
+    assert all(l % 128 == 0 for l in lad)
+    assert lad[-1] >= 4096
+    assert lad == tuple(sorted(set(lad)))
+
+
+@settings(max_examples=50, deadline=None)
+@given(max_len=st.integers(64, 8192), need=st.integers(1, 8192))
+def test_pick_bucket_covers(max_len, need):
+    lad = bucket_ladder(max_len, 4, 64)
+    b = pick_bucket(min(need, max_len), lad)
+    assert b >= min(need, max_len) or b == lad[-1]
+
+
+def test_plan_microbatches_sorted_buckets():
+    keep = np.array([100, 900, 50, 800, 120, 60, 70, 1000])
+    plans = plan_microbatches(keep, 4, bucket_ladder(1024, 4, 64))
+    # all rows covered exactly once
+    rows = np.sort(np.concatenate([p.row_order for p in plans]))
+    np.testing.assert_array_equal(rows, np.arange(8))
+    # long rows grouped first -> later plans get smaller buckets
+    lens = [p.bucket_len for p in plans]
+    assert lens == sorted(lens, reverse=True)
+    # each plan's bucket covers its rows
+    for p in plans:
+        assert keep[p.row_order].max() <= p.bucket_len
+
+
+def test_expected_token_savings_formula():
+    lengths = np.array([100, 200, 400])
+    # E[kept per row] = (C + T)/2
+    expect = ((8 + lengths) / 2).sum() / lengths.sum()
+    got = expected_token_savings(lengths, min_cut=8)
+    np.testing.assert_allclose(got, expect, rtol=1e-9)
+    assert 0.5 < got < 0.55
