@@ -1,16 +1,16 @@
 """repro: NAT (Not All Tokens are Needed) token-efficient RL framework in JAX.
 
-Layers:
-  repro.core        — NAT selectors + HT-weighted GRPO (the paper)
-  repro.models      — composable decoder model zoo (10 assigned archs)
-  repro.rl          — rollout engine, verifiable envs, NAT-GRPO trainer
+Layers (import order is strictly downward — see DESIGN.md §1):
+  repro.core        — NAT selectors + HT-weighted GRPO loss + physical repack
+  repro.dist        — logical-axis sharding rules (FSDP/TP/EP/SP, DESIGN.md §5)
+  repro.models      — composable decoder model zoo (11 assigned archs)
+  repro.optim       — AdamW + schedules, int8 moments, param-aligned sharding
+  repro.rl          — colocated rollout engine, verifiable envs, NAT-GRPO trainer
   repro.data        — synthetic prompt pipeline
-  repro.optim       — AdamW + schedules, sharded states
-  repro.dist        — logical-axis sharding rules (FSDP/TP/EP/SP)
-  repro.checkpoint  — fault-tolerant sharded checkpointing
+  repro.checkpoint  — fault-tolerant sharded checkpointing, elastic restore
   repro.kernels     — Pallas TPU kernels (prefix-aware flash attn, fused HT loss)
-  repro.configs     — architecture configs
-  repro.launch      — mesh / dry-run / training entry points
+  repro.configs     — architecture configs + smoke variants + shape grids
+  repro.launch      — mesh construction / dry-run / training entry points
 """
 
 __version__ = "1.0.0"

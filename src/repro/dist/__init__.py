@@ -1,0 +1,26 @@
+"""repro.dist — distributed layout: logical-axis sharding rules and
+best-effort PartitionSpec resolution (FSDP / TP / EP / SP profiles).
+
+See DESIGN.md §5 for the design and repro.dist.sharding for the API.
+"""
+from repro.dist.sharding import (
+    DEFAULT_RULES,
+    RULE_PROFILES,
+    ShardingRules,
+    best_effort_spec,
+    is_axes_tuple,
+    logical_to_sharding,
+    shard_constraint,
+    tree_shardings,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "RULE_PROFILES",
+    "ShardingRules",
+    "best_effort_spec",
+    "is_axes_tuple",
+    "logical_to_sharding",
+    "shard_constraint",
+    "tree_shardings",
+]

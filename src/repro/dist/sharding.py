@@ -1,0 +1,201 @@
+"""Logical-axis sharding: the single place where "what a dimension means"
+is mapped to "where it lives on the mesh" (DESIGN.md §5).
+
+Model code never mentions mesh axes.  Parameter declarations, activation
+constraints, and cache trees all carry *logical* axis names ("embed",
+"heads", "batch", ...); a ``ShardingRules`` table maps each name to a mesh
+axis (``"model"``), a tuple of mesh axes (``("pod", "data")``), or ``None``
+(replicate).  Resolution is **best-effort**:
+
+* a dimension that is not divisible by its mesh-axis extent replicates
+  instead of erroring — small/smoke configs lower on big meshes unchanged;
+* tuple rules fall back to the longest prefix whose size product divides
+  the dimension (``batch -> ("pod", "data")`` uses only ``"pod"`` when the
+  batch covers the pod axis but not pod×data);
+* mesh axes missing from the current mesh are dropped (the same rules
+  drive the 256-chip single-pod and 512-chip multi-pod layouts);
+* each mesh axis is used at most once per spec (first dimension wins).
+
+The result is always a valid ``PartitionSpec`` for the given mesh, for any
+shape — property-tested in ``tests/test_sharding.py``.
+
+``mesh`` only needs a ``.shape`` mapping (name -> size), so shape-only
+stand-ins work for tests; real entry points pass ``jax.sharding.Mesh``.
+With ``mesh=None`` every helper degrades to a no-op/replicated form, so the
+CPU trainer and the hermetic test-suite run the exact production code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# A rule maps one logical axis name to a mesh axis, a tuple of mesh axes
+# (sharded over their product, major-to-minor), or None (replicated).
+Rule = Union[str, Tuple[str, ...], None]
+
+
+# ------------------------------------------------------------------ rules
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Immutable logical-axis -> mesh-axis table.
+
+    Stored as a tuple of (name, rule) pairs so instances are hashable and
+    usable as jit static arguments.  Unknown names resolve to None
+    (replicate) — new logical axes are safe by default.
+    """
+
+    rules: Tuple[Tuple[str, Rule], ...] = ()
+
+    def get(self, name: str) -> Rule:
+        for n, r in self.rules:
+            if n == name:
+                return r
+        return None
+
+    def override(self, **kw: Rule) -> "ShardingRules":
+        """New table with the given names replaced (or appended)."""
+        out = [(n, kw.pop(n)) if n in kw else (n, r) for n, r in self.rules]
+        out.extend(kw.items())
+        return ShardingRules(rules=tuple(out))
+
+
+DEFAULT_RULES = ShardingRules(rules=(
+    # ---- data / activation axes
+    ("batch", ("pod", "data")),          # DP/FSDP batch split
+    ("act_seq", "model"),                # Megatron SP (gated by cfg.seq_parallel)
+    ("kv_seq", None),                    # long-decode override via rules_for()
+    ("image_tokens", None),
+    # embed-grad scatter accumulator + int8 moment blocks: split over every
+    # mesh axis (layers.py _sg_bwd, optim/adamw.py opt_state_shardings)
+    ("opt_blocks", ("pod", "data", "model")),
+    # ---- structural axes (never sharded)
+    ("layers", None),
+    ("codebooks", None),
+    ("conv", None),
+    ("head_dim", None),
+    ("ssm_state", None),
+    # ---- weight axes: FSDP over "data", TP over "model"
+    ("embed", "data"),
+    ("vocab", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("mlp", "model"),
+    ("experts", "model"),                # EP shares the TP axis
+    ("expert_mlp", "model"),             # active when #experts is indivisible
+    ("kv_lora", "model"),
+    ("q_lora", "model"),
+    ("lru_width", "model"),
+    ("ssm_heads", "model"),
+))
+
+# Pure FSDP: every device is a data shard; weights split along the embed
+# dim over the whole mesh, no tensor parallelism.
+_FSDP_RULES = DEFAULT_RULES.override(
+    batch=("pod", "data", "model"),
+    act_seq=None,
+    embed=("data", "model"),
+    vocab=None, heads=None, kv_heads=None, mlp=None,
+    experts=None, expert_mlp=None, kv_lora=None, q_lora=None,
+    lru_width=None, ssm_heads=None,
+)
+
+# Pure Megatron TP: weights replicated across the data axes, split over
+# "model"; batch stays on the data axes.
+_TP_RULES = DEFAULT_RULES.override(embed=None, act_seq=None)
+
+# Megatron sequence parallelism = TP + residual-stream seq split.
+_SP_RULES = _TP_RULES.override(act_seq="model")
+
+# Sub-1B hillclimb: replicated weights, every mesh axis is data-parallel.
+_SMALL_MODEL_RULES = ShardingRules(rules=(
+    ("batch", ("pod", "data", "model")),
+    ("opt_blocks", ("pod", "data", "model")),
+))
+
+RULE_PROFILES = {
+    "default": DEFAULT_RULES,
+    "fsdp": _FSDP_RULES,
+    "tensor_parallel": _TP_RULES,
+    "sequence_parallel": _SP_RULES,
+    "small_model": _SMALL_MODEL_RULES,
+}
+
+
+# -------------------------------------------------------------- resolution
+def is_axes_tuple(x: Any) -> bool:
+    """Pytree leaf predicate for logical-axes tuples (as produced by
+    ``models.params.param_specs`` / ``models.model.cache_axes``)."""
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def best_effort_spec(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+                     mesh, rules: ShardingRules = DEFAULT_RULES) -> P:
+    """Resolve logical axes to a PartitionSpec that is always valid.
+
+    Per dimension: look up the rule, drop mesh axes absent from ``mesh`` or
+    already used by an earlier dimension, then take the longest prefix of
+    the remaining axes whose size product divides the dimension.  A single
+    surviving axis becomes a bare string entry; none -> replicated.
+    """
+    assert len(shape) == len(axes), (shape, axes)
+    mesh_shape = mesh.shape
+    used: set = set()
+    entries = []
+    for dim, name in zip(shape, axes):
+        rule = rules.get(name) if name is not None else None
+        if rule is None:
+            entries.append(None)
+            continue
+        cand = (rule,) if isinstance(rule, str) else tuple(rule)
+        cand = tuple(a for a in cand if a in mesh_shape and a not in used)
+        assign, prod = [], 1
+        for a in cand:
+            if dim % (prod * mesh_shape[a]) != 0:
+                break
+            assign.append(a)
+            prod *= mesh_shape[a]
+        if not assign:
+            entries.append(None)
+            continue
+        used.update(assign)
+        entries.append(assign[0] if len(assign) == 1 else tuple(assign))
+    return P(*entries)
+
+
+def logical_to_sharding(shape, axes, mesh,
+                        rules: ShardingRules = DEFAULT_RULES):
+    """NamedSharding for one array.  ``mesh=None`` -> ``None`` (jit treats
+    an unspecified sharding as replicated on the default device), so CPU
+    code paths need no special-casing."""
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, best_effort_spec(tuple(shape), tuple(axes),
+                                                mesh, rules))
+
+
+def tree_shardings(abs_tree, axes_tree, mesh,
+                   rules: ShardingRules = DEFAULT_RULES):
+    """Shardings for a whole pytree of arrays/ShapeDtypeStructs.
+
+    ``axes_tree`` mirrors ``abs_tree`` with logical-axes tuples at the
+    leaves (``param_specs`` / ``cache_axes`` output)."""
+    return jax.tree.map(
+        lambda ax, leaf: logical_to_sharding(leaf.shape, ax, mesh, rules),
+        axes_tree, abs_tree, is_leaf=is_axes_tuple)
+
+
+def shard_constraint(x, axes, mesh=None,
+                     rules: ShardingRules = DEFAULT_RULES):
+    """``with_sharding_constraint`` through the logical-axis table.
+
+    Model code curries mesh/rules once (``models/model.py _make_shard``)
+    and annotates activations by logical name.  Without a mesh this is the
+    identity, so the same model code runs unsharded on CPU."""
+    if mesh is None:
+        return x
+    spec = best_effort_spec(tuple(x.shape), tuple(axes), mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

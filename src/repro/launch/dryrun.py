@@ -38,7 +38,7 @@ import jax               # noqa: E402
 from repro.configs import ALL_ARCHS, get_config, SHAPES, shapes_for  # noqa: E402
 from repro.configs.shapes import ShapeSpec  # noqa: E402
 from repro.launch import hlo_stats  # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.mesh import make_production_mesh, set_ambient_mesh  # noqa: E402
 from repro.launch.step_specs import make_cell, rules_for  # noqa: E402
 from repro.models.config import ModelConfig  # noqa: E402
 from repro.models.model import model_decl  # noqa: E402
@@ -51,7 +51,7 @@ def compile_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
                  rules_profile: str = "default", **kw):
     rules = rules_for(shape, profile=rules_profile)
     cell = make_cell(cfg, shape, mesh, rules, **kw)
-    jax.set_mesh(mesh)
+    set_ambient_mesh(mesh)
     t0 = time.time()
     lowered = jax.jit(
         cell.fn, in_shardings=cell.in_shardings,
@@ -218,8 +218,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
         rec["scan_cost"] = {"flops": meas["flops"], "bytes": meas["bytes"],
                             "coll": meas["collectives"]}
         print(compiled.memory_analysis())
-        ca = compiled.cost_analysis()
-        print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+        print(hlo_stats.cost_stats(compiled))
         del compiled
 
         if probes and mesh_name == "single":

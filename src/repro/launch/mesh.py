@@ -9,6 +9,15 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    try:  # jax >= 0.5: explicit Auto axis types
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    except (AttributeError, TypeError):  # older jax: Auto is the only mode
+        return jax.make_mesh(tuple(shape), tuple(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False, shape=None, axes=None):
     """Default production meshes:
         single-pod: (16, 16)   axes ("data", "model")   = 256 chips
@@ -20,12 +29,16 @@ def make_production_mesh(*, multi_pod: bool = False, shape=None, axes=None):
         shape = (2, 16, 16) if multi_pod else (16, 16)
         axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     assert axes is not None and len(axes) == len(shape)
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Trivial 1-device mesh for CPU training/tests."""
-    return jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return _make_mesh((1,), ("data",))
+
+
+def set_ambient_mesh(mesh):
+    """jax.set_mesh where available (jax >= 0.6).  On older jax the explicit
+    NamedShardings passed to jit carry the mesh, so this is optional."""
+    if hasattr(jax, "set_mesh"):
+        jax.set_mesh(mesh)

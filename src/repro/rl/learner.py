@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.grpo import GRPOConfig, nat_grpo_loss
+from repro.dist.sharding import DEFAULT_RULES
 from repro.models.config import ModelConfig
 from repro.models.model import score_tokens
 from repro.optim.adamw import AdamWConfig, adamw_update
@@ -25,6 +26,8 @@ BATCH_KEYS = ("tokens", "response_mask", "old_logp", "advantages",
 
 def make_loss_fn(model_cfg: ModelConfig, grpo_cfg: GRPOConfig, *,
                  mesh=None, rules=None, vocab_chunks: int = 8):
+    rules = rules or DEFAULT_RULES  # a mesh without rules gets the defaults
+
     def loss_fn(params, mb: dict):
         logp, aux = score_tokens(
             params, model_cfg, mb["tokens"], lengths=mb["lengths"],

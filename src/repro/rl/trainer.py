@@ -27,7 +27,9 @@ import numpy as np
 from repro.core.grpo import GRPOConfig, group_advantages
 from repro.core.repack import bucket_ladder, pick_bucket
 from repro.core.selectors import EntropySelector, make_selector
-from repro.data.pipeline import PromptPipeline
+# NOTE: repro.data sits ABOVE repro.rl in the layering (data imports
+# rl.env), so importing it at module scope would be circular whenever
+# repro.data.pipeline is the entry point.  Import lazily at use sites.
 from repro.models.config import ModelConfig
 from repro.models.params import init_params, param_specs
 from repro.models.model import model_decl
@@ -60,6 +62,8 @@ class NATGRPOTrainer:
         self.model_cfg = model_cfg
         self.tcfg = tcfg
         self.env = make_env(tcfg.env, **dict(tcfg.env_kwargs))
+        from repro.data.pipeline import PromptPipeline
+
         self.pipeline = PromptPipeline(
             self.env, batch_size=tcfg.prompts_per_step,
             max_prompt_len=tcfg.max_prompt_len, seed=tcfg.seed)
@@ -169,6 +173,8 @@ class NATGRPOTrainer:
     # ------------------------------------------------------------------ eval
     def evaluate(self, num_prompts: int = 32, temperature: float = 0.0) -> dict:
         """Greedy accuracy on fresh prompts (reward == 1 counts as correct)."""
+        from repro.data.pipeline import PromptPipeline
+
         pipe = PromptPipeline(self.env, batch_size=num_prompts,
                               max_prompt_len=self.tcfg.max_prompt_len,
                               seed=self.tcfg.seed + 10_000)

@@ -1,0 +1,72 @@
+"""Tiny deterministic stand-in for the slice of `hypothesis` this suite
+uses, so the property tests still *run* (seeded random examples, no
+shrinking) when hypothesis isn't installed.  The real library is declared
+in pyproject.toml and is used automatically when present."""
+from __future__ import annotations
+
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: rng.choice(items))
+
+
+def lists(elements: _Strategy, *, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def settings(max_examples: int = 100, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        # no functools.wraps: pytest must see a zero-arg signature, not the
+        # strategy parameters (which it would treat as fixtures)
+        def runner():
+            rng = random.Random(0)
+            # read from `runner` so `settings` composes in either order
+            for _ in range(getattr(runner, "_max_examples", 100)):
+                args = [s.example(rng) for s in arg_strategies]
+                drawn = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*args, **drawn)
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner._max_examples = getattr(fn, "_max_examples", 100)
+        return runner
+    return deco
+
+
+class _St:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)
+
+
+st = _St()

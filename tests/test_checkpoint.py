@@ -57,8 +57,9 @@ def test_elastic_restore_with_shardings(tmp_path, tree):
     the code path a restarted job with a different mesh uses."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh()
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(1, tree["params"])
     sh = jax.tree.map(lambda x: NamedSharding(mesh, P()), tree["params"])

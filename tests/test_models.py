@@ -25,7 +25,11 @@ CFGS = {
     "dense": mk("dense", blocks=dense_blocks(3)),
     "local": mk("local", blocks=((("local", "local", "attn"), 2),), window=8),
     "moe": mk("moe", blocks=((("attn:moe",), 3),),
-              moe=MoEConfig(num_experts=4, top_k=2, num_shared=1, d_ff_expert=32)),
+              # capacity_factor 4.0 => cap >= T: no capacity drops, so the
+              # teacher-forced cross-checks below are exact (drop patterns
+              # differ between the T and T+1 forwards otherwise)
+              moe=MoEConfig(num_experts=4, top_k=2, num_shared=1,
+                            d_ff_expert=32, capacity_factor=4.0)),
     "mla": mk("mla", blocks=((("mla:dense",), 1), (("mla",), 2)),
               mla=MLAConfig(q_lora_rank=24, kv_lora_rank=16, qk_nope_dim=16,
                             qk_rope_dim=8, v_head_dim=16)),

@@ -13,7 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    from hypothesis_fallback import given, settings, st
 
 from repro.core.selectors import (
     DetTruncSelector, EntropySelector, FullSelector, RPCSelector,

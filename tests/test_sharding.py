@@ -3,16 +3,29 @@ handling, mesh-absence handling (property-based)."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover — CI installs hypothesis
+    from hypothesis_fallback import given, settings, st
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.sharding import DEFAULT_RULES, ShardingRules, best_effort_spec
+from repro.dist.sharding import (
+    DEFAULT_RULES,
+    RULE_PROFILES,
+    ShardingRules,
+    best_effort_spec,
+    is_axes_tuple,
+    logical_to_sharding,
+    shard_constraint,
+    tree_shardings,
+)
 
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_host_mesh
+
+    return make_host_mesh()
 
 
 class FakeMesh:
@@ -86,3 +99,48 @@ def test_override():
     assert r.get("heads") == DEFAULT_RULES.get("heads")
     r2 = DEFAULT_RULES.override(brand_new="model")
     assert r2.get("brand_new") == "model"
+
+
+def test_rule_profiles_membership():
+    for name in ("default", "fsdp", "tensor_parallel", "sequence_parallel",
+                 "small_model"):
+        assert name in RULE_PROFILES, name
+        assert isinstance(RULE_PROFILES[name], ShardingRules)
+    assert RULE_PROFILES["default"] is DEFAULT_RULES
+    # small_model = replicated weights, full DP
+    assert RULE_PROFILES["small_model"].get("embed") is None
+    assert "model" in RULE_PROFILES["small_model"].get("batch")
+
+
+def test_logical_to_sharding_no_mesh():
+    # mesh=None -> None (jit treats unspecified as replicated); CPU paths
+    # use the exact production code with no special-casing
+    assert logical_to_sharding((8, 16), ("batch", "embed"), None) is None
+
+
+def test_logical_to_sharding_real_mesh(mesh):
+    sh = logical_to_sharding((8, 16), ("batch", None), mesh)
+    assert isinstance(sh, jax.sharding.NamedSharding)
+    assert sh.spec == P("data", None)
+    scalar = logical_to_sharding((), (), mesh)
+    assert scalar.spec == P()
+
+
+def test_shard_constraint_noop_without_mesh():
+    import jax.numpy as jnp
+
+    x = jnp.arange(12.0).reshape(3, 4)
+    assert shard_constraint(x, ("batch", "embed")) is x
+
+
+def test_tree_shardings_and_leaf_predicate(mesh):
+    import jax.numpy as jnp
+
+    abs_tree = {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32),
+                "b": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    axes = {"w": ("embed", "mlp"), "b": (None,)}
+    sh = tree_shardings(abs_tree, axes, mesh)
+    assert set(sh) == {"w", "b"}
+    assert all(isinstance(s, jax.sharding.NamedSharding) for s in sh.values())
+    assert is_axes_tuple(("embed", None)) and is_axes_tuple(())
+    assert not is_axes_tuple((1, 2))
