@@ -11,8 +11,6 @@ forward savings).
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np

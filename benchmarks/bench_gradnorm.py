@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.grpo import GRPOConfig, nat_grpo_loss
+from repro.core.grpo import nat_grpo_loss
 from repro.core.selectors import URSSelector
 
 B, T = 16, 64

@@ -13,14 +13,12 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit
 from repro.core.grpo import GRPOConfig
 from repro.core.selectors import make_selector
 from repro.models.config import ModelConfig, dense_blocks
 from repro.models import init_params, model_decl
-from repro.models.model import score_tokens
 from repro.rl.learner import make_loss_fn
 
 B, T = 8, 256

@@ -1,0 +1,129 @@
+"""Rollout token throughput: legacy fixed-shape scan vs continuous batching.
+
+The straggler problem, measured: a request mix where most completions are
+short (4-16 tokens) and a minority run to the full budget.  The legacy path
+(``rl/rollout.py::generate``) scans ``max_new_tokens`` steps for every wave
+regardless of when rows finish, so the whole batch pays for its longest row.
+The slot arena (``rl/engine.py``) retires rows at their budget and refills
+the freed slots from the queue, so total work tracks the tokens actually
+requested (DESIGN.md §3).
+
+Both paths run the same model, same slot width, same requests, post-compile.
+Emits the rollout rows of the BENCH_* perf trajectory; the acceptance gate
+is ``rollout/speedup >= 1.5`` on this mix.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.models import init_params, model_decl
+from repro.models.config import ModelConfig, dense_blocks
+from repro.rl.engine import ContinuousRolloutEngine, EngineConfig, Request
+from repro.rl.rollout import RolloutConfig, generate
+
+SLOTS = 8           # device batch width for BOTH paths
+N_REQ = 64          # requests served
+MAX_NEW = 128       # decode budget (the straggler tail length)
+TP = 24             # prompt width
+SHORT_FRAC = 0.8    # fraction of short completions
+STEPS_PER_SYNC = 8  # retire-detection latency / host-sync amortization knob
+ITERS = 2           # best-of-N wall times (CI runners are noisy)
+
+
+def _model():
+    return ModelConfig(name="bench-rollout", d_model=256, n_heads=8,
+                       n_kv_heads=4, head_dim=32, d_ff=512, vocab_size=512,
+                       blocks=dense_blocks(4), seq_parallel=False,
+                       remat_policy="none", scan_layers=False)
+
+
+def _mix(rng):
+    """Straggler-heavy budgets: SHORT_FRAC short rows, the rest full-budget."""
+    return np.array([
+        int(rng.integers(4, 17)) if rng.random() < SHORT_FRAC else MAX_NEW
+        for _ in range(N_REQ)], np.int32)
+
+
+def _legacy_time(params, cfg, rcfg, prompts, plens, key) -> float:
+    """Serve the mix in fixed-shape waves of SLOTS rows: each wave scans the
+    full budget — early finishers wait on the longest row (the legacy path
+    has no per-row early exit; that is the point being measured)."""
+    waves = [(jnp.asarray(prompts[lo:lo + SLOTS]),
+              jnp.asarray(plens[lo:lo + SLOTS]))
+             for lo in range(0, N_REQ, SLOTS)]
+    for toks, lens in waves:  # compile once outside the timed region
+        jax.block_until_ready(generate(params, cfg, rcfg, toks, lens, key))
+        break
+    best = float("inf")
+    for _ in range(ITERS):
+        t0 = time.perf_counter()
+        for toks, lens in waves:
+            jax.block_until_ready(generate(params, cfg, rcfg, toks, lens, key))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _continuous_time(params, cfg, rcfg, prompts, plens, budgets, key):
+    engine = ContinuousRolloutEngine(
+        cfg, rcfg, EngineConfig(num_slots=SLOTS, max_prompt_len=TP,
+                                steps_per_sync=STEPS_PER_SYNC))
+    reqs = [Request(uid=i, tokens=prompts[i, :plens[i]], budget=int(b))
+            for i, b in enumerate(budgets)]
+    engine.run(params, reqs[:SLOTS], key)  # compile prefill+step
+    best = float("inf")
+    for _ in range(ITERS):
+        t0 = time.perf_counter()
+        engine.run(params, reqs, key)
+        best = min(best, time.perf_counter() - t0)
+    return best, engine.stats
+
+
+def run() -> dict:
+    cfg = _model()
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, model_decl(cfg))
+    rng = np.random.default_rng(0)
+    budgets = _mix(rng)
+    plens = rng.integers(8, TP + 1, size=N_REQ).astype(np.int32)
+    prompts = np.full((N_REQ, TP), 0, np.int32)
+    for i in range(N_REQ):
+        prompts[i, :plens[i]] = rng.integers(3, cfg.vocab_size,
+                                             size=plens[i])
+    rcfg = RolloutConfig(max_new_tokens=MAX_NEW, temperature=1.0, eos_id=-1)
+
+    useful = int(budgets.sum())
+    t_leg = _legacy_time(params, cfg, rcfg, prompts, plens, key)
+    t_con, stats = _continuous_time(params, cfg, rcfg, prompts, plens,
+                                    budgets, key)
+    tput_leg = useful / t_leg
+    tput_con = useful / t_con
+    speedup = tput_con / tput_leg
+
+    print("# bench_rollout_throughput: straggler-heavy mix "
+          f"({N_REQ} requests, {SHORT_FRAC:.0%} short, budget {MAX_NEW}, "
+          f"{SLOTS} slots)")
+    print(f"{'path':12s} {'time(s)':>8s} {'tok/s':>8s} {'seq steps':>10s}")
+    leg_steps = (N_REQ + SLOTS - 1) // SLOTS * MAX_NEW
+    print(f"{'legacy':12s} {t_leg:8.2f} {tput_leg:8.1f} {leg_steps:10d}")
+    print(f"{'continuous':12s} {t_con:8.2f} {tput_con:8.1f} "
+          f"{stats['decode_steps']:10d}")
+    print(f"speedup {speedup:.2f}x  (useful tokens {useful}, "
+          f"arena refills {stats['refills']}, "
+          f"slot util {useful / max(stats['slot_substeps'], 1):.2f})")
+
+    emit("rollout/legacy", t_leg, f"tok_s={tput_leg:.1f};steps={leg_steps}")
+    emit("rollout/continuous", t_con,
+         f"tok_s={tput_con:.1f};steps={stats['decode_steps']};"
+         f"refills={stats['refills']}")
+    emit("rollout/speedup", t_leg - t_con, f"speedup={speedup:.3f}")
+    return {"speedup": speedup, "tok_s_legacy": tput_leg,
+            "tok_s_continuous": tput_con}
+
+
+if __name__ == "__main__":
+    run()

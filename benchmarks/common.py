@@ -1,10 +1,18 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities + the machine-readable results registry.
+
+Every benchmark reports through ``emit``; rows accumulate in ``RESULTS`` so
+the driver (``benchmarks/run.py --json``) can write one aggregated JSON
+artifact per CI run — the perf trajectory the repo archives (BENCH_*.json).
+"""
 from __future__ import annotations
 
 import time
 
 import jax
 import numpy as np
+
+# rows appended by emit(): {"name", "us_per_call", "derived", "metrics"}
+RESULTS: list = []
 
 
 def time_call(fn, *args, warmup: int = 1, iters: int = 5) -> float:
@@ -28,6 +36,27 @@ def ci95(xs) -> tuple:
     return float(m), float(half)
 
 
+def _parse_derived(derived: str) -> dict:
+    """'a=1.5;b=2' -> {'a': 1.5, 'b': 2.0}; non-numeric values kept as str."""
+    out = {}
+    for part in filter(None, derived.split(";")):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k.strip()] = float(v)
+        except ValueError:
+            out[k.strip()] = v.strip()
+    return out
+
+
 def emit(name: str, seconds: float, derived: str = "") -> None:
-    """CSV row the harness scrapes: name,us_per_call,derived."""
+    """CSV row the harness scrapes (``name,us_per_call,derived``), plus a
+    structured copy in ``RESULTS`` for the JSON artifact."""
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+    RESULTS.append({
+        "name": name,
+        "us_per_call": round(seconds * 1e6, 1),
+        "derived": derived,
+        "metrics": _parse_derived(derived),
+    })

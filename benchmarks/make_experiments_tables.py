@@ -7,10 +7,9 @@ dry-run JSONL artifacts.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 
-from benchmarks.roofline import fmt_s, load, markdown, table
+from benchmarks.roofline import load, markdown, table
 
 
 def dryrun_table(recs) -> str:

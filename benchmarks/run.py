@@ -2,12 +2,17 @@
 
     PYTHONPATH=src python -m benchmarks.run            # quick defaults
     PYTHONPATH=src python -m benchmarks.run --full     # paper-scale settings
+    PYTHONPATH=src python -m benchmarks.run --json BENCH_2.json
 
-Emits human tables plus CSV rows ``name,us_per_call,derived``.
+Emits human tables plus CSV rows ``name,us_per_call,derived``; with
+``--json`` the rows every bench reported through ``benchmarks.common.emit``
+are aggregated into one machine-readable file — the perf-trajectory artifact
+CI archives per PR (BENCH_*.json).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
@@ -17,7 +22,9 @@ def main():
                     help="paper-scale draws/steps/seeds (slow)")
     ap.add_argument("--only", default="",
                     help="comma list: unbiasedness,gradnorm,matrix,ratio,"
-                         "efficiency,quality,roofline")
+                         "efficiency,quality,rollout,roofline")
+    ap.add_argument("--json", default="",
+                    help="write aggregated machine-readable results here")
     args = ap.parse_args()
     want = set(filter(None, args.only.split(",")))
 
@@ -45,6 +52,10 @@ def main():
         from benchmarks import bench_efficiency
         bench_efficiency.run()
         print()
+    if on("rollout"):
+        from benchmarks import bench_rollout_throughput
+        bench_rollout_throughput.run()
+        print()
     if on("quality"):
         from benchmarks import bench_quality
         bench_quality.run(steps=150 if args.full else 40,
@@ -55,7 +66,28 @@ def main():
         import sys
         subprocess.run([sys.executable, "-m", "benchmarks.roofline"],
                        check=False)
-    print(f"\n# benchmarks done in {time.time() - t0:.0f}s")
+    elapsed = time.time() - t0
+    print(f"\n# benchmarks done in {elapsed:.0f}s")
+
+    if args.json:
+        import jax
+
+        from benchmarks.common import RESULTS
+        payload = {
+            "schema": 1,
+            "suite": sorted(want) if want else ["all"],
+            "full": bool(args.full),
+            "elapsed_s": round(elapsed, 1),
+            "env": {
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+            },
+            "rows": RESULTS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(RESULTS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

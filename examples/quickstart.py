@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    GRPOConfig, RPCSelector, full_token_loss_reference, nat_grpo_loss,
+    RPCSelector, full_token_loss_reference, nat_grpo_loss,
 )
 
 B, T = 8, 64

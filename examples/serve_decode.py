@@ -1,9 +1,14 @@
-"""Serving example: batched prefill + decode with KV caches.
+"""Serving example: continuous-batching decode on the slot arena.
 
-Loads a smoke-scale config from each attention family (dense GQA, MLA,
-sliding-window, SSM) and serves a batch of prompts: prefill builds the
-cache, then tokens stream out one decode step at a time — the same
-``serve_step`` the dry-run lowers at (arch × decode_32k/long_500k) scale.
+The same engine that backs RL rollout (``repro.rl.engine``) is the serving
+decode loop: requests carry their own token budgets, rows retire at EOS or
+budget, and freed slots are immediately re-prefilled from the queue — short
+requests never wait on long neighbours (DESIGN.md §3).
+
+Part 1 serves a straggler-heavy request mix (many short, a few long) through
+a small arena and reports slot utilization.  Part 2 keeps the legacy
+fixed-shape prefill+decode smoke across attention families (dense GQA, MLA,
+SSM) — the same ``decode_step`` the dry-run lowers at scale.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
@@ -11,23 +16,72 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_smoke
+from repro.data import PromptPipeline
 from repro.models import decode_step, init_params, model_decl, prefill
+from repro.rl import (
+    ContinuousRolloutEngine, EngineConfig, Request, RolloutConfig, make_env,
+)
 
-ARCHS = ["mistral-nemo-12b", "deepseek-v2-236b", "h2o-danube-3-4b", "mamba2-130m"]
-B, TP, NEW = 4, 32, 16
+# ---------------------------------------------------- 1. continuous serving
+ARCH = "mistral-nemo-12b"
+SLOTS, TP, MAX_NEW, N_REQ = 4, 32, 48, 16
+
+cfg = get_smoke(ARCH)
+key = jax.random.PRNGKey(0)
+params = init_params(key, model_decl(cfg))
+rng = np.random.default_rng(0)
+
+rcfg = RolloutConfig(max_new_tokens=MAX_NEW, temperature=1.0, eos_id=-1)
+engine = ContinuousRolloutEngine(
+    cfg, rcfg, EngineConfig(num_slots=SLOTS, max_prompt_len=TP,
+                            steps_per_sync=4))
+
+# prompts stream one-at-a-time from the data pipeline (the engine's unit of
+# delivery is a prompt, not a batch); straggler-heavy budget mix: 75% short
+# answers, 25% long-form
+stream = PromptPipeline(make_env("copy_calc"), batch_size=SLOTS,
+                        max_prompt_len=TP, seed=0).iter_prompts()
+budgets = [int(rng.integers(4, 12)) if rng.random() < 0.75 else MAX_NEW
+           for _ in range(N_REQ)]
+requests = []
+for i, b in enumerate(budgets):
+    _, toks, _n = next(stream)
+    requests.append(Request(uid=i, tokens=toks, budget=b))
+
+t0 = time.perf_counter()
+completions = engine.run(params, requests, key)
+t1 = time.perf_counter()
+
+st = engine.stats
+tok = st["tokens_generated"]
+print(f"{ARCH}: served {N_REQ} requests ({tok} tokens) on {SLOTS} slots "
+      f"in {t1 - t0:.2f}s incl. compile")
+print(f"  rounds={st['rounds']} refills={st['refills']} "
+      f"slot_util={tok / max(st['slot_substeps'], 1):.2f} "
+      f"(legacy fixed-shape would pay "
+      f"{(N_REQ + SLOTS - 1) // SLOTS * MAX_NEW} sequential steps; "
+      f"arena paid {st['decode_steps']})")
+for c in completions[:4]:
+    print(f"  uid={c.uid:2d} prompt={c.prompt_len:2d} "
+          f"generated={c.response_len:2d}/{budgets[c.uid]:2d}")
+
+# ----------------------------------------- 2. fixed-shape decode-step smoke
+ARCHS = ["deepseek-v2-236b", "h2o-danube-3-4b", "mamba2-130m"]
+B, TPS, NEW = 4, 32, 16
 
 for arch in ARCHS:
     cfg = get_smoke(arch)
     key = jax.random.PRNGKey(0)
     params = init_params(key, model_decl(cfg))
-    prompts = jax.random.randint(key, (B, TP), 3, cfg.vocab_size)
-    plens = jnp.full((B,), TP, jnp.int32)
+    prompts = jax.random.randint(key, (B, TPS), 3, cfg.vocab_size)
+    plens = jnp.full((B,), TPS, jnp.int32)
 
     t0 = time.perf_counter()
     logits, cache = jax.jit(
-        lambda p, t, l: prefill(p, cfg, t, cache_len=TP + NEW, prefill_len=l)
+        lambda p, t, l: prefill(p, cfg, t, cache_len=TPS + NEW, prefill_len=l)
     )(params, prompts, plens)
     t1 = time.perf_counter()
 
@@ -35,13 +89,13 @@ for arch in ARCHS:
     toks = jnp.argmax(logits, axis=-1)
     out = [toks]
     for i in range(NEW - 1):
-        pos = jnp.full((B,), TP + i, jnp.int32)
+        pos = jnp.full((B,), TPS + i, jnp.int32)
         logits, cache = step(params, toks, cache, pos)
         toks = jnp.argmax(logits, axis=-1)
         out.append(toks)
     jax.block_until_ready(out[-1])
     t2 = time.perf_counter()
-    print(f"{arch:24s} prefill({B}x{TP})={t1 - t0:6.2f}s  "
+    print(f"{arch:24s} prefill({B}x{TPS})={t1 - t0:6.2f}s  "
           f"decode {NEW} steps={t2 - t1:6.2f}s  "
           f"({B * (NEW - 1) / (t2 - t1):6.1f} tok/s incl. compile)")
 print("OK")

@@ -12,7 +12,6 @@ same code path runs on host (data pipeline) and on device (inside jit).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax

@@ -13,11 +13,11 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Callable, Optional
+from typing import Optional
 
 import numpy as np
 
-from repro.rl.env import PAD, Prompt
+from repro.rl.env import PAD
 
 
 @dataclasses.dataclass
@@ -72,6 +72,23 @@ class PromptPipeline:
 
     def __iter__(self):
         return self
+
+    def iter_prompts(self, start_step: Optional[int] = None):
+        """Stream prompts one at a time (deterministic, restart-safe).
+
+        The feed for the continuous-batching engine's request queue
+        (rl/engine.py): the engine pulls prompts as slots free up, so the
+        unit of data delivery is a prompt, not a fixed (B, Tp) grid.  Yields
+        ``(prompt, tokens, length)`` with ``tokens`` unpadded; does not
+        advance ``self.step`` (pass ``start_step`` to resume mid-stream).
+        """
+        step = self.step if start_step is None else start_step
+        while True:
+            b = self.batch_at(step)
+            for i in range(b.tokens.shape[0]):
+                n = int(b.prompt_lens[i])
+                yield b.prompts[i], b.tokens[i, :n], n
+            step += 1
 
     # -- checkpoint integration --
     def state_dict(self) -> dict:

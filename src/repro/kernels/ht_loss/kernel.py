@@ -59,7 +59,6 @@ def _fwd_kernel(h_ref, w_ref, tok_ref, logp_ref, logz_ref, ent_ref,
     # target logit if it lands in this vocab tile
     tok = tok_ref[...]                              # (bn,) int32 global ids
     local = tok - vi * block_v
-    bn = logits.shape[0]
     cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
     hit = cols == local[:, None]
     tgt_sc[...] = tgt_sc[...] + jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)

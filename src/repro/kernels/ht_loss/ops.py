@@ -10,8 +10,6 @@ quantity in NAT, so its cotangent is dropped by design).
 from __future__ import annotations
 
 import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

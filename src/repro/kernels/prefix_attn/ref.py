@@ -8,7 +8,6 @@ Semantics shared with the kernel:
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 F32 = jnp.float32

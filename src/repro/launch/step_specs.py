@@ -10,7 +10,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.shapes import ShapeSpec
 from repro.core.grpo import GRPOConfig

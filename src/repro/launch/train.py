@@ -19,13 +19,11 @@ import signal
 import sys
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_smoke
-from repro.core.grpo import GRPOConfig
 from repro.optim import AdamWConfig
-from repro.rl import NATGRPOTrainer, NATTrainerConfig, RolloutConfig, VOCAB_SIZE
+from repro.rl import NATGRPOTrainer, NATTrainerConfig, RolloutConfig
 from repro.rl.env import VOCAB_SIZE as ENV_VOCAB
 
 

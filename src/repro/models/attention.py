@@ -155,6 +155,32 @@ def _norm_pos(pos, b: int):
 
 
 # -------------------------------------------------------------- decode step
+def cache_update(cache: dict, k: Array, v: Array, pos: Array, *, window: int):
+    """Write one token's K/V into its ring slot and report key visibility.
+
+    The single cache-write primitive behind both the legacy scan decode and
+    the continuous-batching slot arena (rl/engine.py): because every write
+    lands at ``pos % S`` and visibility is recomputed from the ``pos`` plane
+    each step, a slot whose row was retired needs no cleanup beyond having
+    its rows rewritten (or invalidated to ``pos = -1``) before reuse.
+
+    cache: {"k": (B, S, KV, D), "v": ..., "pos": (B, S) int32 absolute
+    positions, -1 = empty}.  k/v: (B, 1, KV, D) roped projections of the new
+    token.  pos: (B, 1) absolute position of the new token.  Returns
+    (new_cache, valid (B, S) bool — keys visible to the new query).
+    """
+    b, s_len = cache["pos"].shape
+    slot = (pos[:, 0] % s_len).astype(jnp.int32)  # ring for local, linear else
+    bi = jnp.arange(b)
+    new_k = cache["k"].at[bi, slot].set(k[:, 0].astype(cache["k"].dtype))
+    new_v = cache["v"].at[bi, slot].set(v[:, 0].astype(cache["v"].dtype))
+    new_pos = cache["pos"].at[bi, slot].set(pos[:, 0].astype(jnp.int32))
+    valid = (new_pos >= 0) & (new_pos <= pos[:, :1])
+    if window > 0:
+        valid &= (pos[:, :1] - new_pos) < window
+    return {"k": new_k, "v": new_v, "pos": new_pos}, valid
+
+
 def decode_attention(
     p,
     x: Array,
@@ -173,7 +199,6 @@ def decode_attention(
     h = p["wq"].shape[1]
     kvh = p["wk"].shape[1]
     dh = p["wq"].shape[2]
-    s_len = cache["k"].shape[1]
     q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
     k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
     v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
@@ -181,27 +206,18 @@ def decode_attention(
     q = apply_rope(q, posb, rope_theta)
     k = apply_rope(k, posb, rope_theta)
 
-    slot = (posb[:, 0] % s_len).astype(jnp.int32)  # ring for local, linear else
-    bi = jnp.arange(b)
-    new_k = cache["k"].at[bi, slot].set(k[:, 0].astype(cache["k"].dtype))
-    new_v = cache["v"].at[bi, slot].set(v[:, 0].astype(cache["v"].dtype))
-    new_pos = cache["pos"].at[bi, slot].set(posb[:, 0].astype(jnp.int32))
-
-    valid = new_pos >= 0
-    if window > 0:
-        valid &= (posb[:, :1] - new_pos) < window
-    valid &= new_pos <= posb[:, :1]
+    new_cache, valid = cache_update(cache, k, v, posb, window=window)
 
     scale = 1.0 / jnp.sqrt(dh).astype(F32)
-    kf = repeat_kv(new_k, h // kvh)
-    vf = repeat_kv(new_v, h // kvh)
+    kf = repeat_kv(new_cache["k"], h // kvh)
+    vf = repeat_kv(new_cache["v"], h // kvh)
     s = jnp.einsum("bthd,bshd->bhts", q, kf.astype(q.dtype),
                    preferred_element_type=F32) * scale
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     pa = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhts,bshd->bthd", pa.astype(vf.dtype), vf)
     out = jnp.einsum("bthk,hkd->btd", o, p["wo"])
-    return out, {"k": new_k, "v": new_v, "pos": new_pos}
+    return out, new_cache
 
 
 def attn_cache_decl(batch: int, s_len: int, n_kv: int, head_dim: int, dtype=jnp.bfloat16):

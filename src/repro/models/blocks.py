@@ -22,7 +22,6 @@ from repro.models.config import ModelConfig
 from repro.models.layers import (
     bf16_grad, mlp_apply, mlp_decl, rmsnorm, rmsnorm_decl,
 )
-from repro.models.params import ParamDecl
 
 Array = jax.Array
 

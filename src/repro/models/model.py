@@ -298,6 +298,46 @@ def decode_step(
     return logits, new_cache
 
 
+# -------------------------------------------------------------- cache ops
+def _row_mask(mask: Array, leaf_ndim: int) -> Array:
+    """Broadcast a (B,) row mask onto a stacked cache leaf (repeat, B, ...)."""
+    return mask.reshape((1, -1) + (1,) * (leaf_ndim - 2))
+
+
+def merge_cache(new_cache, old_cache, row_mask: Array):
+    """Row-wise select between two decode-cache trees of identical layout.
+
+    ``row_mask`` (B,) bool: True rows take ``new_cache``.  Every cache leaf
+    is (repeat, batch, ...) (see ``cache_decl``), so the mask broadcasts on
+    dim 1.  New leaves are cast to the old leaf's dtype — the arena's
+    storage dtype (e.g. a bf16 KV arena) wins over the prefill compute
+    dtype.  Reference semantics for slot refill in the continuous-batching
+    engine: a retired slot's rows are replaced wholesale by a fresh prefill,
+    so no state of the previous occupant can leak.  (The engine itself uses
+    an equivalent narrow-lane scatter — prefill width R < S — for cost;
+    tests/test_engine.py pins this full-width form.)
+    """
+    return jax.tree.map(
+        lambda n, o: jnp.where(_row_mask(row_mask, n.ndim), n.astype(o.dtype), o),
+        new_cache, old_cache)
+
+
+def invalidate_cache_rows(cache, row_mask: Array):
+    """Erase the selected batch rows of a decode cache.
+
+    K/V planes and recurrent states go to zero; ``pos`` planes go to -1, the
+    "empty" marker decode attention's visibility mask respects — an
+    invalidated attention row attends to nothing even before it is
+    re-prefilled.
+    """
+    def inv(path, leaf):
+        is_pos = any(getattr(k, "key", None) == "pos" for k in path)
+        fill = jnp.asarray(-1 if is_pos else 0, leaf.dtype)
+        return jnp.where(_row_mask(row_mask, leaf.ndim), fill, leaf)
+
+    return jax.tree_util.tree_map_with_path(inv, cache)
+
+
 # -------------------------------------------------------------- cache decl
 def cache_decl(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
     out = {}

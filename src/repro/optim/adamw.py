@@ -13,8 +13,6 @@ Everything is pure pytree code — no optax dependency.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

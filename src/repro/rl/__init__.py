@@ -9,13 +9,27 @@ from repro.rl.env import (
     encode,
     make_env,
 )
+from repro.rl.engine import (
+    Completion,
+    ContinuousRolloutEngine,
+    EngineConfig,
+    Request,
+    make_engine,
+)
 from repro.rl.learner import make_loss_fn, make_train_step
-from repro.rl.rollout import RolloutBatch, RolloutConfig, generate, rollout_group
+from repro.rl.rollout import (
+    RolloutBatch,
+    RolloutConfig,
+    generate,
+    rollout_group,
+    rollout_group_continuous,
+)
 from repro.rl.trainer import NATGRPOTrainer, NATTrainerConfig
 
 __all__ = [
     "EOS", "PAD", "VOCAB_SIZE", "CopyCalcEnv", "ModArithEnv", "decode_tokens",
-    "encode", "make_env", "make_loss_fn", "make_train_step", "RolloutBatch",
-    "RolloutConfig", "generate", "rollout_group", "NATGRPOTrainer",
-    "NATTrainerConfig",
+    "encode", "make_env", "make_loss_fn", "make_train_step", "Completion",
+    "ContinuousRolloutEngine", "EngineConfig", "Request", "make_engine",
+    "RolloutBatch", "RolloutConfig", "generate", "rollout_group",
+    "rollout_group_continuous", "NATGRPOTrainer", "NATTrainerConfig",
 ]

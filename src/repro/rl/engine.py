@@ -1,0 +1,401 @@
+"""Continuous-batching rollout engine: a fixed slot arena with recycling.
+
+The legacy path (``rl/rollout.py::generate``) scans every row for the full
+``max_new_tokens`` budget, so a batch is as slow as its longest row — the
+straggler bottleneck NAT's APRIL-style over-provisioning attacks.  This
+engine keeps a fixed ``(num_slots, cache_len)`` KV arena instead: a row that
+emits EOS (or exhausts its per-request budget) is *retired* immediately, its
+outputs harvested, and its slot re-prefilled with the next queued prompt
+while the other slots keep decoding (DESIGN.md §3).
+
+One executable serves the whole run.  The jitted step takes static shapes
+only — ``(R, Tp)`` refill lanes, ``(S,)`` masks — and does:
+
+  1. deactivate cancelled slots (host-driven APRIL quota cancellation),
+  2. ``lax.cond``-gated prefill of up to R refill lanes (R < S keeps refill
+     FLOPs proportional to actual turnover, not arena width), scattered
+     row-wise into the arena at their target slots so a retired slot's
+     cache rows are fully overwritten before reuse,
+  3. a ``lax.scan`` of ``steps_per_sync`` masked decode substeps collecting
+     behaviour logprobs/entropies in flight (the GRPO scoring fusion of the
+     legacy path, preserved).
+
+Because slot state transitions are data (masks), no shape ever depends on
+which rows retire — there are zero per-batch recompiles.  The host loop only
+syncs two ``(S,)`` control planes per round; retire-detection latency is
+bounded by ``steps_per_sync`` substeps.
+
+Per-request token budgets make the engine double as the serving decode loop
+(``examples/serve_decode.py``): requests carry their own ``max_tokens``, and
+short requests stop paying for long neighbours.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Iterable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.model import (
+    cache_decl,
+    decode_step,
+    invalidate_cache_rows,
+    prefill,
+)
+
+Array = jax.Array
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static arena geometry — part of the jit cache key."""
+
+    num_slots: int = 8
+    max_prompt_len: int = 32
+    steps_per_sync: int = 4  # decode substeps per host round-trip
+    refill_lanes: int = 0  # prefill width per step; 0 -> ceil(num_slots / 4)
+
+    @property
+    def lanes(self) -> int:
+        return self.refill_lanes or max(1, -(-self.num_slots // 4))
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    uid: int
+    tokens: np.ndarray  # (Tp,) int32, unpadded prompt
+    budget: int = 0  # max new tokens; 0 -> rollout config's max_new_tokens
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    prompt_len: int
+    tokens: np.ndarray  # (response_len,) generated tokens (incl. EOS if hit)
+    logp: np.ndarray  # (response_len,) behaviour logprobs
+    entropy: np.ndarray  # (response_len,) behaviour entropies
+    completed: bool  # emitted EOS within budget
+    cancelled: bool = False  # retired early by the caller (quota met)
+
+    @property
+    def response_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+class ContinuousRolloutEngine:
+    """Slot-arena decode over the same sharded params the learner updates.
+
+    The engine is stateless between ``run`` calls; ``last_state`` keeps the
+    final device state of the most recent run for arena introspection
+    (tests assert the retire/refill invariants on it).
+    """
+
+    def __init__(self, cfg: ModelConfig, rcfg, ecfg: EngineConfig):
+        if cfg.num_codebooks:
+            raise NotImplementedError("engine serves text LMs (no codebooks)")
+        if ecfg.lanes > ecfg.num_slots:
+            raise ValueError("refill_lanes cannot exceed num_slots")
+        self.cfg = cfg
+        self.rcfg = rcfg
+        self.ecfg = ecfg
+        self.cache_len = ecfg.max_prompt_len + rcfg.max_new_tokens
+        # donate the state: the arena (the big buffer) is updated in place
+        # instead of copied every round
+        self._step = jax.jit(self._make_step(), donate_argnums=(1,))
+        self._cache_tmpl = None  # abstract cache template, memoized per run
+        self.last_state: Optional[dict] = None
+        self.stats: dict = {}
+
+    # ------------------------------------------------------------ device side
+    def _init_state(self, params, key: Array) -> dict:
+        """Zeroed arena.  The cache template comes from an abstract prefill
+        so storage dtype matches what refills actually produce (bit-exact
+        logprob parity with the legacy path under f32 params), with
+        ``cache_decl`` shapes as the contract."""
+        s = self.ecfg.num_slots
+        n = self.rcfg.max_new_tokens
+        if self._cache_tmpl is None:  # abstract trace once per engine
+            tmpl = jax.eval_shape(
+                lambda p: prefill(
+                    p, self.cfg,
+                    jnp.zeros((s, self.ecfg.max_prompt_len), jnp.int32),
+                    cache_len=self.cache_len,
+                    prefill_len=jnp.ones((s,), jnp.int32))[1],
+                params)
+            decl = cache_decl(self.cfg, s, self.cache_len)
+
+            def check(a, b):
+                assert a.shape == b.shape, \
+                    f"cache shape drift {a.shape}!={b.shape}"
+
+            jax.tree.map(check, tmpl, decl)
+            self._cache_tmpl = tmpl
+        cache = jax.tree.map(lambda d: jnp.zeros(d.shape, d.dtype),
+                             self._cache_tmpl)
+        cache = invalidate_cache_rows(cache, jnp.ones((s,), bool))
+        return {
+            "cache": cache,
+            "logits": jnp.zeros((s, self.cfg.vocab_size), F32),
+            "pos": jnp.zeros((s,), jnp.int32),
+            "prompt_len": jnp.zeros((s,), jnp.int32),
+            "n_gen": jnp.zeros((s,), jnp.int32),
+            "budget": jnp.zeros((s,), jnp.int32),
+            "active": jnp.zeros((s,), bool),
+            "done": jnp.zeros((s,), bool),
+            "eos_hit": jnp.zeros((s,), bool),
+            # copy: the state is donated to the step, and the caller's key
+            # must survive this run
+            "key": jnp.array(key),
+            "out_tok": jnp.full((s, n), self.rcfg.pad_id, jnp.int32),
+            "out_logp": jnp.zeros((s, n), F32),
+            "out_ent": jnp.zeros((s, n), F32),
+        }
+
+    def _make_step(self):
+        cfg, rcfg, ecfg = self.cfg, self.rcfg, self.ecfg
+        s_slots = ecfg.num_slots
+        n = rcfg.max_new_tokens
+        cache_len = self.cache_len
+
+        def step(params, state, refill_toks, refill_lens, refill_budgets,
+                 refill_slots, refill_mask, cancel_mask):
+            # refill_* are (R,) lanes; refill_slots names each lane's target
+            # arena slot; masked-out lanes scatter nowhere (index S, dropped).
+            st = dict(state)
+            # 1. cancelled slots become free (harvest already happened on host)
+            st["active"] = st["active"] & ~cancel_mask
+            st["done"] = st["done"] & ~cancel_mask
+
+            # 2. refill: R-wide prefill scattered into the arena at the
+            # target slots.  lax.cond skips it on pure-decode rounds, and
+            # R < S keeps prefill cost on turnover, not arena width.
+            tgt = jnp.where(refill_mask, refill_slots, s_slots).astype(jnp.int32)
+
+            def scat_rows(arena, rows):
+                # arena (repeat, S, ...) <- rows (repeat, R, ...) at dim 1
+                return arena.at[:, tgt].set(rows.astype(arena.dtype),
+                                            mode="drop")
+
+            def scat_plane(plane, vals):
+                return plane.at[tgt].set(vals.astype(plane.dtype), mode="drop")
+
+            def do_refill(st):
+                st = dict(st)
+                logits0, fresh = prefill(
+                    params, cfg, refill_toks, cache_len=cache_len,
+                    prefill_len=jnp.maximum(refill_lens, 1))
+                st["cache"] = jax.tree.map(scat_rows, st["cache"], fresh)
+                st["logits"] = st["logits"].at[tgt].set(
+                    logits0.astype(F32), mode="drop")
+                st["pos"] = scat_plane(st["pos"], refill_lens)
+                st["prompt_len"] = scat_plane(st["prompt_len"], refill_lens)
+                st["n_gen"] = scat_plane(st["n_gen"], jnp.zeros_like(refill_lens))
+                st["budget"] = scat_plane(st["budget"], refill_budgets)
+                ones = jnp.ones_like(refill_mask)
+                st["active"] = scat_plane(st["active"], ones)
+                st["done"] = scat_plane(st["done"], ~ones)
+                st["eos_hit"] = scat_plane(st["eos_hit"], ~ones)
+                r = refill_mask.shape[0]
+                st["out_tok"] = st["out_tok"].at[tgt].set(
+                    jnp.full((r, n), rcfg.pad_id, st["out_tok"].dtype),
+                    mode="drop")
+                st["out_logp"] = st["out_logp"].at[tgt].set(
+                    jnp.zeros((r, n), F32), mode="drop")
+                st["out_ent"] = st["out_ent"].at[tgt].set(
+                    jnp.zeros((r, n), F32), mode="drop")
+                return st
+
+            st = jax.lax.cond(refill_mask.any(), do_refill, lambda s: dict(s), st)
+
+            # 3. masked decode substeps: retired/empty slots ride along (the
+            # shapes are static) but emit nothing and hold their state.
+            def substep(st, _):
+                st = dict(st)
+                live = st["active"] & ~st["done"]
+                key, k1 = jax.random.split(st["key"])
+                if rcfg.temperature == 0.0:
+                    nxt = jnp.argmax(st["logits"], axis=-1)
+                else:
+                    nxt = jax.random.categorical(
+                        k1, st["logits"] / rcfg.temperature, axis=-1)
+                logp_all = jax.nn.log_softmax(st["logits"], axis=-1)
+                logp = jnp.take_along_axis(logp_all, nxt[:, None], axis=-1)[:, 0]
+                ent = -jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1)
+                nxt = jnp.where(live, nxt, rcfg.pad_id).astype(jnp.int32)
+
+                bi = jnp.arange(s_slots)
+                idx = jnp.minimum(st["n_gen"], n - 1)
+                st["out_tok"] = st["out_tok"].at[bi, idx].set(
+                    jnp.where(live, nxt, st["out_tok"][bi, idx]))
+                st["out_logp"] = st["out_logp"].at[bi, idx].set(
+                    jnp.where(live, logp, st["out_logp"][bi, idx]))
+                st["out_ent"] = st["out_ent"].at[bi, idx].set(
+                    jnp.where(live, ent, st["out_ent"][bi, idx]))
+
+                new_logits, new_cache = decode_step(
+                    params, cfg, nxt, st["cache"], st["pos"])
+                st["cache"] = new_cache
+                st["logits"] = jnp.where(
+                    live[:, None], new_logits.astype(F32), st["logits"])
+                st["pos"] = st["pos"] + live
+                st["n_gen"] = st["n_gen"] + live
+                hit_eos = live & (nxt == rcfg.eos_id)
+                st["eos_hit"] = st["eos_hit"] | hit_eos
+                st["done"] = st["done"] | (
+                    live & (hit_eos | (st["n_gen"] >= st["budget"])))
+                st["key"] = key
+                return st, None
+
+            st, _ = jax.lax.scan(substep, st, None, length=ecfg.steps_per_sync)
+            return st
+
+        return step
+
+    # -------------------------------------------------------------- host side
+    def run(
+        self,
+        params,
+        requests: Sequence[Request],
+        key: Array,
+        *,
+        on_finish: Optional[Callable[[Completion], Optional[Iterable[int]]]]
+        = None,
+    ) -> list:
+        """Serve ``requests`` through the arena; returns Completions in
+        submission order.  ``on_finish(completion)`` fires as each row
+        retires and may return uids to cancel (queued uids are dropped,
+        in-flight uids are retired early with ``cancelled=True``)."""
+        rcfg, ecfg = self.rcfg, self.ecfg
+        s_slots, tp = ecfg.num_slots, ecfg.max_prompt_len
+        for r in requests:
+            if len(r.tokens) > tp:
+                raise ValueError(f"request {r.uid}: prompt longer than {tp}")
+            if r.budget > rcfg.max_new_tokens:
+                raise ValueError(f"request {r.uid}: budget > max_new_tokens")
+
+        queue = collections.deque(requests)
+        slot_uid: list = [None] * s_slots
+        out: dict = {}
+        to_cancel: set = set()
+        state = self._init_state(params, key)
+        stats = {"rounds": 0, "decode_steps": 0, "refills": 0,
+                 "tokens_generated": 0, "cancelled": 0,
+                 "slot_substeps": 0}
+        self.stats = stats
+
+        def harvest(s: int, host, cancelled: bool) -> Completion:
+            uid = slot_uid[s]
+            rl = int(host["n_gen"][s])
+            comp = Completion(
+                uid=uid,
+                prompt_len=int(host["prompt_len"][s]),
+                tokens=host["out_tok"][s, :rl].copy(),
+                logp=host["out_logp"][s, :rl].copy(),
+                entropy=host["out_ent"][s, :rl].copy(),
+                completed=bool(host["eos_hit"][s]) and not cancelled,
+                cancelled=cancelled)
+            out[uid] = comp
+            slot_uid[s] = None
+            stats["tokens_generated"] += rl
+            if cancelled:
+                stats["cancelled"] += 1
+            if on_finish is not None:
+                to_cancel.update(on_finish(comp) or ())
+            return comp
+
+        while True:
+            # -- sync the two control planes; fetch buffers only on retirement
+            active = np.asarray(state["active"])
+            done = np.asarray(state["done"])
+            retired = [s for s in range(s_slots)
+                       if slot_uid[s] is not None and active[s] and done[s]]
+            cancel_mask = np.zeros((s_slots,), bool)
+            host = None
+            need_fetch = bool(retired) or any(
+                u in to_cancel for u in slot_uid if u is not None)
+            if need_fetch:
+                host = {k: np.asarray(state[k]) for k in
+                        ("n_gen", "prompt_len", "eos_hit",
+                         "out_tok", "out_logp", "out_ent")}
+            # snapshot cancel state first: rows in `retired` finished on
+            # their own (EOS/budget), so cancellations issued by on_finish
+            # callbacks *during* this harvest loop must not relabel them
+            was_cancelled = {s: slot_uid[s] in to_cancel for s in retired}
+            for s in retired:
+                harvest(s, host, cancelled=was_cancelled[s])
+                cancel_mask[s] = True  # clears active/done on device
+            # quota-cancel rows still decoding (including cancellations the
+            # on_finish callbacks just issued): retire them as partials now
+            if host is not None:
+                for s in range(s_slots):
+                    if slot_uid[s] is not None and slot_uid[s] in to_cancel:
+                        harvest(s, host, cancelled=True)
+                        cancel_mask[s] = True
+
+            # -- refill free slots from the queue (skipping cancelled uids),
+            # at most R lanes per round
+            lanes = ecfg.lanes
+            refill_mask = np.zeros((lanes,), bool)
+            refill_toks = np.full((lanes, tp), rcfg.pad_id, np.int32)
+            refill_lens = np.ones((lanes,), np.int32)
+            refill_budgets = np.zeros((lanes,), np.int32)
+            refill_slots = np.zeros((lanes,), np.int32)
+            lane = 0
+            for s in range(s_slots):
+                if slot_uid[s] is not None or lane >= lanes:
+                    continue
+                while queue and queue[0].uid in to_cancel:
+                    r = queue.popleft()
+                    comp = Completion(
+                        uid=r.uid, prompt_len=len(r.tokens),
+                        tokens=np.zeros((0,), np.int32),
+                        logp=np.zeros((0,), np.float32),
+                        entropy=np.zeros((0,), np.float32),
+                        completed=False, cancelled=True)
+                    out[r.uid] = comp
+                    stats["cancelled"] += 1
+                    # the contract fires on_finish for every request,
+                    # including ones cancelled before they were placed
+                    if on_finish is not None:
+                        to_cancel.update(on_finish(comp) or ())
+                if not queue:
+                    break
+                r = queue.popleft()
+                pl = len(r.tokens)
+                refill_toks[lane, :pl] = r.tokens
+                refill_lens[lane] = pl
+                refill_budgets[lane] = r.budget or rcfg.max_new_tokens
+                refill_slots[lane] = s
+                refill_mask[lane] = True
+                slot_uid[s] = r.uid
+                lane += 1
+
+            if not refill_mask.any() and all(u is None for u in slot_uid):
+                break
+
+            state = self._step(
+                params, state, jnp.asarray(refill_toks),
+                jnp.asarray(refill_lens), jnp.asarray(refill_budgets),
+                jnp.asarray(refill_slots), jnp.asarray(refill_mask),
+                jnp.asarray(cancel_mask))
+            stats["rounds"] += 1
+            stats["decode_steps"] += ecfg.steps_per_sync
+            stats["slot_substeps"] += ecfg.steps_per_sync * s_slots
+            stats["refills"] += int(refill_mask.sum())
+
+        self.last_state = state
+        return [out[r.uid] for r in requests if r.uid in out]
+
+
+def make_engine(cfg: ModelConfig, rcfg, *, num_slots: int,
+                max_prompt_len: int, steps_per_sync: int = 4,
+                ) -> ContinuousRolloutEngine:
+    return ContinuousRolloutEngine(
+        cfg, rcfg, EngineConfig(num_slots=num_slots,
+                                max_prompt_len=max_prompt_len,
+                                steps_per_sync=steps_per_sync))

@@ -17,8 +17,6 @@ Tokenizer: a tiny fixed character vocabulary shared by both tasks.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
-
 import numpy as np
 
 PAD, BOS, EOS = 0, 1, 2

@@ -6,9 +6,6 @@ mesh) so what we validate hermetically is what we lower at scale.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -107,7 +104,6 @@ def make_train_step(
                 grads, metrics = carry
             else:
                 (grads, metrics), _ = jax.lax.scan(acc, (g0, metric0), mbs)
-            loss = metrics["loss"]
 
         new_params, new_opt, opt_metrics = adamw_update(
             params, grads, opt_state, opt_cfg)

@@ -1,17 +1,26 @@
-"""Batched rollout engine on the training model.
+"""Rollout paths on the training model: legacy fixed-shape scan + the
+continuous-batching group front-end.
 
 The paper's pipeline pairs an external inference engine (SGLang) with an
-FSDP learner and ships weights between them.  On TPU we colocate: rollout is
-a ``lax.scan`` decode over the SAME sharded parameters the learner updates —
-no weight transfer, no second engine (DESIGN.md §3).
+FSDP learner and ships weights between them.  On TPU we colocate: rollout
+decodes over the SAME sharded parameters the learner updates — no weight
+transfer, no second engine (DESIGN.md §3).
 
-Features:
-* temperature sampling with per-row EOS stopping,
-* behaviour logprobs + per-token entropies collected *during* decode (the
-  forward-scoring stage of GRPO is fused into rollout),
-* APRIL-style over-provisioning: sample ``G' >= G`` rollouts per prompt and
-  keep the first G completed ones — straggler mitigation for long-tail
-  generations.
+Two paths produce the identical learner-batch contract (``RolloutBatch``):
+
+* ``rollout_group`` — the legacy fixed-shape ``lax.scan``: every row pays
+  the full ``max_new_tokens`` budget even after emitting EOS.  Kept as the
+  parity reference and for single-wave eval.
+* ``rollout_group_continuous`` — the slot-arena engine (``rl/engine.py``):
+  rows retire at EOS and their slots are re-prefilled with queued prompts,
+  so over-provisioned groups (G' > G) cost only the tokens actually
+  generated, and a prompt's stragglers are cancelled the moment its G-quota
+  of finished rollouts is met (the APRIL discipline made physical).
+
+Both collect behaviour logprobs + per-token entropies *during* decode (the
+forward-scoring stage of GRPO is fused into rollout) and report a ``stats``
+dict (tokens_generated / decode_steps / tokens_budget / ...) so the token
+cost of rollout is measurable per step.
 """
 from __future__ import annotations
 
@@ -51,6 +60,7 @@ class RolloutBatch:
     prompt_lens: np.ndarray     # (B,)
     response_lens: np.ndarray   # (B,)
     completed: np.ndarray       # (B,) bool — emitted EOS within budget
+    stats: Optional[dict] = None  # rollout cost: tokens_generated, steps, ...
 
 
 def _sample_logits(key, logits, temperature):
@@ -106,6 +116,18 @@ def generate(
     return full, logps, ents, resp_len, completed
 
 
+def _quota_keep_rows(resp_len, completed, p, g, gp):
+    """APRIL quota selection, shared by both rollout paths: per prompt keep
+    G of its G' rows — completed ones first, shorter stragglers preferred
+    among the incomplete — returned sorted (groups stay contiguous)."""
+    keep_rows = []
+    for i in range(p):
+        rows = np.arange(i * gp, (i + 1) * gp)
+        order = np.lexsort((resp_len[rows], ~completed[rows]))
+        keep_rows.extend(rows[order[:g]])
+    return np.array(sorted(keep_rows))
+
+
 def _pack_grid(prompt_tokens, prompt_lens, gen_tokens, logps, ents, resp_len):
     """Host-side: compact each row to [prompt | response] with no gap, build
     the learner (B, T) grid and aligned per-token arrays."""
@@ -149,22 +171,118 @@ def rollout_group(
     ents = np.asarray(ents)
     resp_len = np.asarray(resp_len)
     completed = np.asarray(completed)
-
-    # quota selection: per prompt keep G rollouts, completed ones first,
-    # shorter stragglers preferred among the incomplete
-    keep_rows = []
-    for i in range(p):
-        rows = np.arange(i * gp, (i + 1) * gp)
-        order = np.lexsort((resp_len[rows], ~completed[rows]))
-        keep_rows.extend(rows[order[:g]])
-    keep_rows = np.array(sorted(keep_rows))
+    keep_rows = _quota_keep_rows(resp_len, completed, p, g, gp)
 
     toks, rmask, logp, ent = _pack_grid(
         np.repeat(prompt_tokens, gp, axis=0)[keep_rows],
         np.repeat(prompt_lens, gp, axis=0)[keep_rows],
         full[keep_rows], logps[keep_rows], ents[keep_rows],
         resp_len[keep_rows])
+    stats = {
+        # every sampled row pays the full scan in the legacy path
+        "tokens_generated": int(resp_len.sum()),
+        "decode_steps": rcfg.max_new_tokens,
+        "slot_substeps": int(p * gp * rcfg.max_new_tokens),
+        "tokens_budget": int(p * gp * rcfg.max_new_tokens),
+        "refills": int(p * gp),
+        "cancelled": 0,
+    }
     return RolloutBatch(
         tokens=toks, response_mask=rmask, old_logp=logp, entropies=ent,
         prompt_lens=np.repeat(prompt_lens, gp, axis=0)[keep_rows],
-        response_lens=resp_len[keep_rows], completed=completed[keep_rows])
+        response_lens=resp_len[keep_rows], completed=completed[keep_rows],
+        stats=stats)
+
+
+# ----------------------------------------------------- continuous batching
+def _grid_from_completions(comps, prompt_tokens, prompt_lens, t):
+    """Build the learner (B, T) grid from engine Completions (same contract
+    as ``_pack_grid``: [prompt | response], right-padded, aligned arrays)."""
+    b = len(comps)
+    tokens = np.full((b, t), PAD, np.int32)
+    rmask = np.zeros((b, t), np.float32)
+    logp = np.zeros((b, t), np.float32)
+    ent = np.zeros((b, t), np.float32)
+    resp_len = np.zeros((b,), np.int32)
+    completed = np.zeros((b,), bool)
+    for i, c in enumerate(comps):
+        pl, rl = int(prompt_lens[i]), c.response_len
+        tokens[i, :pl] = prompt_tokens[i, :pl]
+        tokens[i, pl:pl + rl] = c.tokens
+        rmask[i, pl:pl + rl] = 1.0
+        logp[i, pl:pl + rl] = c.logp
+        ent[i, pl:pl + rl] = c.entropy
+        resp_len[i] = rl
+        completed[i] = c.completed
+    return tokens, rmask, logp, ent, resp_len, completed
+
+
+def rollout_group_continuous(
+    params,
+    cfg: ModelConfig,
+    rcfg: RolloutConfig,
+    prompt_tokens: np.ndarray,   # (P, Tp) — P distinct prompts
+    prompt_lens: np.ndarray,
+    key: Array,
+    *,
+    engine=None,
+    num_slots: int = 0,          # 0 -> P * G (recycling absorbs G' - G)
+    steps_per_sync: int = 4,
+    cancel_on_quota: bool = True,
+) -> RolloutBatch:
+    """``rollout_group`` semantics on the slot-arena engine.
+
+    All G' = ceil(G * overprovision) rollouts per prompt are queued as
+    independent requests; the arena serves them through ``num_slots`` slots
+    with retire/refill recycling.  The moment a prompt has G *completed*
+    rollouts, its remaining requests are cancelled (queued ones never start,
+    in-flight ones retire at the next sync) — over-provisioning then costs
+    only the tokens actually generated, not G' full budgets.
+    """
+    from repro.rl.engine import ContinuousRolloutEngine, EngineConfig, Request
+
+    p, tp = prompt_tokens.shape
+    g = rcfg.group_size
+    gp = int(np.ceil(g * rcfg.overprovision))
+    if engine is None:
+        engine = ContinuousRolloutEngine(
+            cfg, rcfg, EngineConfig(num_slots=num_slots or p * g,
+                                    max_prompt_len=tp,
+                                    steps_per_sync=steps_per_sync))
+    requests = [
+        Request(uid=i * gp + j,
+                tokens=np.asarray(prompt_tokens[i, :int(prompt_lens[i])]),
+                budget=rcfg.max_new_tokens)
+        for i in range(p) for j in range(gp)]
+
+    n_completed = np.zeros((p,), np.int32)
+    finished: set = set()
+
+    def on_finish(c):
+        finished.add(c.uid)
+        pi = c.uid // gp
+        if not c.completed:
+            return None
+        n_completed[pi] += 1
+        if cancel_on_quota and n_completed[pi] == g:
+            return [pi * gp + j for j in range(gp)
+                    if pi * gp + j not in finished]
+        return None
+
+    comps = engine.run(params, requests, key, on_finish=on_finish)
+
+    resp_len_all = np.array([c.response_len for c in comps])
+    completed_all = np.array([c.completed for c in comps])
+    keep_rows = _quota_keep_rows(resp_len_all, completed_all, p, g, gp)
+
+    rep_prompts = np.repeat(prompt_tokens, gp, axis=0)[keep_rows]
+    rep_lens = np.repeat(prompt_lens, gp, axis=0)[keep_rows]
+    toks, rmask, logp, ent, resp_len, completed = _grid_from_completions(
+        [comps[r] for r in keep_rows], rep_prompts, rep_lens,
+        tp + rcfg.max_new_tokens)
+    stats = dict(engine.stats)
+    stats["tokens_budget"] = int(p * gp * rcfg.max_new_tokens)
+    return RolloutBatch(
+        tokens=toks, response_mask=rmask, old_logp=logp, entropies=ent,
+        prompt_lens=rep_lens, response_lens=resp_len, completed=completed,
+        stats=stats)

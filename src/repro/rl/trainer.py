@@ -17,9 +17,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -31,11 +28,13 @@ from repro.core.selectors import EntropySelector, make_selector
 # rl.env), so importing it at module scope would be circular whenever
 # repro.data.pipeline is the entry point.  Import lazily at use sites.
 from repro.models.config import ModelConfig
-from repro.models.params import init_params, param_specs
+from repro.models.params import init_params
 from repro.models.model import model_decl
 from repro.optim.adamw import AdamWConfig, init_opt_state
 from repro.rl.learner import make_train_step
-from repro.rl.rollout import RolloutConfig, rollout_group
+from repro.rl.rollout import (
+    RolloutConfig, rollout_group, rollout_group_continuous,
+)
 from repro.rl.env import make_env
 
 
@@ -48,6 +47,9 @@ class NATTrainerConfig:
     prompts_per_step: int = 8        # P
     max_prompt_len: int = 24
     rollout: RolloutConfig = RolloutConfig()
+    rollout_engine: str = "continuous"  # continuous (slot arena) | legacy
+    num_slots: int = 0               # arena slots; 0 -> P * G
+    steps_per_sync: int = 4          # engine decode substeps per host sync
     grpo: GRPOConfig = GRPOConfig()
     adamw: AdamWConfig = AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=500)
     bucket_align: int = 16
@@ -74,6 +76,21 @@ class NATGRPOTrainer:
         self.params = params
         self.opt_state = init_opt_state(params, tcfg.adamw)
         self.selector = make_selector(tcfg.selector, **dict(tcfg.selector_kwargs))
+        if tcfg.rollout_engine not in ("continuous", "legacy"):
+            raise ValueError(f"unknown rollout_engine {tcfg.rollout_engine!r}")
+        if tcfg.rollout_engine == "continuous" and not model_cfg.num_codebooks:
+            from repro.rl.engine import ContinuousRolloutEngine, EngineConfig
+
+            self.engine = ContinuousRolloutEngine(
+                model_cfg, tcfg.rollout, EngineConfig(
+                    num_slots=tcfg.num_slots
+                    or tcfg.prompts_per_step * tcfg.rollout.group_size,
+                    max_prompt_len=tcfg.max_prompt_len,
+                    steps_per_sync=tcfg.steps_per_sync))
+        else:
+            # legacy scan — explicit opt-out, or codebook models (audio),
+            # which the slot arena does not serve yet
+            self.engine = None
         self.step_count = 0
         self._train_step = jax.jit(make_train_step(
             model_cfg, tcfg.grpo, tcfg.adamw, mesh=mesh, rules=rules,
@@ -89,8 +106,13 @@ class NATGRPOTrainer:
         pb = next(self.pipeline)
         self.key, k_roll, k_sel = jax.random.split(self.key, 3)
 
-        rb = rollout_group(self.params, self.model_cfg, tcfg.rollout,
-                           pb.tokens, pb.prompt_lens, k_roll)
+        if self.engine is not None:
+            rb = rollout_group_continuous(
+                self.params, self.model_cfg, tcfg.rollout,
+                pb.tokens, pb.prompt_lens, k_roll, engine=self.engine)
+        else:
+            rb = rollout_group(self.params, self.model_cfg, tcfg.rollout,
+                               pb.tokens, pb.prompt_lens, k_roll)
         t_roll = time.perf_counter()
 
         # rewards on FULL responses (never affected by token selection)
@@ -125,7 +147,6 @@ class NATGRPOTrainer:
         }
 
         # physical prefix truncation (RPC / Det-Trunc): slice to bucket
-        selected_ratio_target = None
         if tcfg.repack and sel.prefix_structured:
             keep_total = rb.prompt_lens + np.minimum(keep_len, rb.response_lens)
             t_new = pick_bucket(int(keep_total.max()), self.ladder)
@@ -141,6 +162,7 @@ class NATGRPOTrainer:
         metrics = {k: float(v) for k, v in metrics.items()}
         t_end = time.perf_counter()
 
+        rstats = rb.stats or {}
         metrics.update(
             reward_mean=float(rewards.mean()),
             reward_max=float(rewards.max(axis=1).mean()),
@@ -148,6 +170,15 @@ class NATGRPOTrainer:
             resp_len_mean=float(rb.response_lens.mean()),
             learner_tokens=int(batch["tokens"].shape[0] * batch["tokens"].shape[1]),
             bucket_len=int(batch["tokens"].shape[1]),
+            # rollout token cost: with the slot arena, over-provisioned groups
+            # pay for generated tokens, not G' full budgets (ISSUE 2)
+            tokens_generated=int(rstats.get("tokens_generated", 0)),
+            tokens_budget=int(rstats.get("tokens_budget", 0)),
+            rollout_decode_steps=int(rstats.get("decode_steps", 0)),
+            rollout_cancelled=int(rstats.get("cancelled", 0)),
+            rollout_utilization=(
+                rstats.get("tokens_generated", 0)
+                / max(rstats.get("slot_substeps", 0), 1)),
             entropy_behavior=float(
                 (rb.entropies * rb.response_mask).sum()
                 / max(rb.response_mask.sum(), 1)),
@@ -172,7 +203,12 @@ class NATGRPOTrainer:
 
     # ------------------------------------------------------------------ eval
     def evaluate(self, num_prompts: int = 32, temperature: float = 0.0) -> dict:
-        """Greedy accuracy on fresh prompts (reward == 1 counts as correct)."""
+        """Greedy accuracy on fresh prompts (reward == 1 counts as correct).
+
+        Uses the legacy single-wave path: eval is G=1 with no
+        over-provisioning, so there is no recycling for the arena to
+        exploit, and the training engine's jit cache (keyed on the training
+        RolloutConfig) is left untouched."""
         from repro.data.pipeline import PromptPipeline
 
         pipe = PromptPipeline(self.env, batch_size=num_prompts,

@@ -1,7 +1,6 @@
 """Per-assigned-architecture smoke: instantiate the REDUCED config of each
 family, run one forward and one NAT-GRPO train step on CPU, assert output
 shapes and finiteness.  (The FULL configs are exercised via the dry-run.)"""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

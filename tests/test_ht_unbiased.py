@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.grpo import GRPOConfig, full_token_loss_reference, nat_grpo_loss
+from repro.core.grpo import full_token_loss_reference, nat_grpo_loss
 from repro.core.selectors import (
     DetTruncSelector, RPCSelector, URSSelector, rpc_survival,
 )
@@ -68,7 +68,6 @@ def test_prop1_value_unbiased(selector, tol, batch, key):
 
 def test_prop1_gradient_unbiased(batch, key):
     logp, old_logp, adv, rm = batch
-    lengths = rm.sum(-1)
     g_full = jax.grad(
         lambda lp: full_token_loss_reference(lp, old_logp, adv, rm))(logp)
     for sel in (URSSelector(p=0.5), RPCSelector(min_cut=4)):

@@ -1,6 +1,5 @@
 """Bucket ladder / physical repacking properties."""
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # pragma: no cover - CI installs hypothesis

@@ -1,8 +1,4 @@
 """RL substrate integration: envs, data pipeline, rollout engine, trainer."""
-import dataclasses
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -63,6 +59,22 @@ def test_pipeline_determinism_and_host_sharding():
     c = PromptPipeline(env, batch_size=8, max_prompt_len=24, seed=0)
     c.load_state_dict(st)
     np.testing.assert_array_equal(next(c).tokens, a.batch_at(17).tokens)
+
+
+def test_iter_prompts_streams_batches_without_advancing_cursor():
+    """iter_prompts yields the same prompts batch_at produces, unpadded, and
+    leaves the pipeline cursor untouched (checkpoint resume unaffected)."""
+    env = make_env("mod_arith")
+    pipe = PromptPipeline(env, batch_size=4, max_prompt_len=24, seed=7)
+    stream = pipe.iter_prompts()
+    got = [next(stream) for _ in range(10)]  # spans three batches
+    assert pipe.step == 0
+    for j, (prompt, toks, n) in enumerate(got):
+        ref = pipe.batch_at(j // 4)
+        i = j % 4
+        assert n == int(ref.prompt_lens[i])
+        np.testing.assert_array_equal(toks, ref.tokens[i, :n])
+        assert prompt.answer == ref.prompts[i].answer
 
 
 def test_prefetcher():

@@ -20,7 +20,7 @@ except ImportError:  # pragma: no cover - CI installs hypothesis
 
 from repro.core.selectors import (
     DetTruncSelector, EntropySelector, FullSelector, RPCSelector,
-    URSSelector, make_selector, response_positions, rpc_survival,
+    URSSelector, make_selector, rpc_survival,
 )
 
 
