@@ -1,0 +1,132 @@
+"""Actor/learner overlap: serial trainer vs the bounded-staleness pipeline.
+
+The serial tax, measured: ``NATGRPOTrainer`` runs rollout to completion,
+then the learner — so the learner idles during the straggler tail and the
+slot arena idles during backprop.  ``AsyncNATGRPOTrainer`` overlaps them:
+the actor thread streams groups through a persistent engine session (a new
+group's shorts refill slots freed mid-drain) while the learner drains the
+bounded-staleness sample queue (DESIGN.md §6).
+
+Both trainers run the same model, same geometry, same 80/20 straggler mix
+(80% short rollouts, 20% full-budget — the mix the rollout bench gates),
+post-compile.  Emits the ``async/*`` rows of the BENCH_* perf trajectory;
+the acceptance gate is ``async/overlap_speedup >= 1.3`` steady-state.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.models.config import ModelConfig, dense_blocks
+from repro.optim import AdamWConfig
+from repro.rl import (
+    AsyncNATGRPOTrainer, NATGRPOTrainer, NATTrainerConfig, RolloutConfig,
+    VOCAB_SIZE,
+)
+
+P = 4               # prompts per step
+G = 4               # rollouts kept per prompt
+SLOTS = 8           # arena width: half the group width, so recycling is live
+MAX_NEW = 128       # decode budget (the straggler tail length)
+SHORT_EVERY = 5     # rows with r % 5 == 0 run the full budget (20% long)
+MAX_STALENESS = 2
+WARMUP = 3          # compile + pipeline fill
+STEPS = 5           # timed steps per window
+WINDOWS = 3         # best-of windows (CI runners flip contention modes)
+
+
+def _model():
+    return ModelConfig(name="bench-async", d_model=128, n_heads=8,
+                       n_kv_heads=4, head_dim=16, d_ff=256,
+                       vocab_size=VOCAB_SIZE, blocks=dense_blocks(2),
+                       seq_parallel=False, remat_policy="none",
+                       scan_layers=False)
+
+
+def _budget_fn(step: int, r: int) -> int:
+    """Deterministic 80/20 mix, identical every step (stable buckets)."""
+    if r % SHORT_EVERY == 0:
+        return MAX_NEW
+    return 4 + (r * 7919) % 13  # shorts: 4..16 tokens
+
+
+def _trainer_cfg(max_staleness: int) -> NATTrainerConfig:
+    return NATTrainerConfig(
+        # deterministic truncation: fixed learner bucket every step (no
+        # mid-bench recompiles) and the NAT regime the overlap targets —
+        # a learner cheap enough for rollout to be the bound
+        selector="det_trunc", selector_kwargs=(("frac", 0.5),),
+        prompts_per_step=P, max_prompt_len=24,
+        # eos_id=-1: budgets bind exactly, so the mix is controlled
+        rollout=RolloutConfig(max_new_tokens=MAX_NEW, temperature=1.0,
+                              group_size=G, eos_id=-1),
+        num_slots=SLOTS, steps_per_sync=4,
+        adamw=AdamWConfig(lr=1e-4, warmup_steps=5, total_steps=1000),
+        num_buckets=1,  # single executable: no bucket recompiles mid-bench
+        max_staleness=max_staleness, seed=0)
+
+
+def _time_steps(trainer, warmup: int, steps: int, windows: int) -> float:
+    """Best seconds-per-effective-step over ``windows`` timed windows of
+    ``steps`` pops each (best-of, like the rollout bench: shared runners
+    flip between contention modes run to run).
+
+    Effective steps debit groups drained from the pre-rolled queue buffer:
+    a net drain means the actor produced fewer than ``steps`` fresh groups
+    in-window, and quoting raw pops/s would let a big-enough buffer fake
+    steady-state throughput the pipeline cannot sustain.  In the
+    learner-bound regime the depth is unchanged and this is ``steps``."""
+    for _ in range(warmup):
+        trainer.train_step()
+    best = float("inf")
+    for _ in range(windows):
+        d0 = trainer.queue.qsize()
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            trainer.train_step()
+        elapsed = time.perf_counter() - t0
+        drained = max(0, d0 - trainer.queue.qsize())
+        best = min(best, elapsed / max(1, steps - drained))
+    return best
+
+
+def run() -> dict:
+    cfg = _model()
+
+    serial = NATGRPOTrainer(cfg, _trainer_cfg(0), budget_fn=_budget_fn)
+    s_step = _time_steps(serial, WARMUP, STEPS, WINDOWS)
+    serial.close()
+
+    overlap = AsyncNATGRPOTrainer(cfg, _trainer_cfg(MAX_STALENESS),
+                                  budget_fn=_budget_fn)
+    o_step = _time_steps(overlap, WARMUP, STEPS, WINDOWS)
+    stale = [m["staleness"] for m in overlap.history[WARMUP:]]
+    waits = [m["time_wait"] for m in overlap.history[WARMUP:]]
+    overlap.close()
+
+    speedup = s_step / o_step
+    budget = sum(_budget_fn(0, r) for r in range(P * G))
+
+    print("# bench_async_overlap: 80/20 straggler mix "
+          f"(P={P} G={G}, {SLOTS} slots, budget {MAX_NEW}, "
+          f"{budget} tokens/step requested)")
+    print(f"{'trainer':12s} {'s/step':>8s} {'tok/s':>8s}")
+    print(f"{'serial':12s} {s_step:8.2f} {budget / s_step:8.1f}")
+    print(f"{'overlapped':12s} {o_step:8.2f} {budget / o_step:8.1f}")
+    print(f"speedup {speedup:.2f}x  (max_staleness={MAX_STALENESS}, "
+          f"mean staleness {np.mean(stale):.2f}, "
+          f"mean learner wait {np.mean(waits) * 1e3:.0f}ms)")
+
+    emit("async/serial_step", s_step, f"tok_s={budget / s_step:.1f}")
+    emit("async/overlap_step", o_step,
+         f"tok_s={budget / o_step:.1f};staleness={np.mean(stale):.2f}")
+    emit("async/overlap_speedup", s_step - o_step,
+         f"speedup={speedup:.3f}")
+    return {"speedup": speedup, "s_per_step_serial": s_step,
+            "s_per_step_overlap": o_step}
+
+
+if __name__ == "__main__":
+    run()

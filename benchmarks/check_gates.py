@@ -1,0 +1,129 @@
+"""Perf-trajectory gates over the committed BENCH_<n>.json artifacts.
+
+The repo commits one ``BENCH_<n>.json`` per perf-relevant PR (the
+aggregated output of ``benchmarks.run --json``).  CI regenerates the next
+point in the trajectory and gates it against the newest committed one, so
+the workflow YAML never embeds filenames or heredoc Python:
+
+    NEXT=$(python -m benchmarks.check_gates --next-name)
+    python -m benchmarks.run --only ... --json "$NEXT"
+    python -m benchmarks.check_gates "$NEXT"
+
+Gating policy:
+  * absolute floors on the headline speedups (rollout/speedup >= 1.5x,
+    async/overlap_speedup >= 1.3x),
+  * >10% regression vs the newest committed artifact on those same rows,
+  * a gated row present in the baseline but missing from the fresh run is
+    a failure (a silently dropped suite is not a pass),
+  * every other shared metric is reported (trajectory visibility), never
+    gated — micro-benchmarks on shared CI runners are too noisy to block.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+# row name -> (metric key, absolute floor)
+GATES = {
+    "rollout/speedup": ("speedup", 1.5),
+    "async/overlap_speedup": ("speedup", 1.3),
+}
+REL_REGRESSION = 0.10  # gated metrics may not drop >10% vs the baseline
+
+
+def committed_benches(root: str) -> list:
+    """[(n, path)] of committed BENCH_<n>.json artifacts, sorted by n."""
+    out = []
+    for p in glob.glob(os.path.join(root, "BENCH_*.json")):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(p))
+        if m:
+            out.append((int(m.group(1)), p))
+    return sorted(out)
+
+
+def next_name(root: str) -> str:
+    benches = committed_benches(root)
+    n = benches[-1][0] + 1 if benches else 1
+    return f"BENCH_{n}.json"
+
+
+def _rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: r.get("metrics", {}) for r in payload["rows"]}
+
+
+def check(fresh_path: str, root: str) -> int:
+    fresh = _rows(fresh_path)
+    baseline = [(n, p) for n, p in committed_benches(root)
+                if os.path.abspath(p) != os.path.abspath(fresh_path)]
+    failures = []
+
+    if baseline:
+        bn, bp = baseline[-1]
+        base = _rows(bp)
+        shared = sorted(set(fresh) & set(base))
+        print(f"# perf trajectory: {os.path.basename(fresh_path)} "
+              f"vs committed BENCH_{bn}.json ({len(shared)} shared rows)")
+        for name in shared:
+            for mk in sorted(set(fresh[name]) & set(base[name])):
+                fv, bv = fresh[name][mk], base[name][mk]
+                if not isinstance(fv, (int, float)) or not isinstance(
+                        bv, (int, float)) or bv == 0:
+                    continue
+                print(f"  {name}:{mk}: {bv:.4g} -> {fv:.4g} "
+                      f"({(fv / bv - 1) * 100:+.1f}%)")
+        for name, (mk, _floor) in GATES.items():
+            if name not in base or mk not in base[name]:
+                continue
+            if name not in fresh or mk not in fresh[name]:
+                failures.append(f"gated row {name} missing from fresh run")
+                continue
+            fv, bv = fresh[name][mk], base[name][mk]
+            if fv < bv * (1.0 - REL_REGRESSION):
+                failures.append(
+                    f"{name}:{mk} regressed >{REL_REGRESSION:.0%}: "
+                    f"{bv:.3f} -> {fv:.3f}")
+    else:
+        print("# perf trajectory: no committed baseline, floors only")
+
+    for name, (mk, floor) in GATES.items():
+        if name in fresh and mk in fresh[name]:
+            fv = fresh[name][mk]
+            status = "ok" if fv >= floor else "FAIL"
+            print(f"  gate {name}:{mk} = {fv:.3f} (floor {floor}) {status}")
+            if fv < floor:
+                failures.append(f"{name}:{mk} below floor {floor}: {fv:.3f}")
+
+    if failures:
+        print("# PERF GATES FAILED")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("# perf gates passed")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", nargs="?", default="",
+                    help="fresh benchmarks.run --json output to gate")
+    ap.add_argument("--next-name", action="store_true",
+                    help="print the next BENCH_<n>.json filename and exit")
+    ap.add_argument("--root", default=".",
+                    help="directory holding the committed BENCH_*.json")
+    args = ap.parse_args(argv)
+    if args.next_name:
+        print(next_name(args.root))
+        return 0
+    if not args.fresh:
+        ap.error("either --next-name or a fresh results file is required")
+    return check(args.fresh, args.root)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

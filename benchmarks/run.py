@@ -2,12 +2,15 @@
 
     PYTHONPATH=src python -m benchmarks.run            # quick defaults
     PYTHONPATH=src python -m benchmarks.run --full     # paper-scale settings
-    PYTHONPATH=src python -m benchmarks.run --json BENCH_2.json
+    PYTHONPATH=src python -m benchmarks.run \
+        --json "$(python -m benchmarks.check_gates --next-name)"
 
 Emits human tables plus CSV rows ``name,us_per_call,derived``; with
 ``--json`` the rows every bench reported through ``benchmarks.common.emit``
-are aggregated into one machine-readable file — the perf-trajectory artifact
-CI archives per PR (BENCH_*.json).
+are aggregated into one machine-readable file — the next point of the
+perf trajectory (``BENCH_<n>.json``).  ``benchmarks/check_gates.py`` names
+the next point and gates it against the newest committed one; CI archives
+the artifact per run.
 """
 from __future__ import annotations
 
@@ -22,7 +25,7 @@ def main():
                     help="paper-scale draws/steps/seeds (slow)")
     ap.add_argument("--only", default="",
                     help="comma list: unbiasedness,gradnorm,matrix,ratio,"
-                         "efficiency,quality,rollout,roofline")
+                         "efficiency,quality,rollout,async,roofline")
     ap.add_argument("--json", default="",
                     help="write aggregated machine-readable results here")
     args = ap.parse_args()
@@ -55,6 +58,10 @@ def main():
     if on("rollout"):
         from benchmarks import bench_rollout_throughput
         bench_rollout_throughput.run()
+        print()
+    if on("async"):
+        from benchmarks import bench_async_overlap
+        bench_async_overlap.run()
         print()
     if on("quality"):
         from benchmarks import bench_quality

@@ -85,7 +85,9 @@ class CheckpointManager:
              blocking: bool = True) -> None:
         self.wait()
         flat, _ = _flatten(tree)
-        host = [(k, tuple(np.shape(l)), str(np.asarray(l).dtype if not hasattr(l, "dtype") else l.dtype),
+        host = [(k, tuple(np.shape(l)),
+                 str(l.dtype if hasattr(l, "dtype")
+                     else np.asarray(l).dtype),
                  _host_shards(l)) for k, l in flat]
 
         def write():

@@ -28,7 +28,8 @@ import numpy as np
 Array = jax.Array
 
 
-def bucket_ladder(max_len: int, num_buckets: int = 4, align: int = 128) -> tuple[int, ...]:
+def bucket_ladder(max_len: int, num_buckets: int = 4,
+                  align: int = 128) -> tuple[int, ...]:
     """Static ladder of padded lengths, each a multiple of ``align``."""
     out = []
     for i in range(1, num_buckets + 1):

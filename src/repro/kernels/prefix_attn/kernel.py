@@ -107,12 +107,16 @@ def fwd_pallas(q, k, v, cut_lens, *, window: int = 0, bq: int = 128,
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki, cut: (b_, h_, qi, 0)),
-                pl.BlockSpec((1, 1, bk, d), lambda b_, h_, qi, ki, cut: (b_, h_ // g, ki, 0)),
-                pl.BlockSpec((1, 1, bk, d), lambda b_, h_, qi, ki, cut: (b_, h_ // g, ki, 0)),
+                pl.BlockSpec((1, 1, bq, d),
+                             lambda b_, h_, qi, ki, cut: (b_, h_, qi, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda b_, h_, qi, ki, cut: (b_, h_ // g, ki, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda b_, h_, qi, ki, cut: (b_, h_ // g, ki, 0)),
             ],
             out_specs=[
-                pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki, cut: (b_, h_, qi, 0)),
+                pl.BlockSpec((1, 1, bq, d),
+                             lambda b_, h_, qi, ki, cut: (b_, h_, qi, 0)),
                 pl.BlockSpec((1, 1, bq), lambda b_, h_, qi, ki, cut: (b_, h_, qi)),
             ],
             scratch_shapes=[
@@ -222,13 +226,16 @@ def bwd_pallas(q, k, v, o, lse, do, cut_lens, *, window: int = 0,
             grid=(b, h, nq, nk),
             in_specs=[
                 pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki, c: (b_, h_, qi, 0)),
-                pl.BlockSpec((1, 1, bk, d), lambda b_, h_, qi, ki, c: (b_, h_ // g, ki, 0)),
-                pl.BlockSpec((1, 1, bk, d), lambda b_, h_, qi, ki, c: (b_, h_ // g, ki, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda b_, h_, qi, ki, c: (b_, h_ // g, ki, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda b_, h_, qi, ki, c: (b_, h_ // g, ki, 0)),
                 pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki, c: (b_, h_, qi, 0)),
                 pl.BlockSpec((1, 1, bq), lambda b_, h_, qi, ki, c: (b_, h_, qi)),
                 pl.BlockSpec((1, 1, bq), lambda b_, h_, qi, ki, c: (b_, h_, qi)),
             ],
-            out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki, c: (b_, h_, qi, 0)),
+            out_specs=pl.BlockSpec((1, 1, bq, d),
+                                   lambda b_, h_, qi, ki, c: (b_, h_, qi, 0)),
             scratch_shapes=[pltpu.VMEM((bq, d), F32)],
         ),
         out_shape=jax.ShapeDtypeStruct((b, h, t, d), q.dtype),
@@ -243,8 +250,10 @@ def bwd_pallas(q, k, v, o, lse, do, cut_lens, *, window: int = 0,
             grid=(b, h, nk, nq),
             in_specs=[
                 pl.BlockSpec((1, 1, bq, d), lambda b_, h_, ki, qi, c: (b_, h_, qi, 0)),
-                pl.BlockSpec((1, 1, bk, d), lambda b_, h_, ki, qi, c: (b_, h_ // g, ki, 0)),
-                pl.BlockSpec((1, 1, bk, d), lambda b_, h_, ki, qi, c: (b_, h_ // g, ki, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda b_, h_, ki, qi, c: (b_, h_ // g, ki, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda b_, h_, ki, qi, c: (b_, h_ // g, ki, 0)),
                 pl.BlockSpec((1, 1, bq, d), lambda b_, h_, ki, qi, c: (b_, h_, qi, 0)),
                 pl.BlockSpec((1, 1, bq), lambda b_, h_, ki, qi, c: (b_, h_, qi)),
                 pl.BlockSpec((1, 1, bq), lambda b_, h_, ki, qi, c: (b_, h_, qi)),

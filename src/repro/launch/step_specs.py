@@ -63,6 +63,12 @@ def train_inputs(cfg: ModelConfig, shape: ShapeSpec, mesh,
         "ht_weights": SDS((b, t), jnp.float32),
         "orig_lengths": SDS((b,), jnp.float32),
         "lengths": SDS((b,), jnp.int32),
+        # async pipeline (DESIGN.md §6): behaviour logprobs + per-sample
+        # version lag drive the truncated-IS staleness correction; the
+        # production cell lowers with them so the overlapped trainer and
+        # the dry-run validate the same executable
+        "behavior_logp": SDS((b, t), jnp.float32),
+        "staleness": SDS((b,), jnp.float32),
     }
     axes = {
         "tokens": ("batch", None, None) if cfg.num_codebooks else ("batch", None),
@@ -72,6 +78,8 @@ def train_inputs(cfg: ModelConfig, shape: ShapeSpec, mesh,
         "ht_weights": ("batch", None),
         "orig_lengths": ("batch",),
         "lengths": ("batch",),
+        "behavior_logp": ("batch", None),
+        "staleness": ("batch",),
     }
     if cfg.num_image_tokens:
         batch["image_embeds"] = SDS(

@@ -18,8 +18,6 @@ import dataclasses
 import signal
 import sys
 
-import jax
-
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_smoke
 from repro.optim import AdamWConfig
@@ -76,33 +74,19 @@ def main(argv=None):
     )
     trainer = NATGRPOTrainer(model_cfg, tcfg)
 
+    # the trainer's own quiesce-checkpoint (DESIGN.md §6) persists params,
+    # optimizer, AND the async cursors (learner version, actor key chain,
+    # pipeline step): resume is token-exact for this serial trainer, and a
+    # clean group boundary for the max_staleness>0 pipeline
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     if ckpt is not None and ckpt.latest_step() is not None:
-        step = ckpt.latest_step()
-        tree = {"params": trainer.params, "opt": trainer.opt_state}
-        restored, extra = ckpt.restore(step, tree)
-        trainer.params = restored["params"]
-        trainer.opt_state = restored["opt"]
-        trainer.pipeline.load_state_dict(extra["pipeline"])
-        trainer.key = jax.random.PRNGKey(extra["seed_counter"])
-        trainer.step_count = step
-        print(f"resumed from step {step}")
-
-    def save(step):
-        if ckpt is None:
-            return
-        ckpt.save(step, {"params": trainer.params, "opt": trainer.opt_state},
-                  extra={"pipeline": trainer.pipeline.state_dict(),
-                         "seed_counter": int(step) + args.seed},
-                  blocking=False)
+        trainer.restore_checkpoint(ckpt)
+        print(f"resumed from step {trainer.step_count}")
 
     def on_sigterm(signum, frame):
         print("SIGTERM received: saving final checkpoint", file=sys.stderr)
         if ckpt is not None:
-            ckpt.save(trainer.step_count,
-                      {"params": trainer.params, "opt": trainer.opt_state},
-                      extra={"pipeline": trainer.pipeline.state_dict(),
-                             "seed_counter": trainer.step_count + args.seed})
+            trainer.save_checkpoint(ckpt, blocking=True)
         sys.exit(0)
 
     signal.signal(signal.SIGTERM, on_sigterm)
@@ -115,15 +99,15 @@ def main(argv=None):
                   f"loss={m['loss']:+.4f} sel={m.get('selected_ratio', 1.0):.2f} "
                   f"grad={m['grad_norm']:.2f} t={m['time_total']:.2f}s")
         if ckpt is not None and s % args.ckpt_every == 0:
-            save(s)
+            trainer.save_checkpoint(ckpt, blocking=False)
 
     if ckpt is not None:
         ckpt.wait()
-        save(trainer.step_count)
-        ckpt.wait()
+        trainer.save_checkpoint(ckpt, blocking=True)
     ev = trainer.evaluate(args.eval_prompts)
     print(f"final eval: accuracy={ev['accuracy']:.3f} "
           f"mean_resp_len={ev['resp_len']:.1f}")
+    trainer.close()
     return trainer
 
 

@@ -105,7 +105,8 @@ def self_attention(
     else:
         mask = causal_window_mask(t, t, window)[None, None]
         if lengths is not None:
-            mask = mask & (jnp.arange(t)[None, None, None, :] < lengths[:, None, None, None])
+            mask = mask & (jnp.arange(t)[None, None, None, :]
+                           < lengths[:, None, None, None])
         o = sdpa(q, repeat_kv(k, h // kv), repeat_kv(v, h // kv), mask, scale)
     out = jnp.einsum("bthk,hkd->btd", o, p["wo"])
     return out, (k, v)
@@ -220,7 +221,8 @@ def decode_attention(
     return out, new_cache
 
 
-def attn_cache_decl(batch: int, s_len: int, n_kv: int, head_dim: int, dtype=jnp.bfloat16):
+def attn_cache_decl(batch: int, s_len: int, n_kv: int, head_dim: int,
+                    dtype=jnp.bfloat16):
     """Abstract cache layout for one attention layer (ring if s_len=window)."""
     return {
         "k": jax.ShapeDtypeStruct((batch, s_len, n_kv, head_dim), dtype),
@@ -237,7 +239,8 @@ def attn_cache_axes():
     }
 
 
-def cache_from_prefill(k: Array, v: Array, s_len: int, prefill_len, window: int) -> dict:
+def cache_from_prefill(k: Array, v: Array, s_len: int, prefill_len,
+                       window: int) -> dict:
     """Build a decode cache from prefill k/v (B, T, KV, D).
 
     For global layers s_len >= T and entries [0, prefill_len) are valid.

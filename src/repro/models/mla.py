@@ -39,7 +39,8 @@ def mla_decl(d_model: int, n_heads: int, m: MLAConfig):
     if m.q_lora_rank:
         d["w_dq"] = ParamDecl((d_model, m.q_lora_rank), ("embed", "q_lora"))
         d["q_norm"] = rmsnorm_decl(m.q_lora_rank)
-        d["w_uq"] = ParamDecl((m.q_lora_rank, n_heads, qk), ("q_lora", "heads", "head_dim"))
+        d["w_uq"] = ParamDecl((m.q_lora_rank, n_heads, qk),
+                              ("q_lora", "heads", "head_dim"))
     else:
         d["wq"] = ParamDecl((d_model, n_heads, qk), ("embed", "heads", "head_dim"))
     return d
@@ -85,7 +86,8 @@ def mla_attention(
     s *= scale
     mask = jnp.tril(jnp.ones((t, t), bool))[None, None]
     if lengths is not None:
-        mask = mask & (jnp.arange(t)[None, None, None, :] < lengths[:, None, None, None])
+        mask = mask & (jnp.arange(t)[None, None, None, :]
+                       < lengths[:, None, None, None])
     s = jnp.where(mask, s, NEG_INF)
     pa = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhts,bshk->bthk", pa.astype(v.dtype), v)
@@ -113,7 +115,8 @@ def mla_decode(p, x: Array, cache: dict, pos: Array, m: MLAConfig, *, norm_eps: 
     slot = (posb[:, 0] % s_len).astype(jnp.int32)
     bi = jnp.arange(b)
     c_kv = cache["c_kv"].at[bi, slot].set(c_new[:, 0].astype(cache["c_kv"].dtype))
-    k_rope = cache["k_rope"].at[bi, slot].set(kr_new[:, 0].astype(cache["k_rope"].dtype))
+    k_rope = cache["k_rope"].at[bi, slot].set(
+        kr_new[:, 0].astype(cache["k_rope"].dtype))
     cpos = cache["pos"].at[bi, slot].set(posb[:, 0].astype(jnp.int32))
 
     q_abs = jnp.einsum("bthk,rhk->bthr", q_nope, p["w_uk"])  # absorbed query

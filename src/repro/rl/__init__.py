@@ -9,6 +9,11 @@ from repro.rl.env import (
     encode,
     make_env,
 )
+from repro.rl.async_trainer import (
+    AsyncNATGRPOTrainer,
+    SampleQueue,
+    TaggedGroup,
+)
 from repro.rl.engine import (
     Completion,
     ContinuousRolloutEngine,
@@ -32,4 +37,5 @@ __all__ = [
     "ContinuousRolloutEngine", "EngineConfig", "Request", "make_engine",
     "RolloutBatch", "RolloutConfig", "generate", "rollout_group",
     "rollout_group_continuous", "NATGRPOTrainer", "NATTrainerConfig",
+    "AsyncNATGRPOTrainer", "SampleQueue", "TaggedGroup",
 ]

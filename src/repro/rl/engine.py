@@ -28,6 +28,17 @@ bounded by ``steps_per_sync`` substeps.
 Per-request token budgets make the engine double as the serving decode loop
 (``examples/serve_decode.py``): requests carry their own ``max_tokens``, and
 short requests stop paying for long neighbours.
+
+The host side is a *session* API (DESIGN.md §6): ``begin`` installs params
+and a fresh arena, ``submit`` enqueues requests at any time, ``drive`` runs
+exactly one harvest/refill/step round and returns the completions it
+retired, and ``set_params`` swaps in a new parameter snapshot for the
+*next* dispatched step — the in-flight executable keeps the reference it
+was called with, so weight publication never copies or races a running
+step.  ``run`` is the run-to-completion wrapper over the same rounds; the
+stream-overlapped trainer (``rl/async_trainer.py``) drives sessions
+directly so rollouts from one policy version keep draining while the
+learner steps the next.
 """
 from __future__ import annotations
 
@@ -110,6 +121,14 @@ class ContinuousRolloutEngine:
         self._cache_tmpl = None  # abstract cache template, memoized per run
         self.last_state: Optional[dict] = None
         self.stats: dict = {}
+        # session fields (installed by begin(); benign defaults so `idle`
+        # and introspection work on a never-begun engine)
+        self._params = None
+        self._on_finish = None
+        self._queue: collections.deque = collections.deque()
+        self._slot_uid: list = [None] * ecfg.num_slots
+        self._to_cancel: set = set()
+        self._state: Optional[dict] = None
 
     # ------------------------------------------------------------ device side
     def _init_state(self, params, key: Array) -> dict:
@@ -256,7 +275,178 @@ class ContinuousRolloutEngine:
 
         return step
 
-    # -------------------------------------------------------------- host side
+    # ----------------------------------------------------- host side: session
+    def begin(
+        self,
+        params,
+        key: Array,
+        *,
+        on_finish: Optional[Callable[[Completion], Optional[Iterable[int]]]]
+        = None,
+    ) -> None:
+        """Open a session: fresh arena, empty queue, zeroed stats.
+
+        ``on_finish(completion)`` fires as each request retires (inside
+        ``drive``) and may return uids to cancel — queued uids are dropped
+        before placement, in-flight uids retire early with
+        ``cancelled=True`` in the same round they are discovered."""
+        self._params = params
+        self._on_finish = on_finish
+        self._queue: collections.deque = collections.deque()
+        self._slot_uid: list = [None] * self.ecfg.num_slots
+        self._to_cancel: set = set()
+        self._state = self._init_state(params, key)
+        self.stats = {"rounds": 0, "decode_steps": 0, "refills": 0,
+                      "tokens_generated": 0, "cancelled": 0,
+                      "slot_substeps": 0}
+
+    def submit(self, requests: Sequence[Request]) -> None:
+        """Enqueue requests; callable at any point during a session, so new
+        work streams in while earlier rollouts are still draining."""
+        rcfg, tp = self.rcfg, self.ecfg.max_prompt_len
+        for r in requests:
+            if len(r.tokens) > tp:
+                raise ValueError(f"request {r.uid}: prompt longer than {tp}")
+            if r.budget > rcfg.max_new_tokens:
+                raise ValueError(f"request {r.uid}: budget > max_new_tokens")
+        self._queue.extend(requests)
+
+    def set_params(self, params) -> None:
+        """Versioned snapshot swap: the *next* dispatched step decodes under
+        ``params``.  The step already in flight keeps the reference it was
+        called with (jax arrays are immutable), so no copy and no race."""
+        self._params = params
+
+    def cancel(self, uids: Iterable[int]) -> None:
+        """Mark uids for cancellation, handled at the next ``drive``."""
+        self._to_cancel.update(uids)
+
+    @property
+    def idle(self) -> bool:
+        """No queued work and every slot free — ``drive`` would be a no-op."""
+        return not self._queue and all(u is None for u in self._slot_uid)
+
+    def _harvest(self, s: int, host, cancelled: bool) -> Completion:
+        uid = self._slot_uid[s]
+        rl = int(host["n_gen"][s])
+        comp = Completion(
+            uid=uid,
+            prompt_len=int(host["prompt_len"][s]),
+            tokens=host["out_tok"][s, :rl].copy(),
+            logp=host["out_logp"][s, :rl].copy(),
+            entropy=host["out_ent"][s, :rl].copy(),
+            completed=bool(host["eos_hit"][s]) and not cancelled,
+            cancelled=cancelled)
+        self._slot_uid[s] = None
+        self.stats["tokens_generated"] += rl
+        if cancelled:
+            self.stats["cancelled"] += 1
+        if self._on_finish is not None:
+            self._to_cancel.update(self._on_finish(comp) or ())
+        return comp
+
+    def drive(self) -> list:
+        """One round: sync the control planes, harvest retirements, refill
+        free slots from the queue, dispatch the jitted step.  Returns the
+        Completions retired this round (possibly empty).  When the session
+        is idle the call is a no-op."""
+        ecfg, rcfg = self.ecfg, self.rcfg
+        s_slots, tp = ecfg.num_slots, ecfg.max_prompt_len
+        state, slot_uid, queue = self._state, self._slot_uid, self._queue
+        to_cancel = self._to_cancel
+        harvested: list = []
+
+        # -- sync the two control planes; fetch buffers only on retirement
+        active = np.asarray(state["active"])
+        done = np.asarray(state["done"])
+        retired = [s for s in range(s_slots)
+                   if slot_uid[s] is not None and active[s] and done[s]]
+        cancel_mask = np.zeros((s_slots,), bool)
+        host = None
+        need_fetch = bool(retired) or any(
+            u in to_cancel for u in slot_uid if u is not None)
+        if need_fetch:
+            host = {k: np.asarray(state[k]) for k in
+                    ("n_gen", "prompt_len", "eos_hit",
+                     "out_tok", "out_logp", "out_ent")}
+        # snapshot cancel state first: rows in `retired` finished on
+        # their own (EOS/budget), so cancellations issued by on_finish
+        # callbacks *during* this harvest loop must not relabel them
+        was_cancelled = {s: slot_uid[s] in to_cancel for s in retired}
+        for s in retired:
+            harvested.append(self._harvest(s, host, was_cancelled[s]))
+            cancel_mask[s] = True  # clears active/done on device
+        # quota-cancel rows still decoding (including cancellations the
+        # on_finish callbacks just issued): retire them as partials now
+        if host is not None:
+            for s in range(s_slots):
+                if slot_uid[s] is not None and slot_uid[s] in to_cancel:
+                    harvested.append(self._harvest(s, host, True))
+                    cancel_mask[s] = True
+
+        # -- refill free slots from the queue (skipping cancelled uids),
+        # at most R lanes per round
+        lanes = ecfg.lanes
+        refill_mask = np.zeros((lanes,), bool)
+        refill_toks = np.full((lanes, tp), rcfg.pad_id, np.int32)
+        refill_lens = np.ones((lanes,), np.int32)
+        refill_budgets = np.zeros((lanes,), np.int32)
+        refill_slots = np.zeros((lanes,), np.int32)
+        lane = 0
+        for s in range(s_slots):
+            if slot_uid[s] is not None or lane >= lanes:
+                continue
+            while queue and queue[0].uid in to_cancel:
+                r = queue.popleft()
+                comp = Completion(
+                    uid=r.uid, prompt_len=len(r.tokens),
+                    tokens=np.zeros((0,), np.int32),
+                    logp=np.zeros((0,), np.float32),
+                    entropy=np.zeros((0,), np.float32),
+                    completed=False, cancelled=True)
+                harvested.append(comp)
+                self.stats["cancelled"] += 1
+                # the contract fires on_finish for every request,
+                # including ones cancelled before they were placed
+                if self._on_finish is not None:
+                    to_cancel.update(self._on_finish(comp) or ())
+            if not queue:
+                break
+            r = queue.popleft()
+            pl = len(r.tokens)
+            refill_toks[lane, :pl] = r.tokens
+            refill_lens[lane] = pl
+            refill_budgets[lane] = r.budget or rcfg.max_new_tokens
+            refill_slots[lane] = s
+            refill_mask[lane] = True
+            slot_uid[s] = r.uid
+            lane += 1
+
+        if not refill_mask.any() and all(u is None for u in slot_uid):
+            self.last_state = state  # session quiescent: expose for tests
+            return harvested
+
+        self._state = self._step(
+            self._params, state, jnp.asarray(refill_toks),
+            jnp.asarray(refill_lens), jnp.asarray(refill_budgets),
+            jnp.asarray(refill_slots), jnp.asarray(refill_mask),
+            jnp.asarray(cancel_mask))
+        self.stats["rounds"] += 1
+        self.stats["decode_steps"] += ecfg.steps_per_sync
+        self.stats["slot_substeps"] += ecfg.steps_per_sync * s_slots
+        self.stats["refills"] += int(refill_mask.sum())
+        return harvested
+
+    def drain(self) -> list:
+        """Drive rounds until the session is idle; returns all Completions
+        harvested along the way."""
+        out: list = []
+        while True:
+            got = self.drive()
+            out.extend(got)
+            if self.idle and not got:
+                return out
+
     def run(
         self,
         params,
@@ -267,128 +457,12 @@ class ContinuousRolloutEngine:
         = None,
     ) -> list:
         """Serve ``requests`` through the arena; returns Completions in
-        submission order.  ``on_finish(completion)`` fires as each row
-        retires and may return uids to cancel (queued uids are dropped,
-        in-flight uids are retired early with ``cancelled=True``)."""
-        rcfg, ecfg = self.rcfg, self.ecfg
-        s_slots, tp = ecfg.num_slots, ecfg.max_prompt_len
-        for r in requests:
-            if len(r.tokens) > tp:
-                raise ValueError(f"request {r.uid}: prompt longer than {tp}")
-            if r.budget > rcfg.max_new_tokens:
-                raise ValueError(f"request {r.uid}: budget > max_new_tokens")
-
-        queue = collections.deque(requests)
-        slot_uid: list = [None] * s_slots
-        out: dict = {}
-        to_cancel: set = set()
-        state = self._init_state(params, key)
-        stats = {"rounds": 0, "decode_steps": 0, "refills": 0,
-                 "tokens_generated": 0, "cancelled": 0,
-                 "slot_substeps": 0}
-        self.stats = stats
-
-        def harvest(s: int, host, cancelled: bool) -> Completion:
-            uid = slot_uid[s]
-            rl = int(host["n_gen"][s])
-            comp = Completion(
-                uid=uid,
-                prompt_len=int(host["prompt_len"][s]),
-                tokens=host["out_tok"][s, :rl].copy(),
-                logp=host["out_logp"][s, :rl].copy(),
-                entropy=host["out_ent"][s, :rl].copy(),
-                completed=bool(host["eos_hit"][s]) and not cancelled,
-                cancelled=cancelled)
-            out[uid] = comp
-            slot_uid[s] = None
-            stats["tokens_generated"] += rl
-            if cancelled:
-                stats["cancelled"] += 1
-            if on_finish is not None:
-                to_cancel.update(on_finish(comp) or ())
-            return comp
-
-        while True:
-            # -- sync the two control planes; fetch buffers only on retirement
-            active = np.asarray(state["active"])
-            done = np.asarray(state["done"])
-            retired = [s for s in range(s_slots)
-                       if slot_uid[s] is not None and active[s] and done[s]]
-            cancel_mask = np.zeros((s_slots,), bool)
-            host = None
-            need_fetch = bool(retired) or any(
-                u in to_cancel for u in slot_uid if u is not None)
-            if need_fetch:
-                host = {k: np.asarray(state[k]) for k in
-                        ("n_gen", "prompt_len", "eos_hit",
-                         "out_tok", "out_logp", "out_ent")}
-            # snapshot cancel state first: rows in `retired` finished on
-            # their own (EOS/budget), so cancellations issued by on_finish
-            # callbacks *during* this harvest loop must not relabel them
-            was_cancelled = {s: slot_uid[s] in to_cancel for s in retired}
-            for s in retired:
-                harvest(s, host, cancelled=was_cancelled[s])
-                cancel_mask[s] = True  # clears active/done on device
-            # quota-cancel rows still decoding (including cancellations the
-            # on_finish callbacks just issued): retire them as partials now
-            if host is not None:
-                for s in range(s_slots):
-                    if slot_uid[s] is not None and slot_uid[s] in to_cancel:
-                        harvest(s, host, cancelled=True)
-                        cancel_mask[s] = True
-
-            # -- refill free slots from the queue (skipping cancelled uids),
-            # at most R lanes per round
-            lanes = ecfg.lanes
-            refill_mask = np.zeros((lanes,), bool)
-            refill_toks = np.full((lanes, tp), rcfg.pad_id, np.int32)
-            refill_lens = np.ones((lanes,), np.int32)
-            refill_budgets = np.zeros((lanes,), np.int32)
-            refill_slots = np.zeros((lanes,), np.int32)
-            lane = 0
-            for s in range(s_slots):
-                if slot_uid[s] is not None or lane >= lanes:
-                    continue
-                while queue and queue[0].uid in to_cancel:
-                    r = queue.popleft()
-                    comp = Completion(
-                        uid=r.uid, prompt_len=len(r.tokens),
-                        tokens=np.zeros((0,), np.int32),
-                        logp=np.zeros((0,), np.float32),
-                        entropy=np.zeros((0,), np.float32),
-                        completed=False, cancelled=True)
-                    out[r.uid] = comp
-                    stats["cancelled"] += 1
-                    # the contract fires on_finish for every request,
-                    # including ones cancelled before they were placed
-                    if on_finish is not None:
-                        to_cancel.update(on_finish(comp) or ())
-                if not queue:
-                    break
-                r = queue.popleft()
-                pl = len(r.tokens)
-                refill_toks[lane, :pl] = r.tokens
-                refill_lens[lane] = pl
-                refill_budgets[lane] = r.budget or rcfg.max_new_tokens
-                refill_slots[lane] = s
-                refill_mask[lane] = True
-                slot_uid[s] = r.uid
-                lane += 1
-
-            if not refill_mask.any() and all(u is None for u in slot_uid):
-                break
-
-            state = self._step(
-                params, state, jnp.asarray(refill_toks),
-                jnp.asarray(refill_lens), jnp.asarray(refill_budgets),
-                jnp.asarray(refill_slots), jnp.asarray(refill_mask),
-                jnp.asarray(cancel_mask))
-            stats["rounds"] += 1
-            stats["decode_steps"] += ecfg.steps_per_sync
-            stats["slot_substeps"] += ecfg.steps_per_sync * s_slots
-            stats["refills"] += int(refill_mask.sum())
-
-        self.last_state = state
+        submission order.  Run-to-completion wrapper over ``begin`` /
+        ``submit`` / ``drive``."""
+        self.begin(params, key, on_finish=on_finish)
+        self.submit(requests)
+        out = {c.uid: c for c in self.drain()}
+        self.last_state = self._state
         return [out[r.uid] for r in requests if r.uid in out]
 
 

@@ -17,8 +17,12 @@ from repro.optim.adamw import AdamWConfig, adamw_update
 
 F32 = jnp.float32
 
+# behavior_logp/staleness are optional: the async trainer supplies them so
+# stale samples get the truncated-IS correction (core/grpo.py); the serial
+# path may omit them (or pass staleness == 0, which is bit-identical)
 BATCH_KEYS = ("tokens", "response_mask", "old_logp", "advantages",
-              "ht_weights", "orig_lengths", "lengths")
+              "ht_weights", "orig_lengths", "lengths", "behavior_logp",
+              "staleness")
 
 
 def make_loss_fn(model_cfg: ModelConfig, grpo_cfg: GRPOConfig, *,
@@ -32,7 +36,9 @@ def make_loss_fn(model_cfg: ModelConfig, grpo_cfg: GRPOConfig, *,
             vocab_chunks=vocab_chunks)
         loss, metrics = nat_grpo_loss(
             logp, mb["old_logp"], mb["advantages"], mb["ht_weights"],
-            mb["orig_lengths"], grpo_cfg, ref_logp=mb.get("ref_logp"))
+            mb["orig_lengths"], grpo_cfg, ref_logp=mb.get("ref_logp"),
+            behavior_logp=mb.get("behavior_logp"),
+            staleness=mb.get("staleness"))
         metrics["moe_aux"] = aux
         return loss + aux, metrics
 

@@ -195,6 +195,37 @@ def rollout_group(
 
 
 # ----------------------------------------------------- continuous batching
+def batch_from_completions(
+    comps,
+    prompt_tokens: np.ndarray,   # (P, Tp)
+    prompt_lens: np.ndarray,     # (P,)
+    rcfg: RolloutConfig,
+    p: int,
+    g: int,
+    gp: int,
+    stats: Optional[dict] = None,
+) -> RolloutBatch:
+    """Assemble the learner batch from ``p * gp`` engine Completions in
+    request order: APRIL quota selection down to G rows per prompt, then the
+    [prompt | response] grid.  Shared by the serial front-end
+    (``rollout_group_continuous``) and the stream-overlapped actor
+    (``rl/async_trainer.py``), which deposits groups assembled here into
+    the bounded-staleness sample queue."""
+    resp_len_all = np.array([c.response_len for c in comps])
+    completed_all = np.array([c.completed for c in comps])
+    keep_rows = _quota_keep_rows(resp_len_all, completed_all, p, g, gp)
+
+    rep_prompts = np.repeat(prompt_tokens, gp, axis=0)[keep_rows]
+    rep_lens = np.repeat(prompt_lens, gp, axis=0)[keep_rows]
+    toks, rmask, logp, ent, resp_len, completed = _grid_from_completions(
+        [comps[r] for r in keep_rows], rep_prompts, rep_lens,
+        prompt_tokens.shape[1] + rcfg.max_new_tokens)
+    return RolloutBatch(
+        tokens=toks, response_mask=rmask, old_logp=logp, entropies=ent,
+        prompt_lens=rep_lens, response_lens=resp_len, completed=completed,
+        stats=stats)
+
+
 def _grid_from_completions(comps, prompt_tokens, prompt_lens, t):
     """Build the learner (B, T) grid from engine Completions (same contract
     as ``_pack_grid``: [prompt | response], right-padded, aligned arrays)."""
@@ -229,6 +260,7 @@ def rollout_group_continuous(
     num_slots: int = 0,          # 0 -> P * G (recycling absorbs G' - G)
     steps_per_sync: int = 4,
     cancel_on_quota: bool = True,
+    budgets: Optional[np.ndarray] = None,  # (P*G',) per-row token budgets
 ) -> RolloutBatch:
     """``rollout_group`` semantics on the slot-arena engine.
 
@@ -238,6 +270,10 @@ def rollout_group_continuous(
     rollouts, its remaining requests are cancelled (queued ones never start,
     in-flight ones retire at the next sync) — over-provisioning then costs
     only the tokens actually generated, not G' full budgets.
+
+    ``budgets`` overrides the per-row decode budget (row r = prompt r//G',
+    rollout r%G'), the hook length-curricula and the overlap benchmark's
+    straggler mixes use; default is ``max_new_tokens`` everywhere.
     """
     from repro.rl.engine import ContinuousRolloutEngine, EngineConfig, Request
 
@@ -252,7 +288,8 @@ def rollout_group_continuous(
     requests = [
         Request(uid=i * gp + j,
                 tokens=np.asarray(prompt_tokens[i, :int(prompt_lens[i])]),
-                budget=rcfg.max_new_tokens)
+                budget=(int(budgets[i * gp + j]) if budgets is not None
+                        else rcfg.max_new_tokens))
         for i in range(p) for j in range(gp)]
 
     n_completed = np.zeros((p,), np.int32)
@@ -271,18 +308,8 @@ def rollout_group_continuous(
 
     comps = engine.run(params, requests, key, on_finish=on_finish)
 
-    resp_len_all = np.array([c.response_len for c in comps])
-    completed_all = np.array([c.completed for c in comps])
-    keep_rows = _quota_keep_rows(resp_len_all, completed_all, p, g, gp)
-
-    rep_prompts = np.repeat(prompt_tokens, gp, axis=0)[keep_rows]
-    rep_lens = np.repeat(prompt_lens, gp, axis=0)[keep_rows]
-    toks, rmask, logp, ent, resp_len, completed = _grid_from_completions(
-        [comps[r] for r in keep_rows], rep_prompts, rep_lens,
-        tp + rcfg.max_new_tokens)
     stats = dict(engine.stats)
-    stats["tokens_budget"] = int(p * gp * rcfg.max_new_tokens)
-    return RolloutBatch(
-        tokens=toks, response_mask=rmask, old_logp=logp, entropies=ent,
-        prompt_lens=rep_lens, response_lens=resp_len, completed=completed,
-        stats=stats)
+    stats["tokens_budget"] = (int(budgets.sum()) if budgets is not None
+                              else int(p * gp * rcfg.max_new_tokens))
+    return batch_from_completions(comps, prompt_tokens, prompt_lens, rcfg,
+                                  p, g, gp, stats)

@@ -1,4 +1,4 @@
-"""NAT-GRPO trainer: the full RLVR loop with token-efficient learning.
+"""NAT-GRPO trainer: the serial entry point over the async machinery.
 
 Per step:
   1. sample P prompts (deterministic pipeline),
@@ -10,220 +10,43 @@ Per step:
      processes fewer tokens (RPC's forward saving),
   6. HT-weighted GRPO loss (Eqs. 6/9) + AdamW.
 
-Per-bucket executables come from jit's shape-keyed cache: each ladder length
-compiles once and is reused for the rest of training.
+The whole loop lives in ``rl/async_trainer.py``: an actor thread drives
+the rollout engine and deposits finished groups into a bounded-staleness
+sample queue, a learner drains it (DESIGN.md §6).  ``NATGRPOTrainer`` is
+that machinery pinned to ``max_staleness=0``, which is *token-exact* with
+the historical serial loop: the actor is gated until the learner has
+consumed every outstanding group, so rollouts for step k always run on
+the step-k parameters and the staleness correction is identically 1
+(asserted bitwise in ``tests/test_async_trainer.py``).  Use
+``AsyncNATGRPOTrainer`` directly for ``max_staleness > 0`` overlap.
+
+Per-bucket executables come from jit's shape-keyed cache: each ladder
+length compiles once and is reused for the rest of training.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core.grpo import GRPOConfig, group_advantages
-from repro.core.repack import bucket_ladder, pick_bucket
-from repro.core.selectors import EntropySelector, make_selector
-# NOTE: repro.data sits ABOVE repro.rl in the layering (data imports
-# rl.env), so importing it at module scope would be circular whenever
-# repro.data.pipeline is the entry point.  Import lazily at use sites.
 from repro.models.config import ModelConfig
-from repro.models.params import init_params
-from repro.models.model import model_decl
-from repro.optim.adamw import AdamWConfig, init_opt_state
-from repro.rl.learner import make_train_step
-from repro.rl.rollout import (
-    RolloutConfig, rollout_group, rollout_group_continuous,
+from repro.rl.async_trainer import (
+    AsyncNATGRPOTrainer,
+    NATTrainerConfig,
 )
-from repro.rl.env import make_env
+
+__all__ = ["NATGRPOTrainer", "NATTrainerConfig"]
 
 
-@dataclasses.dataclass(frozen=True)
-class NATTrainerConfig:
-    env: str = "mod_arith"
-    env_kwargs: tuple = ()
-    selector: str = "rpc"            # full | urs | rpc | det_trunc | entropy
-    selector_kwargs: tuple = ()      # e.g. (("min_cut", 8),) or (("p", 0.5),)
-    prompts_per_step: int = 8        # P
-    max_prompt_len: int = 24
-    rollout: RolloutConfig = RolloutConfig()
-    rollout_engine: str = "continuous"  # continuous (slot arena) | legacy
-    num_slots: int = 0               # arena slots; 0 -> P * G
-    steps_per_sync: int = 4          # engine decode substeps per host sync
-    grpo: GRPOConfig = GRPOConfig()
-    adamw: AdamWConfig = AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=500)
-    bucket_align: int = 16
-    num_buckets: int = 4
-    repack: bool = True              # physical prefix truncation for RPC
-    seed: int = 0
+class NATGRPOTrainer(AsyncNATGRPOTrainer):
+    """Serial NAT-GRPO trainer: ``AsyncNATGRPOTrainer`` at staleness 0.
 
+    Any ``max_staleness`` requested in the config is pinned to 0 — this
+    class *is* the serial contract.  Construct ``AsyncNATGRPOTrainer``
+    yourself to opt into bounded-staleness overlap.
+    """
 
-class NATGRPOTrainer:
     def __init__(self, model_cfg: ModelConfig, tcfg: NATTrainerConfig,
-                 params=None, mesh=None, rules=None):
-        self.model_cfg = model_cfg
-        self.tcfg = tcfg
-        self.env = make_env(tcfg.env, **dict(tcfg.env_kwargs))
-        from repro.data.pipeline import PromptPipeline
-
-        self.pipeline = PromptPipeline(
-            self.env, batch_size=tcfg.prompts_per_step,
-            max_prompt_len=tcfg.max_prompt_len, seed=tcfg.seed)
-        self.key = jax.random.PRNGKey(tcfg.seed)
-        if params is None:
-            self.key, k = jax.random.split(self.key)
-            params = init_params(k, model_decl(model_cfg))
-        self.params = params
-        self.opt_state = init_opt_state(params, tcfg.adamw)
-        self.selector = make_selector(tcfg.selector, **dict(tcfg.selector_kwargs))
-        if tcfg.rollout_engine not in ("continuous", "legacy"):
-            raise ValueError(f"unknown rollout_engine {tcfg.rollout_engine!r}")
-        if tcfg.rollout_engine == "continuous" and not model_cfg.num_codebooks:
-            from repro.rl.engine import ContinuousRolloutEngine, EngineConfig
-
-            self.engine = ContinuousRolloutEngine(
-                model_cfg, tcfg.rollout, EngineConfig(
-                    num_slots=tcfg.num_slots
-                    or tcfg.prompts_per_step * tcfg.rollout.group_size,
-                    max_prompt_len=tcfg.max_prompt_len,
-                    steps_per_sync=tcfg.steps_per_sync))
-        else:
-            # legacy scan — explicit opt-out, or codebook models (audio),
-            # which the slot arena does not serve yet
-            self.engine = None
-        self.step_count = 0
-        self._train_step = jax.jit(make_train_step(
-            model_cfg, tcfg.grpo, tcfg.adamw, mesh=mesh, rules=rules,
-            vocab_chunks=1))
-        t_max = tcfg.max_prompt_len + tcfg.rollout.max_new_tokens
-        self.ladder = bucket_ladder(t_max, tcfg.num_buckets, tcfg.bucket_align)
-        self.history: list = []
-
-    # ------------------------------------------------------------------ step
-    def train_step(self) -> dict:
-        t0 = time.perf_counter()
-        tcfg = self.tcfg
-        pb = next(self.pipeline)
-        self.key, k_roll, k_sel = jax.random.split(self.key, 3)
-
-        if self.engine is not None:
-            rb = rollout_group_continuous(
-                self.params, self.model_cfg, tcfg.rollout,
-                pb.tokens, pb.prompt_lens, k_roll, engine=self.engine)
-        else:
-            rb = rollout_group(self.params, self.model_cfg, tcfg.rollout,
-                               pb.tokens, pb.prompt_lens, k_roll)
-        t_roll = time.perf_counter()
-
-        # rewards on FULL responses (never affected by token selection)
-        p, g = tcfg.prompts_per_step, tcfg.rollout.group_size
-        rewards = np.zeros((p, g), np.float32)
-        for i in range(p):
-            for j in range(g):
-                r = i * g + j
-                pl, rl = int(rb.prompt_lens[r]), int(rb.response_lens[r])
-                resp = rb.tokens[r, pl:pl + rl]
-                rewards[i, j] = self.env.reward(pb.prompts[i], resp)
-        adv = np.asarray(group_advantages(jnp.asarray(rewards),
-                                          tcfg.grpo.adv_eps)).reshape(-1)
-
-        # NAT selection
-        rmask = jnp.asarray(rb.response_mask)
-        if isinstance(self.selector, EntropySelector):
-            sel = self.selector(k_sel, rmask, jnp.asarray(rb.entropies))
-        else:
-            sel = self.selector(k_sel, rmask)
-        ht_w = np.asarray(sel.ht_weights, np.float32)
-        keep_len = np.asarray(sel.keep_len)
-
-        batch = {
-            "tokens": rb.tokens,
-            "response_mask": rb.response_mask,
-            "old_logp": rb.old_logp,
-            "advantages": adv.astype(np.float32),
-            "ht_weights": ht_w,
-            "orig_lengths": rb.response_lens.astype(np.float32),
-            "lengths": (rb.prompt_lens + rb.response_lens).astype(np.int32),
-        }
-
-        # physical prefix truncation (RPC / Det-Trunc): slice to bucket
-        if tcfg.repack and sel.prefix_structured:
-            keep_total = rb.prompt_lens + np.minimum(keep_len, rb.response_lens)
-            t_new = pick_bucket(int(keep_total.max()), self.ladder)
-            t_new = min(t_new, rb.tokens.shape[1])
-            batch = {k: (v[:, :t_new] if getattr(v, "ndim", 0) >= 2 else v)
-                     for k, v in batch.items()}
-            batch["lengths"] = keep_total.astype(np.int32)
-        t_sel = time.perf_counter()
-
-        self.params, self.opt_state, metrics = self._train_step(
-            self.params, self.opt_state, {k: jnp.asarray(v)
-                                          for k, v in batch.items()})
-        metrics = {k: float(v) for k, v in metrics.items()}
-        t_end = time.perf_counter()
-
-        rstats = rb.stats or {}
-        metrics.update(
-            reward_mean=float(rewards.mean()),
-            reward_max=float(rewards.max(axis=1).mean()),
-            completed_frac=float(rb.completed.mean()),
-            resp_len_mean=float(rb.response_lens.mean()),
-            learner_tokens=int(batch["tokens"].shape[0] * batch["tokens"].shape[1]),
-            bucket_len=int(batch["tokens"].shape[1]),
-            # rollout token cost: with the slot arena, over-provisioned groups
-            # pay for generated tokens, not G' full budgets (ISSUE 2)
-            tokens_generated=int(rstats.get("tokens_generated", 0)),
-            tokens_budget=int(rstats.get("tokens_budget", 0)),
-            rollout_decode_steps=int(rstats.get("decode_steps", 0)),
-            rollout_cancelled=int(rstats.get("cancelled", 0)),
-            rollout_utilization=(
-                rstats.get("tokens_generated", 0)
-                / max(rstats.get("slot_substeps", 0), 1)),
-            entropy_behavior=float(
-                (rb.entropies * rb.response_mask).sum()
-                / max(rb.response_mask.sum(), 1)),
-            time_rollout=t_roll - t0,
-            time_select=t_sel - t_roll,
-            time_learn=t_end - t_sel,
-            time_total=t_end - t0,
-            step=self.step_count,
-        )
-        self.step_count += 1
-        self.history.append(metrics)
-        return metrics
-
-    def run(self, num_steps: int, log_every: int = 0) -> list:
-        for i in range(num_steps):
-            m = self.train_step()
-            if log_every and i % log_every == 0:
-                print(f"step {m['step']:4d} reward={m['reward_mean']:.3f} "
-                      f"loss={m['loss']:+.4f} sel={m.get('selected_ratio', 1):.2f} "
-                      f"bucket={m['bucket_len']} t={m['time_total']:.2f}s")
-        return self.history
-
-    # ------------------------------------------------------------------ eval
-    def evaluate(self, num_prompts: int = 32, temperature: float = 0.0) -> dict:
-        """Greedy accuracy on fresh prompts (reward == 1 counts as correct).
-
-        Uses the legacy single-wave path: eval is G=1 with no
-        over-provisioning, so there is no recycling for the arena to
-        exploit, and the training engine's jit cache (keyed on the training
-        RolloutConfig) is left untouched."""
-        from repro.data.pipeline import PromptPipeline
-
-        pipe = PromptPipeline(self.env, batch_size=num_prompts,
-                              max_prompt_len=self.tcfg.max_prompt_len,
-                              seed=self.tcfg.seed + 10_000)
-        pb = next(pipe)
-        rcfg = dataclasses.replace(self.tcfg.rollout, temperature=temperature,
-                                   group_size=1, overprovision=1.0)
-        self.key, k = jax.random.split(self.key)
-        rb = rollout_group(self.params, self.model_cfg, rcfg,
-                           pb.tokens, pb.prompt_lens, k)
-        correct = 0
-        for i in range(num_prompts):
-            pl, rl = int(rb.prompt_lens[i]), int(rb.response_lens[i])
-            r = self.env.reward(pb.prompts[i], rb.tokens[i, pl:pl + rl])
-            correct += int(r >= 1.0)
-        return {"accuracy": correct / num_prompts,
-                "resp_len": float(rb.response_lens.mean())}
+                 params=None, mesh=None, rules=None, budget_fn=None):
+        if tcfg.max_staleness != 0:
+            tcfg = dataclasses.replace(tcfg, max_staleness=0)
+        super().__init__(model_cfg, tcfg, params=params, mesh=mesh,
+                         rules=rules, budget_fn=budget_fn)

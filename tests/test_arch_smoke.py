@@ -13,6 +13,10 @@ from repro.models import forward_hidden, init_params, model_decl
 from repro.optim import AdamWConfig, init_opt_state
 from repro.rl.learner import make_train_step
 
+# the full model-zoo sweep is breadth coverage, not a fast-tier gate:
+# CI's jax matrix skips it (-m 'not slow'); a non-blocking job runs it
+pytestmark = pytest.mark.slow
+
 B, T = 2, 32
 
 

@@ -112,6 +112,7 @@ def test_prefill_decode_matches_teacher_forcing(name):
                                rtol=5e-2, atol=5e-2)
 
 
+@pytest.mark.slow
 def test_variable_prefill_lengths():
     """Rows with different prompt lengths decode correctly (padding never
     leaks into caches — incl. recurrent states)."""

@@ -3,6 +3,7 @@ schedule."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # pragma: no cover - CI installs hypothesis
@@ -47,6 +48,7 @@ def test_int8_matches_fp32_closely():
     np.testing.assert_allclose(out["int8"], np.asarray(tgt), atol=0.06)
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(st.integers(0, 10_000), st.integers(1, 3))
 def test_quantize_roundtrip(seed, nd):
