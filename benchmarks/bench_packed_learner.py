@@ -1,0 +1,149 @@
+"""Packed vs padded learner step: update FLOPs scale with the token budget.
+
+NAT's update-side claim (paper §4, Fig. 3) realized as a systems number:
+the same HT-GRPO step is timed on the padded (B, T) grid and on the
+PackedLayout batch (core/layout.py) for both selector families at a 50%
+keep budget —
+
+  * RPC (min_cut 8): kept prefixes, hull ≈ prompt + cut,
+  * URS (p = 0.5): scattered picks, hull runs to the last kept token, so
+    packing monetizes response-length raggedness rather than the cut.
+
+Response lengths follow the 80/20 straggler mix every perf bench in this
+repo gates on (80% short responses, 20% full-budget): that raggedness is
+what the padded grid pays for and what URS packing reclaims — with
+near-uniform full-length responses the URS hull IS the response and only
+RPC's cut shortens the update.
+
+Emitted rows (BENCH_* perf trajectory, gated in benchmarks/check_gates.py):
+  packed/rpc_step, packed/urs_step — step time, tokens scored, ratio
+  packed/tokens_scored_ratio      — the WORST per-selector ratio; CI gates
+                                    <= 0.65 (the packed path must beat the
+                                    padded grid by >= 35% scored tokens)
+
+Both paths run the identical estimator — tests/test_layout.py pins
+loss/grad parity — so the ratio is pure dead-compute removal.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.grpo import GRPOConfig
+from repro.core.layout import make_layout
+from repro.core.repack import bucket_ladder
+from repro.core.selectors import make_selector
+from repro.models import init_params, model_decl
+from repro.models.config import ModelConfig, dense_blocks
+from repro.optim import AdamWConfig, init_opt_state
+from repro.rl import VOCAB_SIZE
+from repro.rl.learner import make_train_step
+
+B = 32               # responses per step
+T = 256              # padded grid width
+PROMPT = 24          # fixed prompt length
+LONG_EVERY = 5       # rows with r % 5 == 0 run the full budget (20% long)
+SEED = 0
+
+
+def _model():
+    return ModelConfig(name="bench-packed", d_model=128, n_heads=8,
+                       n_kv_heads=4, head_dim=16, d_ff=256,
+                       vocab_size=VOCAB_SIZE, blocks=dense_blocks(2),
+                       seq_parallel=False, remat_policy="none",
+                       scan_layers=False)
+
+
+def _response_lens() -> np.ndarray:
+    """Deterministic 80/20 straggler mix (matches the rollout/async benches):
+    every 5th row decodes the full budget, the rest stop early."""
+    full = T - PROMPT
+    return np.array(
+        [full if r % LONG_EVERY == 0 else 32 + (r * 7919) % 33
+         for r in range(B)], np.int32)
+
+
+def _batch(rng):
+    """Synthetic rollout-shaped batch with ragged response lengths."""
+    prompt_lens = np.full(B, PROMPT, np.int32)
+    response_lens = _response_lens()
+    tokens = rng.integers(1, VOCAB_SIZE, (B, T)).astype(np.int32)
+    rmask = np.zeros((B, T), np.float32)
+    for r in range(B):
+        rmask[r, PROMPT:PROMPT + response_lens[r]] = 1
+        tokens[r, PROMPT + response_lens[r]:] = 0
+    old_logp = (rng.standard_normal((B, T)) * 0.1 - 2).astype(np.float32)
+    old_logp *= rmask
+    return {
+        "tokens": tokens,
+        "response_mask": rmask,
+        "old_logp": old_logp,
+        "advantages": rng.standard_normal(B).astype(np.float32),
+        "orig_lengths": response_lens.astype(np.float32),
+        "lengths": (prompt_lens + response_lens).astype(np.int32),
+        "behavior_logp": old_logp,
+        "staleness": np.zeros((B,), np.float32),
+    }, prompt_lens, response_lens, rmask
+
+
+def run():
+    cfg = _model()
+    gcfg = GRPOConfig()
+    ocfg = AdamWConfig(lr=1e-4, warmup_steps=5, total_steps=1000)
+    params = init_params(jax.random.PRNGKey(SEED), model_decl(cfg))
+    opt = init_opt_state(params, ocfg)
+    rng = np.random.default_rng(SEED)
+    batch, prompt_lens, response_lens, rmask = _batch(rng)
+    ladder = bucket_ladder(T, 4, 128)
+
+    step_pad = jax.jit(make_train_step(cfg, gcfg, ocfg, vocab_chunks=1))
+    step_pk = jax.jit(make_train_step(cfg, gcfg, ocfg, vocab_chunks=1,
+                                      packed=True))
+
+    padded_tokens = B * T
+    t_pad = None
+    worst_ratio = 0.0
+    print(f"# packed learner: B={B} T={T} prompt={PROMPT} "
+          f"(padded grid {padded_tokens} tokens/step)")
+    for sel_name, kw in (("rpc", {"min_cut": 8}), ("urs", {"p": 0.5})):
+        sel = make_selector(sel_name, **kw)(
+            jax.random.PRNGKey(SEED + 7), jnp.asarray(rmask))
+        b = dict(batch)
+        b["ht_weights"] = np.asarray(sel.ht_weights, np.float32)
+
+        jb = {k: jnp.asarray(v) for k, v in b.items()}
+        if t_pad is None:  # selector-independent: same grid either way
+            t_pad = time_call(lambda bb: step_pad(params, opt, bb), jb)
+
+        lb = make_layout("packed").build(
+            b, prompt_lens=prompt_lens, response_lens=response_lens,
+            keep_len=np.asarray(sel.keep_len),
+            keep_mask=b["ht_weights"] > 0,
+            prefix_structured=sel.prefix_structured, ladder=ladder)
+        jpk = {k: jnp.asarray(v) for k, v in lb.data.items()}
+        t_pk = time_call(lambda bb: step_pk(params, opt, bb), jpk)
+
+        ratio = lb.tokens_scored / padded_tokens
+        worst_ratio = max(worst_ratio, ratio)
+        emit(f"packed/{sel_name}_step", t_pk,
+             f"tokens_scored={lb.tokens_scored};ratio={ratio:.4f};"
+             f"rows={lb.num_rows};pack_len={lb.row_len};"
+             f"pack_efficiency={lb.pack_efficiency:.4f};"
+             f"speedup={t_pad / t_pk:.3f}")
+        print(f"  {sel_name}: {lb.tokens_scored} tokens/step "
+              f"({lb.num_rows}x{lb.row_len}, ratio {ratio:.3f}, "
+              f"kept/scored {lb.pack_efficiency:.3f}), "
+              f"{t_pk * 1e3:.1f} ms vs padded {t_pad * 1e3:.1f} ms "
+              f"({t_pad / t_pk:.2f}x)")
+
+    emit("packed/padded_step", t_pad, f"tokens_scored={padded_tokens}")
+    # the gated row: worst selector ratio at the 50% budget
+    emit("packed/tokens_scored_ratio", 0.0,
+         f"tokens_scored_ratio={worst_ratio:.4f}")
+    print(f"  worst tokens_scored ratio: {worst_ratio:.3f} (gate <= 0.65)")
+
+
+if __name__ == "__main__":
+    run()

@@ -12,7 +12,11 @@ the workflow YAML never embeds filenames or heredoc Python:
 Gating policy:
   * absolute floors on the headline speedups (rollout/speedup >= 1.5x,
     async/overlap_speedup >= 1.3x),
-  * >10% regression vs the newest committed artifact on those same rows,
+  * absolute ceilings on cost ratios (packed/tokens_scored_ratio <= 0.65:
+    the packed learner must keep beating the padded grid by >= 35% scored
+    tokens at a 50% keep budget),
+  * >10% regression vs the newest committed artifact on those same rows
+    (drop for floors, rise for ceilings),
   * a gated row present in the baseline but missing from the fresh run is
     a failure (a silently dropped suite is not a pass),
   * every other shared metric is reported (trajectory visibility), never
@@ -27,12 +31,16 @@ import os
 import re
 import sys
 
-# row name -> (metric key, absolute floor)
+# row name -> (metric key, absolute floor): higher is better
 GATES = {
     "rollout/speedup": ("speedup", 1.5),
     "async/overlap_speedup": ("speedup", 1.3),
 }
-REL_REGRESSION = 0.10  # gated metrics may not drop >10% vs the baseline
+# row name -> (metric key, absolute ceiling): lower is better
+CEILINGS = {
+    "packed/tokens_scored_ratio": ("tokens_scored_ratio", 0.65),
+}
+REL_REGRESSION = 0.10  # gated metrics may not regress >10% vs the baseline
 
 
 def committed_benches(root: str) -> list:
@@ -77,19 +85,22 @@ def check(fresh_path: str, root: str) -> int:
                     continue
                 print(f"  {name}:{mk}: {bv:.4g} -> {fv:.4g} "
                       f"({(fv / bv - 1) * 100:+.1f}%)")
-        for name, (mk, _floor) in GATES.items():
-            if name not in base or mk not in base[name]:
-                continue
-            if name not in fresh or mk not in fresh[name]:
-                failures.append(f"gated row {name} missing from fresh run")
-                continue
-            fv, bv = fresh[name][mk], base[name][mk]
-            if fv < bv * (1.0 - REL_REGRESSION):
-                failures.append(
-                    f"{name}:{mk} regressed >{REL_REGRESSION:.0%}: "
-                    f"{bv:.3f} -> {fv:.3f}")
+        for gated, lower_is_better in ((GATES, False), (CEILINGS, True)):
+            for name, (mk, _bound) in gated.items():
+                if name not in base or mk not in base[name]:
+                    continue
+                if name not in fresh or mk not in fresh[name]:
+                    failures.append(f"gated row {name} missing from fresh run")
+                    continue
+                fv, bv = fresh[name][mk], base[name][mk]
+                worse = (fv > bv * (1.0 + REL_REGRESSION) if lower_is_better
+                         else fv < bv * (1.0 - REL_REGRESSION))
+                if worse:
+                    failures.append(
+                        f"{name}:{mk} regressed >{REL_REGRESSION:.0%}: "
+                        f"{bv:.3f} -> {fv:.3f}")
     else:
-        print("# perf trajectory: no committed baseline, floors only")
+        print("# perf trajectory: no committed baseline, floors/ceilings only")
 
     for name, (mk, floor) in GATES.items():
         if name in fresh and mk in fresh[name]:
@@ -98,6 +109,13 @@ def check(fresh_path: str, root: str) -> int:
             print(f"  gate {name}:{mk} = {fv:.3f} (floor {floor}) {status}")
             if fv < floor:
                 failures.append(f"{name}:{mk} below floor {floor}: {fv:.3f}")
+    for name, (mk, ceil) in CEILINGS.items():
+        if name in fresh and mk in fresh[name]:
+            fv = fresh[name][mk]
+            status = "ok" if fv <= ceil else "FAIL"
+            print(f"  gate {name}:{mk} = {fv:.3f} (ceiling {ceil}) {status}")
+            if fv > ceil:
+                failures.append(f"{name}:{mk} above ceiling {ceil}: {fv:.3f}")
 
     if failures:
         print("# PERF GATES FAILED")

@@ -25,7 +25,7 @@ def main():
                     help="paper-scale draws/steps/seeds (slow)")
     ap.add_argument("--only", default="",
                     help="comma list: unbiasedness,gradnorm,matrix,ratio,"
-                         "efficiency,quality,rollout,async,roofline")
+                         "efficiency,quality,rollout,async,packed,roofline")
     ap.add_argument("--json", default="",
                     help="write aggregated machine-readable results here")
     args = ap.parse_args()
@@ -62,6 +62,10 @@ def main():
     if on("async"):
         from benchmarks import bench_async_overlap
         bench_async_overlap.run()
+        print()
+    if on("packed"):
+        from benchmarks import bench_packed_learner
+        bench_packed_learner.run()
         print()
     if on("quality"):
         from benchmarks import bench_quality

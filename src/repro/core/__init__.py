@@ -1,5 +1,6 @@
 """NAT core: token selectors, Horvitz-Thompson reweighting, GRPO objective,
-and physical prefix repacking — the paper's primary contribution."""
+physical prefix repacking, and learner batch layouts — the paper's primary
+contribution."""
 from repro.core.grpo import (
     GRPOConfig,
     clipped_surrogate,
@@ -9,6 +10,16 @@ from repro.core.grpo import (
     nat_grpo_loss,
     token_entropy_from_logits,
     token_logprobs_from_logits,
+)
+from repro.core.layout import (
+    BatchLayout,
+    BucketedLayout,
+    LayoutBatch,
+    PackedLayout,
+    PaddedLayout,
+    layout_names,
+    make_layout,
+    plan_pack,
 )
 from repro.core.repack import (
     RepackPlan,
@@ -35,6 +46,8 @@ __all__ = [
     "GRPOConfig", "clipped_surrogate", "full_token_loss_reference",
     "group_advantages", "kl_k3", "nat_grpo_loss",
     "token_entropy_from_logits", "token_logprobs_from_logits",
+    "BatchLayout", "BucketedLayout", "LayoutBatch", "PackedLayout",
+    "PaddedLayout", "layout_names", "make_layout", "plan_pack",
     "RepackPlan", "apply_plan", "bucket_ladder", "expected_token_savings",
     "pick_bucket", "plan_microbatches", "repack_batch",
     "DetTruncSelector", "EntropySelector", "FullSelector", "RPCSelector",

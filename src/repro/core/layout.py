@@ -1,0 +1,261 @@
+"""Batch layouts: how a learner step lays selected tokens out in memory.
+
+NAT's update-side claim is that train FLOPs scale with the kept-token
+*budget*, not the padded grid (paper §4, Fig. 3).  Whether the learner
+actually realizes that depends entirely on the physical batch layout, so the
+layout is a first-class, swappable object (DESIGN.md §7):
+
+* ``PaddedLayout``  — the (B, T) grid as rolled out.  Zero host work, full
+  padded cost.  The reference every other layout must match numerically.
+* ``BucketedLayout`` — prefix-structured selectors (RPC / Det-Trunc) slice
+  every row to the smallest static bucket covering ``prompt + cut``
+  (core/repack.py ladder).  One executable per bucket; per-row stragglers
+  still pad the whole microbatch to the shared bucket length.
+* ``PackedLayout``  — bin-packs each response's kept-span hull (prompt +
+  response tokens up to the last kept index) end to end into fixed
+  ``(num_rows, pack_len)`` rows with per-token segment IDs and ORIGINAL
+  position IDs.  Dead padding is bounded by the bins' tails instead of
+  per-row stragglers, and — unlike bucketing — it also compresses URS-style
+  scattered selections (their hull ends at the last kept token, not at T).
+
+The packed invariant (tested in tests/test_layout.py): every kept token's
+forward context is exactly its own segment, so logp / loss / grads match
+the padded reference per token, and the HT estimator (Eq. 6) is untouched
+— the layout changes WHERE tokens sit, never WHICH tokens contribute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.repack import pick_bucket
+
+# Segment id for padding slots in packed rows: larger than any real pack id,
+# so per-row segment ids stay monotone (the kernel's block-range skip relies
+# on min/max block summaries) and padding only ever attends to itself.
+PAD_SEGMENT = np.int32(2**30)
+
+
+@dataclasses.dataclass
+class LayoutBatch:
+    """A layout's output: the learner batch plus its cost accounting."""
+
+    data: dict                # arrays for the (jitted) train step
+    packed: bool              # True -> the learner needs the packed loss path
+    tokens_scored: int        # tokens the update physically processes
+    kept_tokens: int          # tokens with nonzero HT weight (the budget)
+    num_rows: int
+    row_len: int
+
+    @property
+    def pack_efficiency(self) -> float:
+        """kept tokens / scored tokens — 1.0 means zero dead compute."""
+        return self.kept_tokens / max(self.tokens_scored, 1)
+
+
+class BatchLayout:
+    """Strategy interface: host-side transform of the (B, T) learner batch.
+
+    ``build`` consumes the trainer's padded batch dict ((B, T) per-token
+    leaves + (B,) per-response leaves) plus the selection geometry, and
+    returns the arrays the train step runs on.  Implementations must be
+    deterministic functions of their inputs — the async trainer's replay /
+    checkpoint contract depends on it.
+    """
+
+    name: str = "base"
+    packed: bool = False
+
+    def build(
+        self,
+        batch: dict,
+        *,
+        prompt_lens: np.ndarray,
+        response_lens: np.ndarray,
+        keep_len: np.ndarray,
+        keep_mask: np.ndarray,
+        prefix_structured: bool,
+        ladder: Sequence[int],
+    ) -> LayoutBatch:
+        raise NotImplementedError
+
+    @staticmethod
+    def _kept(keep_mask: np.ndarray) -> int:
+        return int(np.asarray(keep_mask).astype(bool).sum())
+
+
+class PaddedLayout(BatchLayout):
+    """The identity layout: score the full (B, T) grid as rolled out."""
+
+    name = "padded"
+
+    def build(self, batch, *, prompt_lens, response_lens, keep_len,
+              keep_mask, prefix_structured, ladder) -> LayoutBatch:
+        b, t = batch["tokens"].shape[:2]
+        return LayoutBatch(data=dict(batch), packed=False,
+                           tokens_scored=b * t,
+                           kept_tokens=self._kept(keep_mask),
+                           num_rows=b, row_len=t)
+
+
+class BucketedLayout(BatchLayout):
+    """Physical prefix truncation to the repack bucket ladder.
+
+    Exactly the historical trainer behavior (bit-for-bit: the staleness-0
+    parity oracle in tests/test_async_trainer.py runs against this): for
+    prefix-structured selections, slice every (B, T) leaf to the smallest
+    bucket covering max(prompt + cut) and set ``lengths`` to the per-row
+    keep totals; unstructured selections fall back to the padded grid.
+    """
+
+    name = "bucketed"
+
+    def build(self, batch, *, prompt_lens, response_lens, keep_len,
+              keep_mask, prefix_structured, ladder) -> LayoutBatch:
+        b, t = batch["tokens"].shape[:2]
+        if not prefix_structured:
+            return LayoutBatch(data=dict(batch), packed=False,
+                               tokens_scored=b * t,
+                               kept_tokens=self._kept(keep_mask),
+                               num_rows=b, row_len=t)
+        keep_total = prompt_lens + np.minimum(keep_len, response_lens)
+        t_new = min(pick_bucket(int(keep_total.max()), ladder), t)
+        data = {k: (v[:, :t_new] if getattr(v, "ndim", 0) >= 2 else v)
+                for k, v in batch.items()}
+        data["lengths"] = keep_total.astype(np.int32)
+        return LayoutBatch(data=data, packed=False,
+                           tokens_scored=b * t_new,
+                           kept_tokens=self._kept(keep_mask),
+                           num_rows=b, row_len=t_new)
+
+
+@dataclasses.dataclass
+class PackedLayout(BatchLayout):
+    """Bin-pack kept-span hulls into dense ``(num_rows, pack_len)`` rows.
+
+    Per response b the *hull* is grid span ``[0, h_b)`` with ``h_b`` = last
+    kept index + 1 — the prompt plus every response token needed to
+    condition the kept ones (for RPC the hull IS the kept prefix; for URS
+    it covers the gaps between scattered picks, which the model must still
+    score for exact conditioning).  Hulls are first-fit-decreasing packed
+    into rows of ``pack_len`` = the ladder bucket covering the longest
+    hull, so dead padding is bounded by the bins' tails.
+
+    Emitted per-token arrays (alongside every packed batch leaf):
+      positions    — ORIGINAL grid position of each token (rope stays exact)
+      segment_ids  — per-row-monotone pack ids; padding = PAD_SEGMENT.
+                     Feed these to the model: attention masks on equality,
+                     and the Pallas kernel skips whole KV blocks whose
+                     segment range cannot intersect the query block's.
+      resp_ids     — original response index in [0, B); padding = 0 (inert:
+                     padding HT weight is 0).  Feed these to the loss for
+                     the segment-scatter back to per-response sums.
+
+    Responses with no kept tokens are not packed at all — their Eq. 6 term
+    is exactly 0 either way, and the loss means over ``num_segments`` = B
+    regardless.  ``row_quant`` rounds the row count up (fewer distinct
+    shapes -> fewer jit recompiles) at the cost of whole padding rows.
+    """
+
+    row_quant: int = 1
+    name: str = "packed"
+    packed: bool = True
+
+    def build(self, batch, *, prompt_lens, response_lens, keep_len,
+              keep_mask, prefix_structured, ladder) -> LayoutBatch:
+        b, t = batch["tokens"].shape[:2]
+        keep_mask = np.asarray(keep_mask).astype(bool)
+        kept = int(keep_mask.sum())
+        # hull end per row: one past the last kept grid index (0 if none)
+        any_kept = keep_mask.any(axis=1)
+        hull = np.where(any_kept,
+                        t - np.argmax(keep_mask[:, ::-1], axis=1), 0)
+        hull = hull.astype(np.int64)
+
+        pack_len = min(pick_bucket(int(max(hull.max(), 1)), ladder), t)
+        plan = plan_pack(hull, pack_len)
+        rows = max(len(plan), 1)
+        if self.row_quant > 1:
+            rows = int(np.ceil(rows / self.row_quant)) * self.row_quant
+
+        data = {}
+        for key, v in batch.items():
+            if key == "lengths":
+                continue  # padded-grid key mask; meaningless once packed
+            if getattr(v, "ndim", 0) >= 2:
+                data[key] = np.zeros((rows, pack_len) + v.shape[2:], v.dtype)
+            else:
+                data[key] = v  # per-response leaves ride through as (B,)
+        positions = np.zeros((rows, pack_len), np.int32)
+        segment_ids = np.full((rows, pack_len), PAD_SEGMENT, np.int32)
+        resp_ids = np.zeros((rows, pack_len), np.int32)
+
+        pack_id = 0
+        for r, row in enumerate(plan):
+            off = 0
+            for src in row:
+                h = int(hull[src])
+                for key, v in batch.items():
+                    if key != "lengths" and getattr(v, "ndim", 0) >= 2:
+                        data[key][r, off:off + h] = v[src, :h]
+                positions[r, off:off + h] = np.arange(h, dtype=np.int32)
+                segment_ids[r, off:off + h] = pack_id
+                resp_ids[r, off:off + h] = src
+                pack_id += 1
+                off += h
+        data["positions"] = positions
+        data["segment_ids"] = segment_ids
+        data["resp_ids"] = resp_ids
+        return LayoutBatch(data=data, packed=True,
+                           tokens_scored=rows * pack_len, kept_tokens=kept,
+                           num_rows=rows, row_len=pack_len)
+
+
+def plan_pack(hull: np.ndarray, pack_len: int) -> list:
+    """First-fit-decreasing bin packing of hull lengths into ``pack_len``
+    bins.  Returns a list of rows, each a list of source row indices in
+    placement order.  Deterministic: ties broken by original index
+    (stable argsort).  Zero-length hulls are skipped entirely.
+    """
+    order = np.argsort(-hull, kind="stable")
+    rows: list = []
+    space: list = []
+    for src in order:
+        h = int(hull[src])
+        if h == 0:
+            continue
+        if h > pack_len:
+            raise ValueError(f"hull {h} exceeds pack_len {pack_len}")
+        for r, free in enumerate(space):
+            if free >= h:
+                rows[r].append(int(src))
+                space[r] -= h
+                break
+        else:
+            rows.append([int(src)])
+            space.append(pack_len - h)
+    return rows
+
+
+_LAYOUTS = {
+    "padded": PaddedLayout,
+    "bucketed": BucketedLayout,
+    "packed": PackedLayout,
+}
+
+
+def make_layout(name: str, **kwargs) -> BatchLayout:
+    """Factory: ``make_layout('packed', row_quant=2)``."""
+    try:
+        cls = _LAYOUTS[name]
+    except KeyError as e:
+        raise ValueError(
+            f"unknown layout {name!r}; available: {sorted(_LAYOUTS)}"
+        ) from e
+    return cls(**kwargs)
+
+
+def layout_names() -> tuple:
+    return tuple(sorted(_LAYOUTS))

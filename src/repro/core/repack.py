@@ -40,11 +40,19 @@ def bucket_ladder(max_len: int, num_buckets: int = 4,
 
 
 def pick_bucket(needed: int, ladder: Sequence[int]) -> int:
-    """Smallest ladder entry >= needed (host-side planning; static result)."""
+    """Smallest ladder entry >= needed (host-side planning; static result).
+
+    Raises when no entry covers ``needed``: silently returning ``ladder[-1]``
+    would TRUNCATE kept tokens — a wrong-answer failure mode, not a
+    performance one — so an undersized ladder is a hard error at plan time.
+    """
     for b in ladder:
         if b >= needed:
             return b
-    return ladder[-1]
+    raise ValueError(
+        f"needed length {needed} exceeds the bucket ladder (max "
+        f"{ladder[-1] if len(ladder) else 'empty'}): kept tokens would be "
+        "silently dropped; build the ladder from the true max length")
 
 
 @dataclasses.dataclass(frozen=True)

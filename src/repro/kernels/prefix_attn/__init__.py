@@ -1,4 +1,16 @@
-from repro.kernels.prefix_attn.ops import attention_bthd, prefix_flash_attention
-from repro.kernels.prefix_attn.ref import attention_ref
+from repro.kernels.prefix_attn.ops import (
+    attention_bthd,
+    packed_attention_bthd,
+    packed_flash_attention,
+    prefix_flash_attention,
+)
+from repro.kernels.prefix_attn.ref import attention_ref, packed_attention_ref
 
-__all__ = ["attention_bthd", "prefix_flash_attention", "attention_ref"]
+__all__ = [
+    "attention_bthd",
+    "packed_attention_bthd",
+    "packed_flash_attention",
+    "prefix_flash_attention",
+    "attention_ref",
+    "packed_attention_ref",
+]

@@ -1,10 +1,14 @@
-"""Pure-jnp oracle for prefix-aware causal (windowed) attention.
+"""Pure-jnp oracles for prefix-aware and packed (segment-id) attention.
 
-Semantics shared with the kernel:
+Semantics shared with the kernels:
   * causal: query i attends keys j <= i,
   * window w > 0: additionally j > i - w,
   * cut_lens (B,): positions t >= cut_lens[b] are INVALID — both as queries
     and keys (RPC physical truncation).  Outputs at invalid query rows are 0.
+  * segment_ids (B, T) (packed variant): query i additionally attends only
+    keys with the SAME segment id — packed neighbors are invisible to each
+    other.  Padding slots carry a sentinel id, so they self-attend (their
+    diagonal keeps the softmax row non-empty) without touching real tokens.
 """
 from __future__ import annotations
 
@@ -44,4 +48,36 @@ def attention_ref(q, k, v, cut_lens, *, window: int = 0):
     row_ok = l > 0
     o = jnp.where(row_ok[..., None], o, 0.0)
     lse = jnp.where(row_ok, m_safe + jnp.log(jnp.maximum(l, 1e-30)), 0.0)
+    return o.astype(q.dtype), lse
+
+
+def packed_attention_ref(q, k, v, segment_ids):
+    """Packed-layout causal attention: same-segment visibility only.
+
+    q: (B, H, T, D); k/v: (B, KV, T, D) with H % KV == 0; segment_ids
+    (B, T) int32.  Returns (out (B, H, T, D), logsumexp (B, H, T)).  The
+    diagonal is always visible (j == i shares i's segment), so every
+    softmax row is non-empty — no NaN path even on padding.
+    """
+    b, h, t, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    scale = 1.0 / jnp.sqrt(d)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(F32), k.astype(F32)) * scale
+    qi = jnp.arange(t)[:, None]
+    kj = jnp.arange(t)[None, :]
+    mask = (kj <= qi)[None, None]
+    mask = mask & (segment_ids[:, None, :, None]
+                   == segment_ids[:, None, None, :])
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(F32))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    lse = m_safe + jnp.log(jnp.maximum(l, 1e-30))
     return o.astype(q.dtype), lse

@@ -51,8 +51,19 @@ def params_and_shardings(cfg: ModelConfig, mesh, rules: ShardingRules):
 
 # ------------------------------------------------------------------- train
 def train_inputs(cfg: ModelConfig, shape: ShapeSpec, mesh,
-                 rules: ShardingRules = DEFAULT_RULES):
-    """Abstract NAT-GRPO learner batch for the (global_batch, seq) grid."""
+                 rules: ShardingRules = DEFAULT_RULES,
+                 layout: str = "padded",
+                 num_segments: Optional[int] = None):
+    """Abstract NAT-GRPO learner batch.
+
+    ``layout="padded"`` is the (global_batch, seq) grid — the bucketed
+    layout lowers the same executable at each ladder length, so one padded
+    cell per bucket covers it.  ``layout="packed"`` is the dense packed
+    batch (core/layout.py): ``global_batch`` counts PACKED ROWS, ``seq``
+    is the pack length, per-token id planes ride along, and per-response
+    leaves are (num_segments,) — default 2 segments per packed row, the
+    steady state at the paper's ~50% keep budget.
+    """
     b, t = shape.global_batch, shape.seq_len
     batch = {
         "tokens": SDS((b, t, cfg.num_codebooks) if cfg.num_codebooks else (b, t),
@@ -81,6 +92,21 @@ def train_inputs(cfg: ModelConfig, shape: ShapeSpec, mesh,
         "behavior_logp": ("batch", None),
         "staleness": ("batch",),
     }
+    if layout == "packed":
+        s = num_segments or 2 * b
+        del batch["lengths"], axes["lengths"]  # no padded-grid key mask
+        for key in ("advantages", "orig_lengths", "staleness"):
+            # per-RESPONSE leaves: segment count is decoupled from the row
+            # count, so they replicate (tiny) instead of sharding on batch
+            batch[key] = SDS((s,), jnp.float32)
+            axes[key] = (None,)
+        for key, ax in (("positions", ("batch", None)),
+                        ("segment_ids", ("batch", None)),
+                        ("resp_ids", ("batch", None))):
+            batch[key] = SDS((b, t), jnp.int32)
+            axes[key] = ax
+    elif layout != "padded":
+        raise ValueError(f"unknown step-spec layout {layout!r}")
     if cfg.num_image_tokens:
         batch["image_embeds"] = SDS(
             (b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
@@ -96,7 +122,9 @@ def make_train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
                     num_microbatches: int = 1,
                     unroll_microbatches: bool = False,
                     vocab_chunks: int = 8,
-                    constrain_grads: bool = True) -> CellSpec:
+                    constrain_grads: bool = True,
+                    layout: str = "padded",
+                    num_segments: Optional[int] = None) -> CellSpec:
     from repro.rl.learner import make_train_step
 
     opt_cfg = opt_cfg or AdamWConfig(moment_dtype="int8")
@@ -104,13 +132,15 @@ def make_train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
     abs_opt = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), abs_p)
     decl = model_decl(cfg)
     shard_opt = opt_state_shardings(abs_opt, param_specs(decl), mesh, rules)
-    batch, shard_b = train_inputs(cfg, shape, mesh, rules)
+    batch, shard_b = train_inputs(cfg, shape, mesh, rules, layout=layout,
+                                  num_segments=num_segments)
 
     step = make_train_step(cfg, grpo_cfg, opt_cfg,
                            num_microbatches=num_microbatches,
                            mesh=mesh, rules=rules, vocab_chunks=vocab_chunks,
                            unroll_microbatches=unroll_microbatches,
-                           param_shardings=shard_p if constrain_grads else None)
+                           param_shardings=shard_p if constrain_grads else None,
+                           packed=(layout == "packed"))
     metrics_shard = None  # replicated scalars
     return CellSpec(
         fn=step,

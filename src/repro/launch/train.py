@@ -52,6 +52,10 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--layout", default="",
+                    choices=["", "padded", "bucketed", "packed"],
+                    help="learner batch layout (core/layout.py, DESIGN.md "
+                         "§7); default derives from the selector's repack")
     ap.add_argument("--eval-prompts", type=int, default=32)
     args = ap.parse_args(argv)
 
@@ -70,6 +74,7 @@ def main(argv=None):
                               group_size=args.group_size,
                               overprovision=args.overprovision),
         adamw=AdamWConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps),
+        layout=args.layout,
         seed=args.seed,
     )
     trainer = NATGRPOTrainer(model_cfg, tcfg)

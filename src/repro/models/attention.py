@@ -73,6 +73,28 @@ def causal_window_mask(t: int, s: int, window: int, offset: int = 0) -> Array:
     return m
 
 
+def segment_mask(segment_ids: Array, positions: Array,
+                 window: int = 0) -> Array:
+    """(B, 1, T, T) packed-layout visibility mask.
+
+    Query i sees key j iff they belong to the same segment and j <= i in the
+    packed row (segments are stored in original token order, so row-index
+    causality equals position causality within a segment).  With a sliding
+    window the span is limited by ORIGINAL positions — ``positions`` restart
+    per segment, so window distance must not be measured on packed indices.
+    Cross-segment attention is what this mask exists to forbid: packed
+    neighbors share a row only as a storage artifact.
+    """
+    t = segment_ids.shape[-1]
+    qi = jnp.arange(t)[:, None]
+    kj = jnp.arange(t)[None, :]
+    m = (kj <= qi)[None]
+    m = m & (segment_ids[:, :, None] == segment_ids[:, None, :])
+    if window > 0:
+        m = m & ((positions[:, :, None] - positions[:, None, :]) < window)
+    return m[:, None]
+
+
 def self_attention(
     p,
     x: Array,
@@ -81,11 +103,15 @@ def self_attention(
     window: int,
     rope_theta: float,
     lengths: Optional[Array] = None,
+    segment_ids: Optional[Array] = None,
 ) -> Array:
     """Full-sequence self-attention (train / prefill).
 
     window <= 0 -> full causal.  ``lengths`` (B,) masks keys past each
     sequence's valid length (padding from the repack bucket ladder).
+    ``segment_ids`` (B, T) switches to the packed layout: attention is
+    confined to same-segment tokens (see ``segment_mask``) and ``lengths``
+    is ignored — packed rows carry no per-row valid prefix.
     """
     b, t, _ = x.shape
     h = p["wq"].shape[1]
@@ -98,8 +124,12 @@ def self_attention(
     k = apply_rope(k, positions, rope_theta)
     scale = 1.0 / jnp.sqrt(dh).astype(F32)
 
-    use_banded = window > 0 and t % window == 0 and t // window >= 2
-    if use_banded:
+    use_banded = (window > 0 and t % window == 0 and t // window >= 2
+                  and segment_ids is None)
+    if segment_ids is not None:
+        mask = segment_mask(segment_ids, positions, window)
+        o = sdpa(q, repeat_kv(k, h // kv), repeat_kv(v, h // kv), mask, scale)
+    elif use_banded:
         o = _banded_local_attention(q, repeat_kv(k, h // kv),
                                     repeat_kv(v, h // kv), window, scale, lengths)
     else:

@@ -70,17 +70,30 @@ def block_apply(
     image_embeds: Optional[Array],
     collect_cache: bool,
     shard=None,
+    segment_ids: Optional[Array] = None,
 ):
-    """Full-sequence application.  Returns (x, cache_entry_or_None, aux)."""
+    """Full-sequence application.  Returns (x, cache_entry_or_None, aux).
+
+    ``segment_ids`` (B, T) selects the packed batch layout: attention mixers
+    confine visibility to same-segment tokens.  Mixers whose state flows
+    along the row (ssm/rec) and cross-attention would leak across packed
+    neighbors, so they reject the packed layout.
+    """
     mixer = cfg.mixer_of(kind)
     mlp = cfg.mlp_of(kind)
+    if segment_ids is not None and mixer in ("ssm", "rec", "xattn"):
+        raise NotImplementedError(
+            f"packed layout (segment_ids) is not supported for {mixer!r} "
+            "mixers: recurrent state / image K-V would cross segment "
+            "boundaries; use the padded or bucketed layout")
     aux = jnp.zeros((), jnp.float32)
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
     cache_entry = None
     if mixer in ("attn", "local"):
         out, (k, v) = attn.self_attention(
             p["mixer"], h, positions, window=_window_of(cfg, mixer),
-            rope_theta=cfg.rope_theta, lengths=lengths)
+            rope_theta=cfg.rope_theta, lengths=lengths,
+            segment_ids=segment_ids)
         if collect_cache:
             cache_entry = {"k": k, "v": v}
     elif mixer == "xattn":
@@ -91,7 +104,7 @@ def block_apply(
     elif mixer == "mla":
         out, (c_kv, k_rope) = mla_mod.mla_attention(
             p["mixer"], h, positions, cfg.mla, norm_eps=cfg.norm_eps,
-            lengths=lengths)
+            lengths=lengths, segment_ids=segment_ids)
         if collect_cache:
             cache_entry = {"c_kv": c_kv, "k_rope": k_rope}
     elif mixer == "ssm":

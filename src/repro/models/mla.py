@@ -66,10 +66,12 @@ def _latents(p, x: Array, m: MLAConfig, norm_eps: float, positions: Array):
 
 def mla_attention(
     p, x: Array, positions: Array, m: MLAConfig, *,
-    norm_eps: float, lengths=None,
+    norm_eps: float, lengths=None, segment_ids=None,
 ) -> tuple:
     """Full-sequence MLA (train/prefill), decompressed form.
 
+    ``segment_ids`` (B, T) switches to the packed layout: attention is
+    confined to same-segment tokens (``lengths`` is then ignored).
     Returns (out, (c_kv, k_rope)) — the latter is the decode cache content.
     """
     b, t, _ = x.shape
@@ -84,10 +86,15 @@ def mla_attention(
     s = jnp.einsum("bthk,bshk->bhts", q_nope, k_nope, preferred_element_type=F32)
     s += jnp.einsum("bthk,bsk->bhts", q_rope, k_rope, preferred_element_type=F32)
     s *= scale
-    mask = jnp.tril(jnp.ones((t, t), bool))[None, None]
-    if lengths is not None:
-        mask = mask & (jnp.arange(t)[None, None, None, :]
-                       < lengths[:, None, None, None])
+    if segment_ids is not None:
+        from repro.models.attention import segment_mask
+
+        mask = segment_mask(segment_ids, positions)
+    else:
+        mask = jnp.tril(jnp.ones((t, t), bool))[None, None]
+        if lengths is not None:
+            mask = mask & (jnp.arange(t)[None, None, None, :]
+                           < lengths[:, None, None, None])
     s = jnp.where(mask, s, NEG_INF)
     pa = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhts,bshk->bthk", pa.astype(v.dtype), v)

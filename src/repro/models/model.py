@@ -76,12 +76,18 @@ def forward_hidden(
     *,
     positions: Optional[Array] = None,
     lengths: Optional[Array] = None,
+    segment_ids: Optional[Array] = None,
     image_embeds: Optional[Array] = None,
     mesh=None,
     rules: ShardingRules = DEFAULT_RULES,
     collect_cache: bool = False,
 ):
     """tokens: (B, T) int32 (or (B, T, K) codebook grid).
+
+    ``segment_ids`` (B, T) selects the packed batch layout (core/layout.py):
+    each row holds several sequences back to back, attention never crosses
+    segment boundaries, and ``positions`` carries each token's ORIGINAL
+    position (rope + window distances stay exact).
 
     Returns (hidden (B, T, D) after final norm, caches or None, aux scalar).
     Caches (when collected) are per-group dicts of stacked prefill entries.
@@ -109,7 +115,8 @@ def forward_hidden(
                     cfg, kind, layer_p[f"l{j}"], xx,
                     positions=positions, lengths=lengths,
                     image_embeds=image_embeds,
-                    collect_cache=collect_cache, shard=shard)
+                    collect_cache=collect_cache, shard=shard,
+                    segment_ids=segment_ids)
                 if collect_cache:
                     entries[f"l{j}"] = ce
                 aux = aux + a
@@ -145,6 +152,8 @@ def score_tokens(
     tokens: Array,
     *,
     lengths: Optional[Array] = None,
+    positions: Optional[Array] = None,
+    segment_ids: Optional[Array] = None,
     image_embeds: Optional[Array] = None,
     mesh=None,
     rules: ShardingRules = DEFAULT_RULES,
@@ -156,9 +165,16 @@ def score_tokens(
     logp[:, t] = log pi(tokens[:, t] | tokens[:, <t]); logp[:, 0] = 0.
     Uses the chunked head — the (B, T, V) softmax is never materialized
     (pure-jnp analogue of the fused Pallas HT head).
+
+    Packed layout (``segment_ids`` + ``positions``, core/layout.py): the
+    conditioning prefix is each token's own segment, and the logp at every
+    segment START is zeroed — its left neighbor in the packed row belongs
+    to a different sequence, exactly as ``logp[:, 0]`` has no predecessor
+    on the padded grid.
     """
     hidden, _, aux = forward_hidden(
-        params, cfg, tokens, lengths=lengths, image_embeds=image_embeds,
+        params, cfg, tokens, positions=positions, lengths=lengths,
+        segment_ids=segment_ids, image_embeds=image_embeds,
         mesh=mesh, rules=rules)
     shard = _make_shard(cfg, mesh, rules)
     w = head_weight(params.get("head", {}), params["embed"], cfg.tie_embeddings)
@@ -182,6 +198,13 @@ def score_tokens(
             w, h, tgt, softcap=cfg.logits_softcap,
             num_chunks=vocab_chunks, with_entropy=with_entropy, shard=shard)
         logp, ent = out if with_entropy else (out, None)
+    if segment_ids is not None:
+        # a segment's first token has no in-segment predecessor: its shifted
+        # hidden state belongs to the previous packed segment — zero it
+        same_seg = segment_ids[:, 1:] == segment_ids[:, :-1]
+        logp = jnp.where(same_seg, logp, 0.0)
+        if with_entropy:
+            ent = jnp.where(same_seg, ent, 0.0)
     pad = jnp.zeros((bsz, 1), logp.dtype)
     logp = jnp.concatenate([pad, logp], axis=1)
     if with_entropy:

@@ -48,7 +48,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.grpo import GRPOConfig, group_advantages
-from repro.core.repack import bucket_ladder, pick_bucket
+from repro.core.layout import make_layout
+from repro.core.repack import bucket_ladder
 from repro.core.selectors import EntropySelector, make_selector
 # NOTE: repro.data sits ABOVE repro.rl in the layering (data imports
 # rl.env), so importing it at module scope would be circular whenever
@@ -82,6 +83,11 @@ class NATTrainerConfig:
     bucket_align: int = 16
     num_buckets: int = 4
     repack: bool = True              # physical prefix truncation for RPC
+    # batch layout for the learner step (core/layout.py, DESIGN.md §7):
+    # "" derives from ``repack`` ("bucketed" when True, "padded" otherwise);
+    # "packed" bin-packs kept-span hulls into dense segment-id rows
+    layout: str = ""
+    layout_kwargs: tuple = ()        # e.g. (("row_quant", 2),)
     seed: int = 0
     # -- actor/learner overlap (DESIGN.md §6) --
     max_staleness: int = 0           # 0 reproduces the serial trainer exactly
@@ -233,9 +239,12 @@ class AsyncNATGRPOTrainer:
             # which the slot arena does not serve yet
             self.engine = None
         self.step_count = 0
+        self.layout = make_layout(
+            tcfg.layout or ("bucketed" if tcfg.repack else "padded"),
+            **dict(tcfg.layout_kwargs))
         self._train_step = jax.jit(make_train_step(
             model_cfg, tcfg.grpo, tcfg.adamw, mesh=mesh, rules=rules,
-            vocab_chunks=1))
+            vocab_chunks=1, packed=self.layout.packed))
         t_max = tcfg.max_prompt_len + tcfg.rollout.max_new_tokens
         self.ladder = bucket_ladder(t_max, tcfg.num_buckets, tcfg.bucket_align)
         self.history: list = []
@@ -500,14 +509,14 @@ class AsyncNATGRPOTrainer:
             "staleness": np.full((rb.tokens.shape[0],), staleness, np.float32),
         }
 
-        # physical prefix truncation (RPC / Det-Trunc): slice to bucket
-        if tcfg.repack and sel.prefix_structured:
-            keep_total = rb.prompt_lens + np.minimum(keep_len, rb.response_lens)
-            t_new = pick_bucket(int(keep_total.max()), self.ladder)
-            t_new = min(t_new, rb.tokens.shape[1])
-            batch = {k: (v[:, :t_new] if getattr(v, "ndim", 0) >= 2 else v)
-                     for k, v in batch.items()}
-            batch["lengths"] = keep_total.astype(np.int32)
+        # batch layout (core/layout.py): bucketed slicing, hull packing, or
+        # the raw padded grid — the selection above is layout-invariant
+        lb = self.layout.build(
+            batch, prompt_lens=rb.prompt_lens,
+            response_lens=rb.response_lens, keep_len=keep_len,
+            keep_mask=ht_w > 0, prefix_structured=sel.prefix_structured,
+            ladder=self.ladder)
+        batch = lb.data
         t_sel = time.perf_counter()
 
         self.params, self.opt_state, metrics = self._train_step(
@@ -523,8 +532,15 @@ class AsyncNATGRPOTrainer:
             reward_max=float(rewards.max(axis=1).mean()),
             completed_frac=float(rb.completed.mean()),
             resp_len_mean=float(rb.response_lens.mean()),
-            learner_tokens=int(batch["tokens"].shape[0] * batch["tokens"].shape[1]),
-            bucket_len=int(batch["tokens"].shape[1]),
+            # legacy alias of tokens_scored (pre-layout consumers)
+            learner_tokens=lb.tokens_scored,
+            bucket_len=lb.row_len,
+            # layout accounting (DESIGN.md §7): tokens the update physically
+            # scored and the kept-budget fraction of them — the learner-side
+            # twin of rollout_utilization below
+            tokens_scored=lb.tokens_scored,
+            learner_rows=lb.num_rows,
+            pack_efficiency=lb.pack_efficiency,
             # rollout token cost: with the slot arena, over-provisioned groups
             # pay for generated tokens, not G' full budgets (ISSUE 2)
             tokens_generated=int(rstats.get("tokens_generated", 0)),
@@ -560,7 +576,8 @@ class AsyncNATGRPOTrainer:
             if log_every and i % log_every == 0:
                 print(f"step {m['step']:4d} reward={m['reward_mean']:.3f} "
                       f"loss={m['loss']:+.4f} sel={m.get('selected_ratio', 1):.2f} "
-                      f"bucket={m['bucket_len']} t={m['time_total']:.2f}s")
+                      f"rows={m['learner_rows']}x{m['bucket_len']} "
+                      f"eff={m['pack_efficiency']:.2f} t={m['time_total']:.2f}s")
         return self.history
 
     # --------------------------------------------------------------- lifecycle

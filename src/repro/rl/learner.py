@@ -24,21 +24,49 @@ BATCH_KEYS = ("tokens", "response_mask", "old_logp", "advantages",
               "ht_weights", "orig_lengths", "lengths", "behavior_logp",
               "staleness")
 
+# the packed layout (core/layout.py) swaps the per-row keys: token leaves
+# are (num_rows, pack_len), per-response leaves stay (B,), and three id
+# planes map packed tokens back — positions (rope), segment_ids (attention
+# visibility), resp_ids (loss segment scatter)
+PACKED_BATCH_KEYS = ("tokens", "positions", "segment_ids", "resp_ids",
+                     "response_mask", "old_logp", "advantages", "ht_weights",
+                     "orig_lengths", "behavior_logp", "staleness")
+
 
 def make_loss_fn(model_cfg: ModelConfig, grpo_cfg: GRPOConfig, *,
-                 mesh=None, rules=None, vocab_chunks: int = 8):
+                 mesh=None, rules=None, vocab_chunks: int = 8,
+                 packed: bool = False):
+    """Build the learner loss.  ``packed=True`` consumes PACKED_BATCH_KEYS
+    batches: scoring runs on the dense packed rows (segment-masked
+    attention, original positions) and the HT reduction gathers per-token
+    terms back to per-response sums via ``resp_ids`` segment scatter —
+    same estimator, fewer scored tokens."""
     rules = rules or DEFAULT_RULES  # a mesh without rules gets the defaults
 
     def loss_fn(params, mb: dict):
-        logp, aux = score_tokens(
-            params, model_cfg, mb["tokens"], lengths=mb["lengths"],
-            image_embeds=mb.get("image_embeds"), mesh=mesh, rules=rules,
-            vocab_chunks=vocab_chunks)
-        loss, metrics = nat_grpo_loss(
-            logp, mb["old_logp"], mb["advantages"], mb["ht_weights"],
-            mb["orig_lengths"], grpo_cfg, ref_logp=mb.get("ref_logp"),
-            behavior_logp=mb.get("behavior_logp"),
-            staleness=mb.get("staleness"))
+        if packed:
+            logp, aux = score_tokens(
+                params, model_cfg, mb["tokens"],
+                positions=mb["positions"], segment_ids=mb["segment_ids"],
+                image_embeds=mb.get("image_embeds"), mesh=mesh, rules=rules,
+                vocab_chunks=vocab_chunks)
+            loss, metrics = nat_grpo_loss(
+                logp, mb["old_logp"], mb["advantages"], mb["ht_weights"],
+                mb["orig_lengths"], grpo_cfg, ref_logp=mb.get("ref_logp"),
+                behavior_logp=mb.get("behavior_logp"),
+                staleness=mb.get("staleness"),
+                segment_ids=mb["resp_ids"],
+                num_segments=mb["advantages"].shape[0])
+        else:
+            logp, aux = score_tokens(
+                params, model_cfg, mb["tokens"], lengths=mb["lengths"],
+                image_embeds=mb.get("image_embeds"), mesh=mesh, rules=rules,
+                vocab_chunks=vocab_chunks)
+            loss, metrics = nat_grpo_loss(
+                logp, mb["old_logp"], mb["advantages"], mb["ht_weights"],
+                mb["orig_lengths"], grpo_cfg, ref_logp=mb.get("ref_logp"),
+                behavior_logp=mb.get("behavior_logp"),
+                staleness=mb.get("staleness"))
         metrics["moe_aux"] = aux
         return loss + aux, metrics
 
@@ -56,6 +84,7 @@ def make_train_step(
     vocab_chunks: int = 8,
     unroll_microbatches: bool = False,
     param_shardings=None,
+    packed: bool = False,
 ):
     """Returns train_step(params, opt_state, batch) -> (params', opt', metrics).
 
@@ -67,9 +96,18 @@ def make_train_step(
     (XLA's cost analysis counts a while-loop body once).
     ``param_shardings`` (optional tree of NamedShardings): constrain each
     microbatch gradient to its parameter's sharding so the data-axis psum
-    lowers to a reduce-scatter instead of a full all-reduce (§Perf)."""
+    lowers to a reduce-scatter instead of a full all-reduce (§Perf).
+    ``packed`` selects the packed-layout loss (PACKED_BATCH_KEYS); packed
+    batches cannot be split on dim 0 — a packed row holds tokens of several
+    responses while the per-response leaves stay (B,) — so gradient
+    accumulation must microbatch BEFORE packing (one layout per microbatch),
+    not after."""
+    if packed and num_microbatches > 1:
+        raise ValueError(
+            "packed layout does not compose with num_microbatches > 1: "
+            "split the batch first, then pack each microbatch")
     loss_fn = make_loss_fn(model_cfg, grpo_cfg, mesh=mesh, rules=rules,
-                           vocab_chunks=vocab_chunks)
+                           vocab_chunks=vocab_chunks, packed=packed)
     vg = jax.value_and_grad(loss_fn, has_aux=True)
 
     def constrain(grads):

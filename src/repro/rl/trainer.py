@@ -5,9 +5,12 @@ Per step:
   2. rollout G completions per prompt (over-provisioned quota),
   3. verify rewards on FULL responses -> group-relative advantages (Eq. 2),
   4. draw the NAT token selection (Full / URS / RPC / Det-Trunc / Entropy),
-  5. (prefix-structured selectors) physically repack the batch to the
-     smallest TPU length bucket covering prompt+cut — the learner genuinely
-     processes fewer tokens (RPC's forward saving),
+  5. lay the batch out for the learner (``NATTrainerConfig.layout``,
+     core/layout.py): ``bucketed`` slices prefix-structured selections to
+     the smallest TPU length bucket covering prompt+cut, ``packed``
+     bin-packs each response's kept-span hull into dense segment-id rows
+     (update FLOPs scale with the token budget for URS too), ``padded``
+     scores the raw grid,
   6. HT-weighted GRPO loss (Eqs. 6/9) + AdamW.
 
 The whole loop lives in ``rl/async_trainer.py``: an actor thread drives

@@ -1,0 +1,301 @@
+"""Batch layouts (core/layout.py, DESIGN.md §7): packing invariants, the
+bucketed layout's bit-exactness vs the historical inline slicing, and the
+acceptance contract — packed-layout loss/grads match the padded reference
+for both URS and RPC selectors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.core.grpo import GRPOConfig
+from repro.core.layout import (
+    PAD_SEGMENT,
+    BucketedLayout,
+    PackedLayout,
+    PaddedLayout,
+    make_layout,
+    plan_pack,
+)
+from repro.core.repack import bucket_ladder, pick_bucket
+from repro.core.selectors import make_selector
+from repro.models import init_params, model_decl
+from repro.models.config import ModelConfig, dense_blocks
+from repro.rl import VOCAB_SIZE
+from repro.rl.learner import make_loss_fn, make_train_step
+
+
+def tiny_cfg():
+    return ModelConfig(name="tiny", d_model=64, n_heads=4, n_kv_heads=2,
+                       head_dim=16, d_ff=128, vocab_size=VOCAB_SIZE,
+                       blocks=dense_blocks(2), seq_parallel=False,
+                       remat_policy="none", scan_layers=False)
+
+
+def synth_batch(b=8, t=64, seed=0):
+    """A synthetic rollout-shaped learner batch with ragged lengths."""
+    rng = np.random.default_rng(seed)
+    prompt_lens = rng.integers(4, 10, b).astype(np.int32)
+    response_lens = rng.integers(5, t - 12, b).astype(np.int32)
+    tokens = rng.integers(1, VOCAB_SIZE, (b, t)).astype(np.int32)
+    rmask = np.zeros((b, t), np.float32)
+    for r in range(b):
+        rmask[r, prompt_lens[r]:prompt_lens[r] + response_lens[r]] = 1
+        tokens[r, prompt_lens[r] + response_lens[r]:] = 0
+    old_logp = (rng.standard_normal((b, t)) * 0.1 - 2).astype(np.float32) * rmask
+    batch = {
+        "tokens": tokens,
+        "response_mask": rmask,
+        "old_logp": old_logp,
+        "advantages": rng.standard_normal(b).astype(np.float32),
+        "orig_lengths": response_lens.astype(np.float32),
+        "lengths": (prompt_lens + response_lens).astype(np.int32),
+        "behavior_logp": old_logp,
+        "staleness": np.zeros((b,), np.float32),
+    }
+    return batch, prompt_lens, response_lens, rmask
+
+
+def select(batch, rmask, name, seed=3, **kw):
+    sel = make_selector(name, **kw)(jax.random.PRNGKey(seed),
+                                    jnp.asarray(rmask))
+    batch = dict(batch)
+    batch["ht_weights"] = np.asarray(sel.ht_weights, np.float32)
+    return batch, sel
+
+
+# ------------------------------------------------------------- plan_pack
+def test_plan_pack_partitions_and_fits():
+    rng = np.random.default_rng(0)
+    hull = rng.integers(0, 33, 50)
+    rows = plan_pack(hull, 32)
+    placed = [s for row in rows for s in row]
+    # every nonzero hull exactly once, zero hulls skipped
+    assert sorted(placed) == sorted(np.flatnonzero(hull).tolist())
+    for row in rows:
+        assert sum(int(hull[s]) for s in row) <= 32
+
+
+def test_plan_pack_rejects_oversized_hull():
+    with pytest.raises(ValueError, match="exceeds pack_len"):
+        plan_pack(np.array([40]), 32)
+
+
+def test_plan_pack_deterministic():
+    hull = np.array([10, 10, 20, 5, 5, 32])
+    assert plan_pack(hull, 32) == plan_pack(hull, 32)
+
+
+# ------------------------------------------------------ packing invariants
+@pytest.mark.parametrize("sel_name,kw", [
+    ("rpc", {"min_cut": 4}), ("urs", {"p": 0.5})])
+def test_packed_layout_invariants(sel_name, kw):
+    batch, pl_, rl_, rmask = synth_batch()
+    batch, sel = select(batch, rmask, sel_name, **kw)
+    b, t = batch["tokens"].shape
+    lb = make_layout("packed").build(
+        batch, prompt_lens=pl_, response_lens=rl_,
+        keep_len=np.asarray(sel.keep_len),
+        keep_mask=batch["ht_weights"] > 0,
+        prefix_structured=sel.prefix_structured,
+        ladder=bucket_ladder(t, 4, 8))
+    d = lb.data
+    seg = d["segment_ids"]
+    resp = d["resp_ids"]
+    pos = d["positions"]
+    real = seg < int(PAD_SEGMENT)
+
+    # per-row monotone segment ids (the kernel block-skip contract)
+    assert (np.diff(seg, axis=1) >= 0).all()
+    # positions restart per segment and count the original grid position
+    keep_mask = batch["ht_weights"] > 0
+    hull = np.where(keep_mask.any(1), t - np.argmax(keep_mask[:, ::-1], 1), 0)
+    seen = np.zeros((b, t), bool)
+    for r in range(seg.shape[0]):
+        for c in range(seg.shape[1]):
+            if real[r, c]:
+                src, p = int(resp[r, c]), int(pos[r, c])
+                assert not seen[src, p], "token packed twice"
+                seen[src, p] = True
+                assert d["tokens"][r, c] == batch["tokens"][src, p]
+                assert d["old_logp"][r, c] == batch["old_logp"][src, p]
+                assert d["ht_weights"][r, c] == batch["ht_weights"][src, p]
+    # exactly each response's hull [0, h) is packed, once
+    for src in range(b):
+        np.testing.assert_array_equal(
+            seen[src], np.arange(t) < hull[src])
+    # padding is inert: zero weight everywhere it isn't a real token
+    assert (d["ht_weights"][~real] == 0).all()
+    # accounting
+    assert lb.tokens_scored == seg.shape[0] * seg.shape[1]
+    assert lb.kept_tokens == int((batch["ht_weights"] > 0).sum())
+    assert lb.tokens_scored <= b * t
+    assert 0 < lb.pack_efficiency <= 1
+
+
+def test_packed_layout_row_quant():
+    batch, pl_, rl_, rmask = synth_batch()
+    batch, sel = select(batch, rmask, "rpc", min_cut=4)
+    t = batch["tokens"].shape[1]
+    kw = dict(prompt_lens=pl_, response_lens=rl_,
+              keep_len=np.asarray(sel.keep_len),
+              keep_mask=batch["ht_weights"] > 0,
+              prefix_structured=sel.prefix_structured,
+              ladder=bucket_ladder(t, 4, 8))
+    base = make_layout("packed").build(batch, **kw)
+    quant = make_layout("packed", row_quant=4).build(batch, **kw)
+    assert quant.num_rows % 4 == 0
+    assert quant.num_rows >= base.num_rows
+
+
+def test_packed_layout_no_kept_tokens():
+    batch, pl_, rl_, rmask = synth_batch()
+    batch = dict(batch)
+    batch["ht_weights"] = np.zeros_like(rmask)
+    t = batch["tokens"].shape[1]
+    lb = make_layout("packed").build(
+        batch, prompt_lens=pl_, response_lens=rl_,
+        keep_len=np.zeros(8, np.int32), keep_mask=batch["ht_weights"] > 0,
+        prefix_structured=True, ladder=bucket_ladder(t, 4, 8))
+    assert lb.kept_tokens == 0
+    assert (lb.data["segment_ids"] == int(PAD_SEGMENT)).all()
+
+
+# --------------------------------------------- bucketed/padded equivalence
+def test_bucketed_layout_matches_historical_slicing():
+    batch, pl_, rl_, rmask = synth_batch()
+    batch, sel = select(batch, rmask, "rpc", min_cut=4)
+    t = batch["tokens"].shape[1]
+    ladder = bucket_ladder(t, 4, 8)
+    lb = BucketedLayout().build(
+        batch, prompt_lens=pl_, response_lens=rl_,
+        keep_len=np.asarray(sel.keep_len), keep_mask=batch["ht_weights"] > 0,
+        prefix_structured=True, ladder=ladder)
+    keep_total = pl_ + np.minimum(np.asarray(sel.keep_len), rl_)
+    t_new = min(pick_bucket(int(keep_total.max()), ladder), t)
+    assert lb.row_len == t_new
+    for k, v in batch.items():
+        ref = v[:, :t_new] if getattr(v, "ndim", 0) >= 2 else v
+        if k == "lengths":
+            ref = keep_total.astype(np.int32)
+        np.testing.assert_array_equal(lb.data[k], ref)
+
+
+def test_bucketed_layout_unstructured_falls_back_to_padded():
+    batch, pl_, rl_, rmask = synth_batch()
+    batch, sel = select(batch, rmask, "urs", p=0.5)
+    t = batch["tokens"].shape[1]
+    lb = BucketedLayout().build(
+        batch, prompt_lens=pl_, response_lens=rl_,
+        keep_len=np.asarray(sel.keep_len), keep_mask=batch["ht_weights"] > 0,
+        prefix_structured=False, ladder=bucket_ladder(t, 4, 8))
+    assert lb.row_len == t
+    np.testing.assert_array_equal(lb.data["tokens"], batch["tokens"])
+
+
+def test_padded_layout_is_identity():
+    batch, pl_, rl_, rmask = synth_batch()
+    batch, sel = select(batch, rmask, "rpc", min_cut=4)
+    t = batch["tokens"].shape[1]
+    lb = PaddedLayout().build(
+        batch, prompt_lens=pl_, response_lens=rl_,
+        keep_len=np.asarray(sel.keep_len), keep_mask=batch["ht_weights"] > 0,
+        prefix_structured=True, ladder=bucket_ladder(t, 4, 8))
+    assert lb.tokens_scored == batch["tokens"].size
+    for k, v in batch.items():
+        np.testing.assert_array_equal(lb.data[k], v)
+
+
+def test_make_layout_unknown():
+    with pytest.raises(ValueError, match="unknown layout"):
+        make_layout("zigzag")
+
+
+# --------------------------------------------- the token-exactness contract
+@pytest.mark.parametrize("sel_name,kw", [
+    ("rpc", {"min_cut": 4}), ("urs", {"p": 0.5})])
+def test_packed_loss_and_grads_match_padded(sel_name, kw):
+    """ISSUE 4 acceptance: the packed learner step reproduces the padded
+    reference loss and gradients within tolerance for URS and RPC — the
+    HT estimator (Eq. 6) is layout-invariant."""
+    cfg = tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), model_decl(cfg))
+    batch, pl_, rl_, rmask = synth_batch()
+    batch, sel = select(batch, rmask, sel_name, **kw)
+    t = batch["tokens"].shape[1]
+    gcfg = GRPOConfig()
+
+    loss_pad = make_loss_fn(cfg, gcfg, vocab_chunks=1)
+    loss_pk = make_loss_fn(cfg, gcfg, vocab_chunks=1, packed=True)
+    (lp, mp), gp = jax.value_and_grad(loss_pad, has_aux=True)(
+        params, {k: jnp.asarray(v) for k, v in batch.items()})
+
+    lb = make_layout("packed").build(
+        batch, prompt_lens=pl_, response_lens=rl_,
+        keep_len=np.asarray(sel.keep_len), keep_mask=batch["ht_weights"] > 0,
+        prefix_structured=sel.prefix_structured,
+        ladder=bucket_ladder(t, 4, 8))
+    (lk, mk), gk = jax.value_and_grad(loss_pk, has_aux=True)(
+        params, {k: jnp.asarray(v) for k, v in lb.data.items()})
+
+    assert lb.tokens_scored < batch["tokens"].size  # it actually saved work
+    np.testing.assert_allclose(float(lk), float(lp), rtol=1e-6, atol=1e-7)
+    # per-token loss metrics agree too (same selected set either way)
+    assert float(mk["selected_tokens"]) == float(mp["selected_tokens"])
+    np.testing.assert_allclose(float(mk["clip_frac"]), float(mp["clip_frac"]),
+                               atol=1e-6)
+    flat_p, _ = ravel_pytree(gp)
+    flat_k, _ = ravel_pytree(gk)
+    scale = float(jnp.abs(flat_p).max())
+    np.testing.assert_allclose(np.asarray(flat_k), np.asarray(flat_p),
+                               atol=5e-3 * scale, rtol=0)
+
+
+def test_packed_train_step_runs_and_rejects_microbatching():
+    cfg = tiny_cfg()
+    from repro.core.grpo import GRPOConfig
+    from repro.optim import AdamWConfig
+    with pytest.raises(ValueError, match="packed layout"):
+        make_train_step(cfg, GRPOConfig(), AdamWConfig(), packed=True,
+                        num_microbatches=2)
+
+
+def test_packed_rejects_recurrent_mixers():
+    from repro.models.model import score_tokens
+
+    from repro.models.config import SSMConfig
+
+    cfg = ModelConfig(name="ssm-tiny", d_model=32, n_heads=0, n_kv_heads=0,
+                      head_dim=0, d_ff=0, vocab_size=VOCAB_SIZE,
+                      blocks=dense_blocks(1, mixer="ssm"), seq_parallel=False,
+                      remat_policy="none", scan_layers=False,
+                      ssm=SSMConfig(state_dim=16, head_dim=16, expand=2,
+                                    conv_width=4, chunk=8))
+    params = init_params(jax.random.PRNGKey(0), model_decl(cfg))
+    toks = jnp.zeros((2, 16), jnp.int32)
+    seg = jnp.zeros((2, 16), jnp.int32)
+    pos = jnp.zeros((2, 16), jnp.int32)
+    with pytest.raises(NotImplementedError, match="packed layout"):
+        score_tokens(params, cfg, toks, positions=pos, segment_ids=seg,
+                     vocab_chunks=1)
+
+
+def test_train_inputs_packed_spec():
+    """launch/step_specs.py lowers the packed batch: id planes present,
+    per-response leaves sized by num_segments, no padded-grid lengths."""
+    from repro.configs.shapes import ShapeSpec
+    from repro.launch.step_specs import train_inputs
+
+    cfg = tiny_cfg()
+    shape = ShapeSpec("t", "train", 64, 16)
+    batch, shards = train_inputs(cfg, shape, mesh=None, layout="packed",
+                                 num_segments=24)
+    assert set(batch) >= {"tokens", "positions", "segment_ids", "resp_ids"}
+    assert "lengths" not in batch
+    for key in ("positions", "segment_ids", "resp_ids"):
+        assert batch[key].shape == (16, 64)
+    for key in ("advantages", "orig_lengths", "staleness"):
+        assert batch[key].shape == (24,)
+    assert set(shards) == set(batch)
+    with pytest.raises(ValueError, match="unknown step-spec layout"):
+        train_inputs(cfg, shape, mesh=None, layout="zigzag")
