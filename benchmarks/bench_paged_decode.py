@@ -1,0 +1,159 @@
+"""Paged vs dense arena at G-sibling GRPO groups: decode throughput and
+KV-arena memory (DESIGN.md §8).
+
+The workload is the rollout engine's steady state: P prompts, G = 8
+samples each, served through the same slot width on both arenas.  The
+dense arena duplicates every prompt's KV into each sibling's private rows
+and re-prefills it G times; the paged arena prefills once per group into
+refcounted shared pages, so
+
+  * prompt-KV bytes per group scale O(1) in G instead of O(G) — gated as
+    ``paged/prompt_kv_bytes_ratio <= 1/G + slack``,
+  * decode throughput must stay within 5% of the dense arena
+    (``paged/decode_tps_ratio``): the block-table gather buys memory, not
+    time, and must not cost time either.
+
+Peak arena bytes are exact bookkeeping, not an allocator estimate: every
+KV byte of both arenas is a static buffer (dense: slots x cache_len rows;
+paged: the page pool), and the paged engine additionally reports its peak
+pages in use.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.models import init_params, model_decl
+from repro.models.config import ModelConfig, dense_blocks
+from repro.rl.engine import (
+    ContinuousRolloutEngine,
+    EngineConfig,
+    PagedEngineConfig,
+    PagedRolloutEngine,
+    Request,
+)
+from repro.rl.rollout import RolloutConfig
+
+SLOTS = 8           # device batch width for BOTH arenas
+P_PROMPTS = 8       # distinct prompts
+G = 8               # siblings per group (the paper's GRPO group size)
+MAX_NEW = 64        # decode budget
+TP = 32             # prompt width (full prompts: sharing is the point)
+PAGE_LEN = 16
+STEPS_PER_SYNC = 8
+ITERS = 2           # best-of-N wall times (CI runners are noisy)
+
+
+def _model():
+    return ModelConfig(name="bench-paged", d_model=256, n_heads=8,
+                       n_kv_heads=4, head_dim=32, d_ff=512, vocab_size=512,
+                       blocks=dense_blocks(4), seq_parallel=False,
+                       remat_policy="none", scan_layers=False)
+
+
+def _groups(rng, cfg):
+    prompts = rng.integers(3, cfg.vocab_size, size=(P_PROMPTS, TP)).astype(
+        np.int32)
+    # straggler mix inside each group: most siblings short, one full-budget
+    budgets = np.array(
+        [[MAX_NEW if j == 0 else int(rng.integers(8, 25)) for j in range(G)]
+         for _ in range(P_PROMPTS)], np.int32)
+    return prompts, budgets
+
+
+def _requests(prompts, budgets):
+    return [[Request(uid=p * G + j, tokens=prompts[p], budget=int(budgets[p, j]))
+             for j in range(G)] for p in range(P_PROMPTS)]
+
+
+def _serve(engine, params, groups, key) -> float:
+    engine.run_groups(params, groups[:1], key)  # compile prefill + step
+    best = float("inf")
+    for _ in range(ITERS):
+        t0 = time.perf_counter()
+        engine.run_groups(params, groups, key)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _kv_bytes_per_token(cfg) -> int:
+    # k + v, bf16 storage dtype (2 bytes), per layer
+    return 2 * 2 * cfg.n_kv_heads * cfg.head_dim * cfg.n_layers
+
+
+def run() -> dict:
+    cfg = _model()
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, model_decl(cfg))
+    rng = np.random.default_rng(0)
+    prompts, budgets = _groups(rng, cfg)
+    groups = _requests(prompts, budgets)
+    rcfg = RolloutConfig(max_new_tokens=MAX_NEW, temperature=1.0, eos_id=-1)
+
+    dense = ContinuousRolloutEngine(
+        cfg, rcfg, EngineConfig(num_slots=SLOTS, max_prompt_len=TP,
+                                steps_per_sync=STEPS_PER_SYNC))
+    paged = PagedRolloutEngine(
+        cfg, rcfg, PagedEngineConfig(num_slots=SLOTS, max_prompt_len=TP,
+                                     steps_per_sync=STEPS_PER_SYNC,
+                                     page_len=PAGE_LEN, max_group=G))
+
+    t_dense = _serve(dense, params, groups, key)
+    t_paged = _serve(paged, params, groups, key)
+    tokens = int(budgets.sum())
+    tps_dense = tokens / t_dense
+    tps_paged = tokens / t_paged
+    tps_ratio = tps_paged / tps_dense
+
+    bpt = _kv_bytes_per_token(cfg)
+    # prompt KV held per group while it decodes: dense gives every sibling
+    # a private copy of the prompt rows; paged holds one refcounted set of
+    # prompt pages (page-quantized).  MEASURED from the engine's prefill
+    # counter, not restated from config: if prefix sharing ever regresses
+    # to per-sibling prefills, prompt_prefills grows G-fold and the gate
+    # fails — a constant formula could never catch that
+    n_pp = -(-TP // PAGE_LEN)
+    n_req = P_PROMPTS * G
+    dense_prompt_bytes = G * TP * bpt
+    paged_prompt_bytes = (paged.stats["prompt_prefills"] * n_pp * PAGE_LEN
+                          * bpt // P_PROMPTS)
+    prompt_ratio = (paged.stats["prompt_prefills"] * n_pp * PAGE_LEN
+                    / (n_req * TP))
+    # whole-arena peaks: dense commits slots x cache_len rows up front;
+    # paged commits only the pages actually in flight at the peak
+    dense_arena_bytes = SLOTS * (TP + MAX_NEW) * bpt
+    paged_peak_bytes = paged.stats["peak_pages_in_use"] * PAGE_LEN * bpt
+
+    print(f"# bench_paged_decode: {P_PROMPTS} prompts x G={G}, "
+          f"{SLOTS} slots, prompt {TP}, budget {MAX_NEW}, "
+          f"page_len {PAGE_LEN}")
+    print(f"{'arena':8s} {'time(s)':>8s} {'tok/s':>8s} "
+          f"{'prompt KV/group':>16s} {'peak arena':>12s}")
+    print(f"{'dense':8s} {t_dense:8.2f} {tps_dense:8.1f} "
+          f"{dense_prompt_bytes:16,d} {dense_arena_bytes:12,d}")
+    print(f"{'paged':8s} {t_paged:8.2f} {tps_paged:8.1f} "
+          f"{paged_prompt_bytes:16,d} {paged_peak_bytes:12,d}")
+    print(f"prompt_kv_bytes_ratio={prompt_ratio:.3f} (1/G={1 / G:.3f}), "
+          f"decode_tps_ratio={tps_ratio:.2f}, "
+          f"paged peak pages {paged.stats['peak_pages_in_use']}"
+          f"/{paged.num_pages}")
+
+    emit("paged/dense_decode", t_dense,
+         f"tok_s={tps_dense:.1f};arena_bytes={dense_arena_bytes}")
+    emit("paged/paged_decode", t_paged,
+         f"tok_s={tps_paged:.1f};peak_arena_bytes={paged_peak_bytes};"
+         f"prompt_prefills={paged.stats['prompt_prefills']}")
+    emit("paged/decode_tps_ratio", abs(t_dense - t_paged),
+         f"tps_ratio={tps_ratio:.3f}")
+    emit("paged/prompt_kv_bytes_ratio", 0.0,
+         f"prompt_kv_bytes_ratio={prompt_ratio:.4f}")
+    return {"tps_ratio": tps_ratio, "prompt_kv_bytes_ratio": prompt_ratio,
+            "paged_peak_bytes": paged_peak_bytes,
+            "dense_arena_bytes": dense_arena_bytes}
+
+
+if __name__ == "__main__":
+    run()

@@ -25,7 +25,8 @@ def main():
                     help="paper-scale draws/steps/seeds (slow)")
     ap.add_argument("--only", default="",
                     help="comma list: unbiasedness,gradnorm,matrix,ratio,"
-                         "efficiency,quality,rollout,async,packed,roofline")
+                         "efficiency,quality,rollout,async,packed,paged,"
+                         "roofline")
     ap.add_argument("--json", default="",
                     help="write aggregated machine-readable results here")
     args = ap.parse_args()
@@ -66,6 +67,10 @@ def main():
     if on("packed"):
         from benchmarks import bench_packed_learner
         bench_packed_learner.run()
+        print()
+    if on("paged"):
+        from benchmarks import bench_paged_decode
+        bench_paged_decode.run()
         print()
     if on("quality"):
         from benchmarks import bench_quality

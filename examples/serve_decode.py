@@ -1,14 +1,17 @@
-"""Serving example: continuous-batching decode on the slot arena.
+"""Serving example: paged continuous-batching decode with prefix sharing.
 
 The same engine that backs RL rollout (``repro.rl.engine``) is the serving
 decode loop: requests carry their own token budgets, rows retire at EOS or
 budget, and freed slots are immediately re-prefilled from the queue — short
 requests never wait on long neighbours (DESIGN.md §3).
 
-Part 1 serves a straggler-heavy request mix (many short, a few long) through
-a small arena and reports slot utilization.  Part 2 keeps the legacy
-fixed-shape prefill+decode smoke across attention families (dense GQA, MLA,
-SSM) — the same ``decode_step`` the dry-run lowers at scale.
+Part 1 serves an n-best sampling workload (G samples per prompt — the
+serving twin of a GRPO group) through the PAGED arena (DESIGN.md §8): each
+prompt's KV is prefilled once into refcounted shared pages, every sample
+only pays private decode pages, and retirement returns pages to a free
+list.  Part 2 keeps the legacy fixed-shape prefill+decode smoke across
+attention families (dense GQA, MLA, SSM) — the same ``decode_step`` the
+dry-run lowers at scale.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
@@ -22,12 +25,14 @@ from repro.configs import get_smoke
 from repro.data import PromptPipeline
 from repro.models import decode_step, init_params, model_decl, prefill
 from repro.rl import (
-    ContinuousRolloutEngine, EngineConfig, Request, RolloutConfig, make_env,
+    PagedEngineConfig, PagedRolloutEngine, Request, RolloutConfig, make_env,
 )
 
-# ---------------------------------------------------- 1. continuous serving
+# ------------------------------------------- 1. paged n-best-of-G serving
 ARCH = "mistral-nemo-12b"
-SLOTS, TP, MAX_NEW, N_REQ = 4, 32, 48, 16
+SLOTS, TP, MAX_NEW = 8, 32, 48
+N_PROMPTS, G = 6, 4          # 24 samples served through 8 slots
+PAGE_LEN = 16
 
 cfg = get_smoke(ARCH)
 key = jax.random.PRNGKey(0)
@@ -35,35 +40,43 @@ params = init_params(key, model_decl(cfg))
 rng = np.random.default_rng(0)
 
 rcfg = RolloutConfig(max_new_tokens=MAX_NEW, temperature=1.0, eos_id=-1)
-engine = ContinuousRolloutEngine(
-    cfg, rcfg, EngineConfig(num_slots=SLOTS, max_prompt_len=TP,
-                            steps_per_sync=4))
+engine = PagedRolloutEngine(
+    cfg, rcfg, PagedEngineConfig(num_slots=SLOTS, max_prompt_len=TP,
+                                 steps_per_sync=4, page_len=PAGE_LEN,
+                                 max_group=G))
 
-# prompts stream one-at-a-time from the data pipeline (the engine's unit of
-# delivery is a prompt, not a batch); straggler-heavy budget mix: 75% short
-# answers, 25% long-form
+# prompts stream one-at-a-time from the data pipeline; each is sampled G
+# times (n-best serving), with a straggler-heavy budget mix per group:
+# most samples short, one long-form
 stream = PromptPipeline(make_env("copy_calc"), batch_size=SLOTS,
                         max_prompt_len=TP, seed=0).iter_prompts()
-budgets = [int(rng.integers(4, 12)) if rng.random() < 0.75 else MAX_NEW
-           for _ in range(N_REQ)]
-requests = []
-for i, b in enumerate(budgets):
+budgets = {}
+groups = []
+for p in range(N_PROMPTS):
     _, toks, _n = next(stream)
-    requests.append(Request(uid=i, tokens=toks, budget=b))
+    group = []
+    for j in range(G):
+        uid = p * G + j
+        budgets[uid] = MAX_NEW if j == 0 else int(rng.integers(4, 12))
+        group.append(Request(uid=uid, tokens=toks, budget=budgets[uid]))
+    groups.append(group)
 
 t0 = time.perf_counter()
-completions = engine.run(params, requests, key)
+completions = engine.run_groups(params, groups, key)
 t1 = time.perf_counter()
 
 st = engine.stats
 tok = st["tokens_generated"]
-print(f"{ARCH}: served {N_REQ} requests ({tok} tokens) on {SLOTS} slots "
-      f"in {t1 - t0:.2f}s incl. compile")
-print(f"  rounds={st['rounds']} refills={st['refills']} "
-      f"slot_util={tok / max(st['slot_substeps'], 1):.2f} "
-      f"(legacy fixed-shape would pay "
-      f"{(N_REQ + SLOTS - 1) // SLOTS * MAX_NEW} sequential steps; "
-      f"arena paid {st['decode_steps']})")
+n_req = N_PROMPTS * G
+prompt_pages = -(-TP // PAGE_LEN)
+print(f"{ARCH}: served {n_req} samples ({N_PROMPTS} prompts x G={G}, "
+      f"{tok} tokens) on {SLOTS} slots in {t1 - t0:.2f}s incl. compile")
+print(f"  rounds={st['rounds']} prompt_prefills={st['prompt_prefills']} "
+      f"(dense would prefill {n_req}) "
+      f"slot_util={tok / max(st['slot_substeps'], 1):.2f}")
+print(f"  peak_pages={st['peak_pages_in_use']}/{engine.num_pages} "
+      f"(prompt KV per group: {prompt_pages} shared pages, "
+      f"not {G * prompt_pages})")
 for c in completions[:4]:
     print(f"  uid={c.uid:2d} prompt={c.prompt_len:2d} "
           f"generated={c.response_len:2d}/{budgets[c.uid]:2d}")

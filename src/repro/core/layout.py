@@ -213,6 +213,48 @@ class PackedLayout(BatchLayout):
                            num_rows=rows, row_len=pack_len)
 
 
+def build_microbatches(
+    layout: BatchLayout,
+    batch: dict,
+    num_microbatches: int,
+    *,
+    prompt_lens: np.ndarray,
+    response_lens: np.ndarray,
+    keep_len: np.ndarray,
+    keep_mask: np.ndarray,
+    prefix_structured: bool,
+    ladder: Sequence[int],
+) -> list:
+    """Split the padded batch on the RESPONSE axis, then lay out each chunk.
+
+    Gradient accumulation must split before packing, never after: a packed
+    row holds tokens of several responses while the per-response leaves
+    stay (B,), so slicing packed rows would tear responses apart.  Chunks
+    are contiguous (rows [i*B/m, (i+1)*B/m)), so GRPO groups stay whole as
+    long as m divides the prompt count.  Each chunk gets its own
+    ``layout.build`` — its own pack plan, bucket, and ``num_segments`` —
+    and the learner (``rl/learner.py``) consumes the resulting tuple of
+    batches with an unrolled accumulation loop (shapes may differ per
+    chunk).  Returns a list of ``num_microbatches`` LayoutBatches.
+    """
+    b = batch["tokens"].shape[0]
+    m = num_microbatches
+    if b % m:
+        raise ValueError(f"batch of {b} responses does not split into "
+                         f"{m} microbatches")
+    c = b // m
+    out = []
+    for i in range(m):
+        sl = slice(i * c, (i + 1) * c)
+        sub = {k: (v[sl] if getattr(v, "ndim", 0) >= 1 else v)
+               for k, v in batch.items()}
+        out.append(layout.build(
+            sub, prompt_lens=prompt_lens[sl], response_lens=response_lens[sl],
+            keep_len=keep_len[sl], keep_mask=keep_mask[sl],
+            prefix_structured=prefix_structured, ladder=ladder))
+    return out
+
+
 def plan_pack(hull: np.ndarray, pack_len: int) -> list:
     """First-fit-decreasing bin packing of hull lengths into ``pack_len``
     bins.  Returns a list of rows, each a list of source row indices in

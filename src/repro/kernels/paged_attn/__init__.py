@@ -1,0 +1,9 @@
+from repro.kernels.paged_attn.kernel import paged_decode_pallas
+from repro.kernels.paged_attn.ops import paged_attention
+from repro.kernels.paged_attn.ref import paged_attention_ref
+
+__all__ = [
+    "paged_attention",
+    "paged_attention_ref",
+    "paged_decode_pallas",
+]

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: paged decode attention over a block-table KV pool.
+
+One query token per slot attends to its logical KV sequence, stored as
+``(num_pages, page_len)`` pages named by a per-slot block table — the
+decode-side twin of the prefix/packed prefill kernels (DESIGN.md §8).
+The gather never materializes a dense per-slot KV copy in HBM: the block
+table rides in as a scalar-prefetch operand and the page id feeds the
+BlockSpec index map directly, so each grid step DMAs exactly one page.
+
+Grid: ``(S, KV, M)`` — slot × kv-head × block-table column.  GQA is
+handled by laying queries out as ``(S, KV, G, D)`` (G query heads per kv
+head), so one grid step scores all G heads of a kv head against one page
+with a single ``(G, page_len)`` matmul.
+
+Skip structure: a block-table entry of ``-1`` (unallocated) skips the
+whole page with ``pl.when`` — per-slot cost is O(allocated pages), not
+O(M).  Inside a page, per-entry validity comes from the pool's ``pos``
+plane (absolute positions, ``-1`` = empty, visible iff ``pos <= q_pos``)
+— identical to the dense arena's visibility rule, so the partial
+last-prompt-page gap needs no special case.  Online softmax in VMEM
+scratch; all accumulation f32.  Decode-only: no backward.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+            m_sc, l_sc, acc_sc, *, nm, scale):
+    s = pl.program_id(0)
+    mi = pl.program_id(2)
+
+    @pl.when(mi == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    qp = qpos_ref[s]
+
+    @pl.when((bt_ref[s, mi] >= 0) & (qp >= 0))
+    def _compute():
+        q = q_ref[0, 0].astype(F32)          # (G, D)
+        k = k_ref[0, :, 0].astype(F32)       # (page_len, D)
+        v = v_ref[0, :, 0].astype(F32)
+        pos = pos_ref[0]                     # (page_len,)
+        sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 precision=jax.lax.Precision.HIGHEST) * scale
+        valid = (pos >= 0) & (pos <= qp)     # (page_len,)
+        sc = jnp.where(valid[None, :], sc, NEG)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(sc - m_new[:, None])
+        p = jnp.where(valid[None, :], p, 0.0)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=-1)
+        acc_sc[...] = acc_sc[...] * corr[:, None] + jax.lax.dot(
+            p, v, precision=jax.lax.Precision.HIGHEST)
+        m_sc[...] = m_new
+
+    @pl.when(mi == nm - 1)
+    def _fin():
+        l = l_sc[...]
+        ok = l > 0
+        lsafe = jnp.where(ok, l, 1.0)
+        o_ref[0, 0] = jnp.where(ok[:, None], acc_sc[...] / lsafe[:, None],
+                                0.0).astype(o_ref.dtype)
+
+
+def paged_decode_pallas(q, k_pages, v_pages, pos_pages, block_tables, q_pos,
+                        *, interpret: bool = True):
+    """q: (S, KV, G, D); k_pages/v_pages: (P, page_len, KV, D); pos_pages:
+    (P, page_len) int32; block_tables: (S, M) int32 (-1 = unallocated);
+    q_pos: (S,) int32 (-1 = inactive slot).  Returns out (S, KV, G, D)."""
+    s, kvh, g, d = q.shape
+    p, page_len = pos_pages.shape
+    m = block_tables.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    kern = functools.partial(_kernel, nm=m, scale=scale)
+
+    def page_idx(s_, h_, mi, bt, qp):
+        return (jnp.maximum(bt[s_, mi], 0), 0, h_, 0)
+
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(s, kvh, m),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d),
+                             lambda s_, h_, mi, bt, qp: (s_, h_, 0, 0)),
+                pl.BlockSpec((1, page_len, 1, d), page_idx),
+                pl.BlockSpec((1, page_len, 1, d), page_idx),
+                pl.BlockSpec((1, page_len),
+                             lambda s_, h_, mi, bt, qp:
+                             (jnp.maximum(bt[s_, mi], 0), 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d),
+                                   lambda s_, h_, mi, bt, qp: (s_, h_, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g,), F32),
+                pltpu.VMEM((g,), F32),
+                pltpu.VMEM((g, d), F32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((s, kvh, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, q_pos, q, k_pages, v_pages, pos_pages)
+    return out

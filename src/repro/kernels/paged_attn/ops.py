@@ -1,0 +1,28 @@
+"""jit-friendly wrappers for paged decode attention.
+
+``paged_attention(q, k_pages, v_pages, pos_pages, block_tables, q_pos)``
+takes q in the model's flat-head decode layout ``(S, H, D)`` and handles
+the GQA regrouping around the kernel's ``(S, KV, G, D)`` layout: query
+head ``h`` reads kv head ``h // (H // KV)`` — the same mapping
+``repeat_kv`` realizes on the dense path, without the kv repeat in HBM.
+
+Decode-only (one token per slot, no backward), so there is no custom_vjp
+here — the rollout engine never differentiates through decode.
+"""
+from __future__ import annotations
+
+from repro.kernels.paged_attn import kernel as K
+
+
+def paged_attention(q, k_pages, v_pages, pos_pages, block_tables, q_pos,
+                    *, interpret: bool = True):
+    """q: (S, H, D) flat query heads; k_pages/v_pages: (P, page_len, KV, D);
+    pos_pages: (P, page_len); block_tables: (S, M); q_pos: (S,).
+    Returns out (S, H, D)."""
+    s, h, d = q.shape
+    kvh = k_pages.shape[2]
+    g = h // kvh
+    o = K.paged_decode_pallas(
+        q.reshape(s, kvh, g, d), k_pages, v_pages, pos_pages, block_tables,
+        q_pos, interpret=interpret)
+    return o.reshape(s, h, d)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for paged decode attention.
+
+Semantics shared with the kernel (and with ``models/attention.py``'s
+paged decode path):
+  * the KV store is a pool of ``(num_pages, page_len)`` pages per layer;
+    a slot's logical KV sequence is the concatenation of the pages named
+    by its ``block_tables`` row, in row order,
+  * ``block_tables`` entries of ``-1`` are unallocated: every position of
+    such a page is invisible to the slot,
+  * per-entry validity comes from the pool's ``pos`` plane (absolute
+    token positions, ``-1`` = empty): key j is visible to the slot's
+    query iff ``0 <= pos_j <= q_pos`` — the same visibility rule the
+    dense slot arena uses, which makes the partial-last-prompt-page gap
+    (decode tokens always start on a fresh page) just more invisible
+    entries, never special-cased,
+  * slots with ``q_pos < 0`` are inactive and output exactly 0.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def paged_attention_ref(q, k_pages, v_pages, pos_pages, block_tables, q_pos):
+    """q: (S, KV, G, D) — G query heads per kv head (GQA grouping);
+    k_pages/v_pages: (P, page_len, KV, D); pos_pages: (P, page_len) int32;
+    block_tables: (S, M) int32 page ids (-1 = unallocated); q_pos: (S,)
+    int32 absolute query positions (-1 = inactive slot).
+
+    Returns out (S, KV, G, D)."""
+    s, kv, g, d = q.shape
+    p, pl = pos_pages.shape
+    bt = jnp.maximum(block_tables, 0)
+    kg = k_pages[bt]                      # (S, M, pl, KV, D)
+    vg = v_pages[bt]
+    posg = jnp.where(block_tables[..., None] >= 0, pos_pages[bt], -1)
+    m = bt.shape[1]
+    kg = kg.reshape(s, m * pl, kv, d)
+    vg = vg.reshape(s, m * pl, kv, d)
+    posg = posg.reshape(s, m * pl)
+
+    scale = 1.0 / jnp.sqrt(d)
+    sc = jnp.einsum("skgd,slkd->skgl", q.astype(F32), kg.astype(F32)) * scale
+    valid = (posg >= 0) & (posg <= q_pos[:, None]) & (q_pos[:, None] >= 0)
+    sc = jnp.where(valid[:, None, None, :], sc, -jnp.inf)
+    mx = jnp.max(sc, axis=-1)
+    mx_safe = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    pr = jnp.exp(sc - mx_safe[..., None])
+    pr = jnp.where(valid[:, None, None, :], pr, 0.0)
+    l = jnp.sum(pr, axis=-1)
+    o = jnp.einsum("skgl,slkd->skgd", pr, vg.astype(F32))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    o = jnp.where((l > 0)[..., None], o, 0.0)
+    return o.astype(q.dtype)

@@ -132,8 +132,28 @@ def make_train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
     abs_opt = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), abs_p)
     decl = model_decl(cfg)
     shard_opt = opt_state_shardings(abs_opt, param_specs(decl), mesh, rules)
-    batch, shard_b = train_inputs(cfg, shape, mesh, rules, layout=layout,
-                                  num_segments=num_segments)
+    if layout == "packed" and num_microbatches > 1:
+        # packed accumulation consumes a tuple of pre-packed chunks
+        # (core.layout.build_microbatches): each chunk holds 1/m of the
+        # rows and segments, so the abstract cell sizes per-chunk work
+        # honestly (real runs may still pack each chunk to a different
+        # shape — the spec models equal-shaped chunks)
+        m = num_microbatches
+        if shape.global_batch % m:
+            raise ValueError(
+                f"global_batch {shape.global_batch} does not split into "
+                f"{m} microbatches")
+        chunk_shape = dataclasses.replace(
+            shape, global_batch=shape.global_batch // m)
+        seg = (num_segments or 2 * shape.global_batch)
+        batch, shard_b = train_inputs(cfg, chunk_shape, mesh, rules,
+                                      layout=layout,
+                                      num_segments=max(seg // m, 1))
+        batch = tuple(batch for _ in range(m))
+        shard_b = tuple(shard_b for _ in range(m))
+    else:
+        batch, shard_b = train_inputs(cfg, shape, mesh, rules, layout=layout,
+                                      num_segments=num_segments)
 
     step = make_train_step(cfg, grpo_cfg, opt_cfg,
                            num_microbatches=num_microbatches,

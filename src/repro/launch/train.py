@@ -56,6 +56,11 @@ def main(argv=None):
                     choices=["", "padded", "bucketed", "packed"],
                     help="learner batch layout (core/layout.py, DESIGN.md "
                          "§7); default derives from the selector's repack")
+    ap.add_argument("--rollout-engine", default="continuous",
+                    choices=["continuous", "paged", "legacy"],
+                    help="rollout arena: dense slot rows, paged KV pool "
+                         "with group prefix sharing (DESIGN.md §8), or "
+                         "the legacy fixed-shape scan")
     ap.add_argument("--eval-prompts", type=int, default=32)
     args = ap.parse_args(argv)
 
@@ -75,6 +80,7 @@ def main(argv=None):
                               overprovision=args.overprovision),
         adamw=AdamWConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps),
         layout=args.layout,
+        rollout_engine=args.rollout_engine,
         seed=args.seed,
     )
     trainer = NATGRPOTrainer(model_cfg, tcfg)

@@ -14,8 +14,11 @@ from repro.models.model import (
     forward_hidden,
     full_logits,
     invalidate_cache_rows,
+    invalidate_pages,
     merge_cache,
     model_decl,
+    paged_cache_decl,
+    paged_prefill,
     prefill,
     score_tokens,
 )
@@ -30,8 +33,9 @@ from repro.models.params import (
 __all__ = [
     "MLAConfig", "MoEConfig", "ModelConfig", "RGLRUConfig", "SSMConfig",
     "dense_blocks", "cache_axes", "cache_decl", "decode_step",
-    "forward_hidden", "full_logits", "invalidate_cache_rows", "merge_cache",
-    "model_decl", "prefill", "score_tokens",
+    "forward_hidden", "full_logits", "invalidate_cache_rows",
+    "invalidate_pages", "merge_cache", "model_decl", "paged_cache_decl",
+    "paged_prefill", "prefill", "score_tokens",
     "ParamDecl", "abstract_params", "count_params", "init_params",
     "param_specs",
 ]

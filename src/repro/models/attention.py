@@ -306,6 +306,138 @@ def cache_from_prefill(k: Array, v: Array, s_len: int, prefill_len,
     return {"k": kc, "v": vc, "pos": pc}
 
 
+# ------------------------------------------------- paged decode (KV pool)
+def paged_attn_cache_decl(num_pages: int, page_len: int, n_kv: int,
+                          head_dim: int, dtype=jnp.bfloat16):
+    """Abstract paged KV pool for one attention layer.
+
+    Unlike the dense per-slot cache, the pool has no batch axis: pages are
+    a shared resource, and per-slot structure lives entirely in the block
+    tables the engine passes alongside.  ``pos`` is per-entry absolute
+    position with ``-1`` = empty — the same validity convention as the
+    dense cache, so the gap after a partial last prompt page (decode
+    tokens always open a fresh page, keeping prompt pages read-only and
+    shareable) is just more empty entries.
+    """
+    return {
+        "k": jax.ShapeDtypeStruct((num_pages, page_len, n_kv, head_dim), dtype),
+        "v": jax.ShapeDtypeStruct((num_pages, page_len, n_kv, head_dim), dtype),
+        "pos": jax.ShapeDtypeStruct((num_pages, page_len), jnp.int32),
+    }
+
+
+def paged_attn_cache_axes():
+    return {
+        "k": ("kv_pages", None, "kv_heads", "head_dim"),
+        "v": ("kv_pages", None, "kv_heads", "head_dim"),
+        "pos": ("kv_pages", None),
+    }
+
+
+def paged_cache_update(pool: dict, k: Array, v: Array, pos: Array,
+                       write_page: Array, write_off: Array):
+    """Write one token's K/V per slot into its private decode page.
+
+    pool: {"k"/"v": (P, page_len, KV, D), "pos": (P, page_len)}.  k/v:
+    (S, 1, KV, D) roped projections; pos: (S, 1) absolute positions;
+    write_page/write_off: (S,) int32 — ``write_page == P`` (one past the
+    pool) is the drop sentinel for inactive slots.  Distinct slots always
+    name distinct pages (decode pages are slot-private; prompt pages are
+    never written after prefill), so the scatter has no conflicts.
+    """
+    new_k = pool["k"].at[write_page, write_off].set(
+        k[:, 0].astype(pool["k"].dtype), mode="drop")
+    new_v = pool["v"].at[write_page, write_off].set(
+        v[:, 0].astype(pool["v"].dtype), mode="drop")
+    new_pos = pool["pos"].at[write_page, write_off].set(
+        pos[:, 0].astype(jnp.int32), mode="drop")
+    return {"k": new_k, "v": new_v, "pos": new_pos}
+
+
+def gather_pages(pool: dict, block_tables: Array):
+    """Materialize each slot's logical KV sequence through its block table.
+
+    block_tables: (S, M) int32 page ids, ``-1`` = unallocated (gathered
+    entries come back with ``pos = -1`` so they are invisible).  Returns
+    (k (S, M*page_len, KV, D), v, pos (S, M*page_len)) — the jnp reference
+    realization; the Pallas kernel (repro.kernels.paged_attn) reads pages
+    through the same table without the dense copy.
+    """
+    s, m = block_tables.shape
+    bt = jnp.maximum(block_tables, 0)
+    kg = pool["k"][bt]                       # (S, M, page_len, KV, D)
+    vg = pool["v"][bt]
+    posg = jnp.where(block_tables[..., None] >= 0, pool["pos"][bt], -1)
+    pl_ = posg.shape[-1]
+    return (kg.reshape(s, m * pl_, *kg.shape[3:]),
+            vg.reshape(s, m * pl_, *vg.shape[3:]),
+            posg.reshape(s, m * pl_))
+
+
+def paged_decode_attention(
+    p,
+    x: Array,
+    pool: dict,
+    pos: Array,
+    block_tables: Array,
+    write_page: Array,
+    write_off: Array,
+    *,
+    rope_theta: float,
+    impl: str = "ref",
+) -> tuple:
+    """One-token decode against the paged KV pool.  x: (S, 1, D).
+
+    Same math as ``decode_attention`` — write the new token's K/V, then
+    attend to every valid entry the block table reaches — with the page
+    gather in place of the per-slot dense cache read.  ``impl="kernel"``
+    routes the attention itself through the Pallas paged kernel (gather
+    via block-table index maps, no dense KV copy); ``"ref"`` is the jnp
+    gather path.  Returns (out (S, 1, D), new_pool).
+
+    Two jnp references exist on purpose, not by accident: the ``"ref"``
+    branch below mirrors ``decode_attention``'s exact op sequence (same
+    einsum forms, NEG_INF mask, one ``jax.nn.softmax``) so the paged
+    engine reproduces the dense arena to decode-parity tolerance, while
+    ``kernels/paged_attn/ref.py`` mirrors the KERNEL's decomposition
+    (f32 upcast, explicit max-subtract) as its test oracle.  Folding them
+    together would couple dense-parity numerics to kernel-oracle
+    numerics.
+    """
+    b = x.shape[0]
+    h = p["wq"].shape[1]
+    kvh = p["wk"].shape[1]
+    dh = p["wq"].shape[2]
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    posb = _norm_pos(pos, b)
+    q = apply_rope(q, posb, rope_theta)
+    k = apply_rope(k, posb, rope_theta)
+
+    new_pool = paged_cache_update(pool, k, v, posb, write_page, write_off)
+    scale = 1.0 / jnp.sqrt(dh).astype(F32)
+
+    if impl == "kernel":
+        from repro.kernels.paged_attn import paged_attention
+
+        o = paged_attention(
+            q[:, 0], new_pool["k"], new_pool["v"], new_pool["pos"],
+            block_tables, posb[:, 0])[:, None]
+    else:
+        kg, vg, posg = gather_pages(new_pool, block_tables)
+        valid = (posg >= 0) & (posg <= posb)
+        kf = repeat_kv(kg, h // kvh)
+        vf = repeat_kv(vg, h // kvh)
+        s = jnp.einsum("bthd,bshd->bhts", q, kf.astype(q.dtype),
+                       preferred_element_type=F32) * scale
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        pa = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhts,bshd->bthd", pa.astype(vf.dtype), vf)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+    return out, new_pool
+
+
 # ---------------------------------------------------------- cross-attention
 def cross_attention(p, x: Array, image_kv: tuple, *, gated: bool = True) -> Array:
     """Cross-attend text states to precomputed frontend K/V.

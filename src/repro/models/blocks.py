@@ -142,12 +142,27 @@ def block_decode(
     x: Array,
     cache: dict,
     pos: Array,
+    *,
+    paged: Optional[dict] = None,
+    attn_impl: str = "ref",
 ):
-    """One-token decode.  x: (B, 1, D).  Returns (x, new_cache)."""
+    """One-token decode.  x: (B, 1, D).  Returns (x, new_cache).
+
+    ``paged`` (arrays: ``block_tables`` (S, M), ``write_page`` /
+    ``write_off`` (S,)) switches global-attention layers to the paged KV
+    pool (``attn.paged_decode_attention``); other mixers keep their
+    per-slot state — local rings are already window-bounded and ssm/rec
+    states are O(1), so only the O(T) global KV is worth paging.
+    """
     mixer = cfg.mixer_of(kind)
     mlp = cfg.mlp_of(kind)
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
-    if mixer in ("attn", "local"):
+    if mixer == "attn" and paged is not None:
+        out, new_cache = attn.paged_decode_attention(
+            p["mixer"], h, cache, pos, paged["block_tables"],
+            paged["write_page"], paged["write_off"],
+            rope_theta=cfg.rope_theta, impl=attn_impl)
+    elif mixer in ("attn", "local"):
         out, new_cache = attn.decode_attention(
             p["mixer"], h, cache, pos, window=_window_of(cfg, mixer),
             rope_theta=cfg.rope_theta)
@@ -175,10 +190,21 @@ def block_decode(
 
 
 # ----------------------------------------------------------- cache layouts
-def block_cache_decl(cfg: ModelConfig, kind: str, batch: int, cache_len: int):
-    """Abstract decode-cache entry for one layer of this kind (or None)."""
+def block_cache_decl(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                     paged: Optional[tuple] = None):
+    """Abstract decode-cache entry for one layer of this kind (or None).
+
+    ``paged = (num_pages, page_len)`` declares global-attention layers as
+    shared KV pools instead of per-slot rows; every other mixer keeps its
+    per-slot layout (see ``block_decode``).  MLA latents are not paged
+    yet — the paged engine rejects MLA configs up front.
+    """
     mixer = cfg.mixer_of(kind)
     if mixer == "attn":
+        if paged is not None:
+            num_pages, page_len = paged
+            return attn.paged_attn_cache_decl(num_pages, page_len,
+                                              cfg.n_kv_heads, cfg.head_dim)
         return attn.attn_cache_decl(batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
     if mixer == "local":
         return attn.attn_cache_decl(batch, min(cache_len, cfg.window),

@@ -270,6 +270,62 @@ def prefill(
     return logits, cache
 
 
+def paged_prefill(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Array,
+    *,
+    cache_len: int,
+    prefill_len: Optional[Array] = None,
+    mesh=None,
+    rules: ShardingRules = DEFAULT_RULES,
+):
+    """Prompt prefill for the paged engine: raw K/V instead of dense rows.
+
+    Same forward as ``prefill``, but global-attention layers come back as
+    raw roped projections ``{"k"/"v": (repeat, B, T, KV, D)}`` — the
+    engine scatters them straight into pool pages, shared by every slot
+    of a GRPO group — while every other mixer is converted to its normal
+    per-slot decode entry (the engine broadcasts those to the group's
+    slots; they are O(window) or O(1), not worth paging).
+
+    Returns (last_logits (B, V), cache_tree).  MLA is not paged yet: its
+    O(T) latent cache would silently stay per-slot, so it is rejected.
+    """
+    for pattern, _ in cfg.blocks:
+        for kind in pattern:
+            if cfg.mixer_of(kind) == "mla":
+                raise NotImplementedError(
+                    "paged_prefill: MLA latent caches are not paged yet")
+    bsz, t = tokens.shape[:2]
+    if prefill_len is None:
+        prefill_len = jnp.full((bsz,), t, jnp.int32)
+    hidden, raw, _ = forward_hidden(
+        params, cfg, tokens, lengths=prefill_len, mesh=mesh, rules=rules,
+        collect_cache=True)
+
+    cache = {}
+    for gi, (pattern, repeat) in enumerate(cfg.blocks):
+        entries = raw[f"group{gi}"]
+        out = {}
+        for j, kind in enumerate(pattern):
+            if cfg.mixer_of(kind) == "attn":
+                out[f"l{j}"] = {"k": entries[f"l{j}"]["k"],
+                                "v": entries[f"l{j}"]["v"]}
+            else:
+                conv = partial(B.block_cache_from_prefill, cfg, kind,
+                               cache_len=cache_len, prefill_len=prefill_len)
+                out[f"l{j}"] = jax.vmap(lambda e, _c=conv: _c(e))(
+                    entries[f"l{j}"])
+        cache[f"group{gi}"] = out
+
+    w = head_weight(params.get("head", {}), params["embed"], cfg.tie_embeddings)
+    idx = jnp.maximum(prefill_len - 1, 0)
+    last_h = jnp.take_along_axis(hidden, idx[:, None, None], axis=1)
+    logits = logits_apply(w, last_h, cfg.logits_softcap)[:, 0]
+    return logits, cache
+
+
 # -------------------------------------------------------------- decode
 def decode_step(
     params: dict,
@@ -277,16 +333,32 @@ def decode_step(
     tokens: Array,
     cache: dict,
     pos: Array,
+    *,
+    block_tables: Optional[Array] = None,
+    write_page: Optional[Array] = None,
+    write_off: Optional[Array] = None,
+    attn_impl: str = "ref",
 ):
     """One decode step.  tokens: (B,) int32 (or (B, K)); pos: (B,) int32
     absolute position of the NEW token.  Returns (logits (B, V) | (B, K, V),
-    new_cache)."""
+    new_cache).
+
+    With ``block_tables`` (B, M) + ``write_page``/``write_off`` (B,), the
+    global-attention layers of ``cache`` are paged KV pools (DESIGN.md §8):
+    each layer writes the new token at its pool's
+    ``[write_page, write_off]`` cell (``write_page == num_pages`` drops the
+    write) and attends through the shared block table.  Non-attention
+    layers keep per-slot state either way.
+    """
     if cfg.num_codebooks:
         tok = tokens[:, None, :]  # (B, 1, K)
     else:
         tok = tokens[:, None]     # (B, 1)
     scale = math.sqrt(cfg.d_model) if cfg.emb_scale_by_dim else None
     x = embed_apply(params["embed"], tok, scale=scale)
+    paged = (None if block_tables is None else
+             {"block_tables": block_tables, "write_page": write_page,
+              "write_off": write_off})
 
     new_cache = {}
     for gi, (pattern, repeat) in enumerate(cfg.blocks):
@@ -299,7 +371,8 @@ def decode_step(
             entries = {}
             for j, kind in enumerate(_pattern):
                 xx, nc = B.block_decode(cfg, kind, layer_p[f"l{j}"], xx,
-                                        cache_l[f"l{j}"], pos)
+                                        cache_l[f"l{j}"], pos,
+                                        paged=paged, attn_impl=attn_impl)
                 entries[f"l{j}"] = nc
             return xx, entries
 
@@ -361,6 +434,32 @@ def invalidate_cache_rows(cache, row_mask: Array):
     return jax.tree_util.tree_map_with_path(inv, cache)
 
 
+def invalidate_pages(cfg: ModelConfig, cache: dict, page_mask: Array) -> dict:
+    """Poison the masked pages of every paged-attention pool in ``cache``.
+
+    ``page_mask`` (num_pages,) bool: those pages' ``pos`` planes go to
+    ``-1`` — invisible to every block table until rewritten.  The paged
+    analogue of ``invalidate_cache_rows``: the engine applies it to pages
+    returned to the free list (refcount hit zero) before they can be
+    reallocated, so a recycled page can never leak its previous
+    occupant's positions as valid entries.  K/V bytes are left in place:
+    an entry with ``pos = -1`` is unreachable.  Non-attention per-slot
+    entries are untouched.
+    """
+    out = {}
+    for gi, (pattern, repeat) in enumerate(cfg.blocks):
+        grp = dict(cache[f"group{gi}"])
+        for j, kind in enumerate(pattern):
+            if cfg.mixer_of(kind) == "attn":
+                entry = dict(grp[f"l{j}"])
+                # leaves are stacked (repeat, num_pages, page_len)
+                entry["pos"] = jnp.where(page_mask[None, :, None], -1,
+                                         entry["pos"])
+                grp[f"l{j}"] = entry
+        out[f"group{gi}"] = grp
+    return out
+
+
 # -------------------------------------------------------------- cache decl
 def cache_decl(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
     out = {}
@@ -368,6 +467,23 @@ def cache_decl(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
         layer = {}
         for j, kind in enumerate(pattern):
             entry = B.block_cache_decl(cfg, kind, batch, cache_len)
+            layer[f"l{j}"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((repeat,) + s.shape, s.dtype), entry)
+        out[f"group{gi}"] = layer
+    return out
+
+
+def paged_cache_decl(cfg: ModelConfig, num_slots: int, cache_len: int, *,
+                     num_pages: int, page_len: int) -> dict:
+    """Abstract cache for the paged engine: global-attention layers become
+    shared ``(num_pages, page_len)`` pools; every other mixer keeps its
+    per-slot entry (rings are window-bounded, ssm/rec are O(1))."""
+    out = {}
+    for gi, (pattern, repeat) in enumerate(cfg.blocks):
+        layer = {}
+        for j, kind in enumerate(pattern):
+            entry = B.block_cache_decl(cfg, kind, num_slots, cache_len,
+                                       paged=(num_pages, page_len))
             layer[f"l{j}"] = jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct((repeat,) + s.shape, s.dtype), entry)
         out[f"group{gi}"] = layer

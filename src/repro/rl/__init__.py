@@ -18,8 +18,13 @@ from repro.rl.engine import (
     Completion,
     ContinuousRolloutEngine,
     EngineConfig,
+    PageAllocator,
+    PagedEngineConfig,
+    PagedRolloutEngine,
+    PagePoolExhausted,
     Request,
     make_engine,
+    make_paged_engine,
 )
 from repro.rl.learner import make_loss_fn, make_train_step
 from repro.rl.rollout import (
@@ -34,7 +39,9 @@ from repro.rl.trainer import NATGRPOTrainer, NATTrainerConfig
 __all__ = [
     "EOS", "PAD", "VOCAB_SIZE", "CopyCalcEnv", "ModArithEnv", "decode_tokens",
     "encode", "make_env", "make_loss_fn", "make_train_step", "Completion",
-    "ContinuousRolloutEngine", "EngineConfig", "Request", "make_engine",
+    "ContinuousRolloutEngine", "EngineConfig", "PageAllocator",
+    "PagedEngineConfig", "PagedRolloutEngine", "PagePoolExhausted",
+    "Request", "make_engine", "make_paged_engine",
     "RolloutBatch", "RolloutConfig", "generate", "rollout_group",
     "rollout_group_continuous", "NATGRPOTrainer", "NATTrainerConfig",
     "AsyncNATGRPOTrainer", "SampleQueue", "TaggedGroup",

@@ -75,9 +75,13 @@ class NATTrainerConfig:
     prompts_per_step: int = 8        # P
     max_prompt_len: int = 24
     rollout: RolloutConfig = RolloutConfig()
-    rollout_engine: str = "continuous"  # continuous (slot arena) | legacy
+    # continuous (dense slot arena) | paged (paged KV pool with group
+    # prefix sharing, DESIGN.md §8) | legacy (fixed-shape scan)
+    rollout_engine: str = "continuous"
     num_slots: int = 0               # arena slots; 0 -> P * G
     steps_per_sync: int = 4          # engine decode substeps per host sync
+    page_len: int = 16               # paged arena: tokens per KV page
+    num_pages: int = 0               # paged arena: pool size; 0 -> worst case
     grpo: GRPOConfig = GRPOConfig()
     adamw: AdamWConfig = AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=500)
     bucket_align: int = 16
@@ -223,9 +227,25 @@ class AsyncNATGRPOTrainer:
         self.params = params
         self.opt_state = init_opt_state(params, tcfg.adamw)
         self.selector = make_selector(tcfg.selector, **dict(tcfg.selector_kwargs))
-        if tcfg.rollout_engine not in ("continuous", "legacy"):
+        if tcfg.rollout_engine not in ("continuous", "paged", "legacy"):
             raise ValueError(f"unknown rollout_engine {tcfg.rollout_engine!r}")
-        if tcfg.rollout_engine == "continuous" and not model_cfg.num_codebooks:
+        if tcfg.rollout_engine == "paged" and not model_cfg.num_codebooks:
+            from repro.rl.engine import PagedEngineConfig, PagedRolloutEngine
+
+            gp = int(np.ceil(tcfg.rollout.group_size
+                             * tcfg.rollout.overprovision))
+            # default slot count must cover one full G' group: configs
+            # with per-slot sequence state place groups atomically
+            self.engine = PagedRolloutEngine(
+                model_cfg, tcfg.rollout, PagedEngineConfig(
+                    num_slots=tcfg.num_slots
+                    or max(tcfg.prompts_per_step * tcfg.rollout.group_size,
+                           gp),
+                    max_prompt_len=tcfg.max_prompt_len,
+                    steps_per_sync=tcfg.steps_per_sync,
+                    page_len=tcfg.page_len, num_pages=tcfg.num_pages,
+                    max_group=gp))
+        elif tcfg.rollout_engine == "continuous" and not model_cfg.num_codebooks:
             from repro.rl.engine import ContinuousRolloutEngine, EngineConfig
 
             self.engine = ContinuousRolloutEngine(
@@ -372,14 +392,17 @@ class AsyncNATGRPOTrainer:
             int(budgets.sum()) if budgets is not None else self._rows * n,
             dict(self.engine.stats), key0=key0)
         self._stream_groups[i] = gs
-        reqs = [
-            Request(
-                uid=i * self._rows + pi * self._gp + j,
-                tokens=np.asarray(pb.tokens[pi, :int(pb.prompt_lens[pi])]),
-                budget=(int(budgets[pi * self._gp + j])
-                        if budgets is not None else n))
-            for pi in range(self._p) for j in range(self._gp)]
-        self.engine.submit(reqs)
+        # group-wise submission: the paged arena prefills each prompt once
+        # and shares its pages across the G' siblings; on the dense arena
+        # submit_group is plain FIFO submit, so the stream is unchanged
+        for pi in range(self._p):
+            self.engine.submit_group([
+                Request(
+                    uid=i * self._rows + pi * self._gp + j,
+                    tokens=np.asarray(pb.tokens[pi, :int(pb.prompt_lens[pi])]),
+                    budget=(int(budgets[pi * self._gp + j])
+                            if budgets is not None else n))
+                for j in range(self._gp)])
         self._next_group = i + 1
         return True
 

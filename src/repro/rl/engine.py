@@ -55,6 +55,9 @@ from repro.models.model import (
     cache_decl,
     decode_step,
     invalidate_cache_rows,
+    invalidate_pages,
+    paged_cache_decl,
+    paged_prefill,
     prefill,
 )
 
@@ -96,6 +99,73 @@ class Completion:
     @property
     def response_len(self) -> int:
         return int(self.tokens.shape[0])
+
+
+# --------------------------------------------------- shared substep pieces
+def _substep_sample(st: dict, rcfg, n: int, s_slots: int):
+    """Sample the next token from the current logits and record it for live
+    slots — the head every arena substep (dense or paged) shares.  Mutates
+    ``st`` in place (out_* planes + key) and returns (nxt, live)."""
+    live = st["active"] & ~st["done"]
+    key, k1 = jax.random.split(st["key"])
+    if rcfg.temperature == 0.0:
+        nxt = jnp.argmax(st["logits"], axis=-1)
+    else:
+        nxt = jax.random.categorical(
+            k1, st["logits"] / rcfg.temperature, axis=-1)
+    logp_all = jax.nn.log_softmax(st["logits"], axis=-1)
+    logp = jnp.take_along_axis(logp_all, nxt[:, None], axis=-1)[:, 0]
+    ent = -jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1)
+    nxt = jnp.where(live, nxt, rcfg.pad_id).astype(jnp.int32)
+
+    bi = jnp.arange(s_slots)
+    idx = jnp.minimum(st["n_gen"], n - 1)
+    st["out_tok"] = st["out_tok"].at[bi, idx].set(
+        jnp.where(live, nxt, st["out_tok"][bi, idx]))
+    st["out_logp"] = st["out_logp"].at[bi, idx].set(
+        jnp.where(live, logp, st["out_logp"][bi, idx]))
+    st["out_ent"] = st["out_ent"].at[bi, idx].set(
+        jnp.where(live, ent, st["out_ent"][bi, idx]))
+    st["key"] = key
+    return nxt, live
+
+
+def _place_slot_planes(st: dict, tgt, lens, budgets, logits, n: int,
+                       pad_id: int) -> dict:
+    """Scatter freshly-placed slots' per-slot planes — shared by the paged
+    step's prefill placement and parked-sibling resume: prompt logits in,
+    counters zeroed, output buffers cleared.  ``tgt`` carries the
+    slot-count sentinel for masked lanes (dropped)."""
+    rg = tgt.shape[0]
+    st["logits"] = st["logits"].at[tgt].set(logits.astype(F32), mode="drop")
+    st["pos"] = st["pos"].at[tgt].set(lens, mode="drop")
+    st["prompt_len"] = st["prompt_len"].at[tgt].set(lens, mode="drop")
+    st["n_gen"] = st["n_gen"].at[tgt].set(0, mode="drop")
+    st["budget"] = st["budget"].at[tgt].set(budgets, mode="drop")
+    st["active"] = st["active"].at[tgt].set(True, mode="drop")
+    st["done"] = st["done"].at[tgt].set(False, mode="drop")
+    st["eos_hit"] = st["eos_hit"].at[tgt].set(False, mode="drop")
+    st["out_tok"] = st["out_tok"].at[tgt].set(
+        jnp.full((rg, n), pad_id, st["out_tok"].dtype), mode="drop")
+    st["out_logp"] = st["out_logp"].at[tgt].set(
+        jnp.zeros((rg, n), F32), mode="drop")
+    st["out_ent"] = st["out_ent"].at[tgt].set(
+        jnp.zeros((rg, n), F32), mode="drop")
+    return st
+
+
+def _substep_advance(st: dict, nxt, live, new_logits, rcfg) -> dict:
+    """Shared substep tail: merge the new logits for live slots, advance the
+    position/count planes, latch EOS/budget retirement."""
+    st["logits"] = jnp.where(
+        live[:, None], new_logits.astype(F32), st["logits"])
+    st["pos"] = st["pos"] + live
+    st["n_gen"] = st["n_gen"] + live
+    hit_eos = live & (nxt == rcfg.eos_id)
+    st["eos_hit"] = st["eos_hit"] | hit_eos
+    st["done"] = st["done"] | (
+        live & (hit_eos | (st["n_gen"] >= st["budget"])))
+    return st
 
 
 class ContinuousRolloutEngine:
@@ -235,39 +305,11 @@ class ContinuousRolloutEngine:
             # shapes are static) but emit nothing and hold their state.
             def substep(st, _):
                 st = dict(st)
-                live = st["active"] & ~st["done"]
-                key, k1 = jax.random.split(st["key"])
-                if rcfg.temperature == 0.0:
-                    nxt = jnp.argmax(st["logits"], axis=-1)
-                else:
-                    nxt = jax.random.categorical(
-                        k1, st["logits"] / rcfg.temperature, axis=-1)
-                logp_all = jax.nn.log_softmax(st["logits"], axis=-1)
-                logp = jnp.take_along_axis(logp_all, nxt[:, None], axis=-1)[:, 0]
-                ent = -jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1)
-                nxt = jnp.where(live, nxt, rcfg.pad_id).astype(jnp.int32)
-
-                bi = jnp.arange(s_slots)
-                idx = jnp.minimum(st["n_gen"], n - 1)
-                st["out_tok"] = st["out_tok"].at[bi, idx].set(
-                    jnp.where(live, nxt, st["out_tok"][bi, idx]))
-                st["out_logp"] = st["out_logp"].at[bi, idx].set(
-                    jnp.where(live, logp, st["out_logp"][bi, idx]))
-                st["out_ent"] = st["out_ent"].at[bi, idx].set(
-                    jnp.where(live, ent, st["out_ent"][bi, idx]))
-
+                nxt, live = _substep_sample(st, rcfg, n, s_slots)
                 new_logits, new_cache = decode_step(
                     params, cfg, nxt, st["cache"], st["pos"])
                 st["cache"] = new_cache
-                st["logits"] = jnp.where(
-                    live[:, None], new_logits.astype(F32), st["logits"])
-                st["pos"] = st["pos"] + live
-                st["n_gen"] = st["n_gen"] + live
-                hit_eos = live & (nxt == rcfg.eos_id)
-                st["eos_hit"] = st["eos_hit"] | hit_eos
-                st["done"] = st["done"] | (
-                    live & (hit_eos | (st["n_gen"] >= st["budget"])))
-                st["key"] = key
+                st = _substep_advance(st, nxt, live, new_logits, rcfg)
                 return st, None
 
             st, _ = jax.lax.scan(substep, st, None, length=ecfg.steps_per_sync)
@@ -300,16 +342,26 @@ class ContinuousRolloutEngine:
                       "tokens_generated": 0, "cancelled": 0,
                       "slot_substeps": 0}
 
-    def submit(self, requests: Sequence[Request]) -> None:
-        """Enqueue requests; callable at any point during a session, so new
-        work streams in while earlier rollouts are still draining."""
+    def _validate_requests(self, requests: Sequence[Request]) -> None:
         rcfg, tp = self.rcfg, self.ecfg.max_prompt_len
         for r in requests:
             if len(r.tokens) > tp:
                 raise ValueError(f"request {r.uid}: prompt longer than {tp}")
             if r.budget > rcfg.max_new_tokens:
                 raise ValueError(f"request {r.uid}: budget > max_new_tokens")
+
+    def submit(self, requests: Sequence[Request]) -> None:
+        """Enqueue requests; callable at any point during a session, so new
+        work streams in while earlier rollouts are still draining."""
+        self._validate_requests(requests)
         self._queue.extend(requests)
+
+    def submit_group(self, requests: Sequence[Request]) -> None:
+        """Enqueue one GRPO group's sibling requests.  The dense arena has
+        no prompt sharing, so this is plain ``submit``; the paged engine
+        overrides it to prefill the shared prompt once (DESIGN.md §8).
+        Call sites that know the group structure should use this."""
+        self.submit(requests)
 
     def set_params(self, params) -> None:
         """Versioned snapshot swap: the *next* dispatched step decodes under
@@ -345,15 +397,13 @@ class ContinuousRolloutEngine:
             self._to_cancel.update(self._on_finish(comp) or ())
         return comp
 
-    def drive(self) -> list:
-        """One round: sync the control planes, harvest retirements, refill
-        free slots from the queue, dispatch the jitted step.  Returns the
-        Completions retired this round (possibly empty).  When the session
-        is idle the call is a no-op."""
-        ecfg, rcfg = self.ecfg, self.rcfg
-        s_slots, tp = ecfg.num_slots, ecfg.max_prompt_len
-        state, slot_uid, queue = self._state, self._slot_uid, self._queue
+    def _collect_retirements(self) -> tuple:
+        """Sync the control planes and harvest every retired or cancelled
+        slot.  Returns (harvested Completions, device cancel_mask (S,)) —
+        the round head shared by the dense and paged drive loops."""
+        state, slot_uid = self._state, self._slot_uid
         to_cancel = self._to_cancel
+        s_slots = self.ecfg.num_slots
         harvested: list = []
 
         # -- sync the two control planes; fetch buffers only on retirement
@@ -383,6 +433,32 @@ class ContinuousRolloutEngine:
                 if slot_uid[s] is not None and slot_uid[s] in to_cancel:
                     harvested.append(self._harvest(s, host, True))
                     cancel_mask[s] = True
+        return harvested, cancel_mask
+
+    def _cancelled_completion(self, r: Request) -> Completion:
+        """Empty Completion for a request cancelled before placement.  The
+        contract fires on_finish for every request, including these."""
+        comp = Completion(
+            uid=r.uid, prompt_len=len(r.tokens),
+            tokens=np.zeros((0,), np.int32),
+            logp=np.zeros((0,), np.float32),
+            entropy=np.zeros((0,), np.float32),
+            completed=False, cancelled=True)
+        self.stats["cancelled"] += 1
+        if self._on_finish is not None:
+            self._to_cancel.update(self._on_finish(comp) or ())
+        return comp
+
+    def drive(self) -> list:
+        """One round: sync the control planes, harvest retirements, refill
+        free slots from the queue, dispatch the jitted step.  Returns the
+        Completions retired this round (possibly empty).  When the session
+        is idle the call is a no-op."""
+        ecfg, rcfg = self.ecfg, self.rcfg
+        s_slots, tp = ecfg.num_slots, ecfg.max_prompt_len
+        state, slot_uid, queue = self._state, self._slot_uid, self._queue
+        to_cancel = self._to_cancel
+        harvested, cancel_mask = self._collect_retirements()
 
         # -- refill free slots from the queue (skipping cancelled uids),
         # at most R lanes per round
@@ -397,19 +473,7 @@ class ContinuousRolloutEngine:
             if slot_uid[s] is not None or lane >= lanes:
                 continue
             while queue and queue[0].uid in to_cancel:
-                r = queue.popleft()
-                comp = Completion(
-                    uid=r.uid, prompt_len=len(r.tokens),
-                    tokens=np.zeros((0,), np.int32),
-                    logp=np.zeros((0,), np.float32),
-                    entropy=np.zeros((0,), np.float32),
-                    completed=False, cancelled=True)
-                harvested.append(comp)
-                self.stats["cancelled"] += 1
-                # the contract fires on_finish for every request,
-                # including ones cancelled before they were placed
-                if self._on_finish is not None:
-                    to_cancel.update(self._on_finish(comp) or ())
+                harvested.append(self._cancelled_completion(queue.popleft()))
             if not queue:
                 break
             r = queue.popleft()
@@ -447,6 +511,27 @@ class ContinuousRolloutEngine:
             if self.idle and not got:
                 return out
 
+    def run_groups(
+        self,
+        params,
+        groups: Sequence[Sequence[Request]],
+        key: Array,
+        *,
+        on_finish: Optional[Callable[[Completion], Optional[Iterable[int]]]]
+        = None,
+    ) -> list:
+        """Serve ``groups`` (one ``submit_group`` each) to completion;
+        returns Completions in submission order.  The group-aware
+        run-to-completion wrapper shared by ``rollout_group_continuous``,
+        the benchmarks, and the serving example — on the paged arena each
+        group's prompt pages are shared across its siblings."""
+        self.begin(params, key, on_finish=on_finish)
+        for g in groups:
+            self.submit_group(g)
+        out = {c.uid: c for c in self.drain()}
+        self.last_state = self._state
+        return [out[r.uid] for g in groups for r in g if r.uid in out]
+
     def run(
         self,
         params,
@@ -456,14 +541,11 @@ class ContinuousRolloutEngine:
         on_finish: Optional[Callable[[Completion], Optional[Iterable[int]]]]
         = None,
     ) -> list:
-        """Serve ``requests`` through the arena; returns Completions in
-        submission order.  Run-to-completion wrapper over ``begin`` /
-        ``submit`` / ``drive``."""
-        self.begin(params, key, on_finish=on_finish)
-        self.submit(requests)
-        out = {c.uid: c for c in self.drain()}
-        self.last_state = self._state
-        return [out[r.uid] for r in requests if r.uid in out]
+        """Serve ungrouped ``requests`` through the arena; returns
+        Completions in submission order (``run_groups`` with singleton
+        groups — identical FIFO submission on the dense arena)."""
+        return self.run_groups(params, [[r] for r in requests], key,
+                               on_finish=on_finish)
 
 
 def make_engine(cfg: ModelConfig, rcfg, *, num_slots: int,
@@ -473,3 +555,638 @@ def make_engine(cfg: ModelConfig, rcfg, *, num_slots: int,
         cfg, rcfg, EngineConfig(num_slots=num_slots,
                                 max_prompt_len=max_prompt_len,
                                 steps_per_sync=steps_per_sync))
+
+
+# ======================================================= paged KV arena
+@dataclasses.dataclass(frozen=True)
+class PagedEngineConfig:
+    """Static geometry of the paged arena (DESIGN.md §8).
+
+    The KV store is a fixed ``(num_pages, page_len)`` pool per attention
+    layer plus per-slot block tables; a GRPO group's prompt pages are
+    prefilled once and refcounted across all its siblings, so prompt KV
+    memory per group is O(1) in the group size instead of O(G).
+    """
+
+    num_slots: int = 8
+    max_prompt_len: int = 32
+    steps_per_sync: int = 4    # decode substeps per host round-trip
+    page_len: int = 16         # tokens per KV page
+    num_pages: int = 0         # pool size; 0 -> dense-equivalent worst case
+    group_lanes: int = 1       # groups prefilled per round
+    max_group: int = 8         # widest group submit_group accepts
+    resume_lanes: int = 0      # parked siblings placed per round; 0 -> auto
+    attn_impl: str = "ref"     # "ref" (jnp gather) | "kernel" (Pallas)
+
+    @property
+    def lanes(self) -> int:
+        return self.group_lanes
+
+    @property
+    def resumes(self) -> int:
+        """Resume lane width: bounds the (lanes, vocab) logits operand
+        shipped to the step each round, so it stays a group's worth, not
+        an arena's worth."""
+        return self.resume_lanes or max(1, min(self.num_slots,
+                                               self.max_group))
+
+
+class PagePoolExhausted(RuntimeError):
+    """The page pool cannot satisfy an allocation.
+
+    Raised eagerly on the host — never silently corrupting the arena —
+    with the pool occupancy in the message.  Fix by growing ``num_pages``
+    (the auto default of ``num_slots * pages_per_slot`` can never
+    exhaust) or shrinking slots/budgets.
+    """
+
+
+class PageAllocator:
+    """Host-side free list + refcounts over the device page pool.
+
+    Pages are a shared resource: a GRPO group's prompt pages carry one
+    reference per live sibling and are freed when the last sibling
+    retires; decode pages are slot-private (refcount 1) and return to the
+    free list the moment their slot retires or is cancelled.  The
+    allocator only does bookkeeping — the device learns about reuse via
+    the engine's free-page invalidation mask.
+    """
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, -1, -1))  # LIFO stack
+        self.refcount = np.zeros((num_pages,), np.int32)
+        self.peak_in_use = 0
+
+    @property
+    def in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int, what: str = "") -> list:
+        if n > len(self._free):
+            raise PagePoolExhausted(
+                f"page pool exhausted allocating {n} page(s){what}: "
+                f"{self.in_use}/{self.num_pages} pages in use "
+                f"({len(self._free)} free); grow PagedEngineConfig.num_pages "
+                "or reduce num_slots / budgets")
+        pages = [self._free.pop() for _ in range(n)]
+        self.refcount[pages] = 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pages
+
+    def retain(self, pages: Sequence[int]) -> None:
+        self.refcount[list(pages)] += 1
+
+    def release(self, pages: Sequence[int]) -> list:
+        """Drop one reference per page; returns the pages actually freed
+        (refcount hit zero) — these need invalidation before reuse."""
+        freed = []
+        for p in pages:
+            self.refcount[p] -= 1
+            assert self.refcount[p] >= 0, f"page {p} over-released"
+            if self.refcount[p] == 0:
+                self._free.append(p)
+                freed.append(p)
+        return freed
+
+
+class PagedRolloutEngine(ContinuousRolloutEngine):
+    """Slot arena over a paged KV pool with group-level prefix sharing.
+
+    Same session API and retire/refill discipline as the dense arena, with
+    the memory model rewritten (DESIGN.md §8):
+
+    * attention KV lives in a fixed ``(num_pages, page_len)`` pool per
+      layer; per-slot structure is a host-built block table passed into
+      every round — retiring a slot is a free-list push, not a row
+      invalidation,
+    * ``submit_group`` registers a GRPO group: the shared prompt is
+      prefilled ONCE into refcounted read-only pages and every sibling's
+      block table starts with them (decode tokens always open a fresh
+      slot-private page, so copy-on-write is never needed),
+    * siblings placed in the prefill round get the prompt logits and the
+      O(window)/O(1) non-attention states broadcast on device; for
+      pure-attention configs the remaining siblings are PARKED — the
+      prompt logits persist in a ``prefill_logits`` state plane, the host
+      snapshots them one round later, and each parked sibling resumes
+      into any freed slot with a pure scatter (prompt pages + saved
+      logits ARE the prompt state; nothing recomputes, so group width
+      never serializes the arena).  Configs with per-slot sequence state
+      (local rings, ssm/rec) place atomically instead,
+    * APRIL cancellation frees a straggler's decode pages the moment the
+      host learns of it; freed pages are ``pos``-poisoned on device before
+      any reuse (gather isolation),
+    * page allocation is host-side and allocate-ahead: before each round
+      every occupied slot owns enough decode pages for ``steps_per_sync``
+      tokens, so the jitted step never allocates; exhaustion raises
+      ``PagePoolExhausted`` instead of corrupting the arena.
+    """
+
+    def __init__(self, cfg: ModelConfig, rcfg, ecfg: PagedEngineConfig):
+        for pattern, _ in cfg.blocks:
+            for kind in pattern:
+                if cfg.mixer_of(kind) == "mla":
+                    raise NotImplementedError(
+                        "paged engine: MLA latent caches are not paged yet")
+        pl_ = ecfg.page_len
+        self._n_pp = -(-ecfg.max_prompt_len // pl_)    # max prompt pages
+        self._n_dp = -(-rcfg.max_new_tokens // pl_)    # max decode pages
+        self._max_pages = self._n_pp + self._n_dp      # block table width
+        self.num_pages = ecfg.num_pages or ecfg.num_slots * self._max_pages
+        # deferred sibling placement needs the prompt state to live wholly
+        # in shared pages + saved logits: true only for pure-attention
+        # stacks (local rings / ssm / rec carry per-slot sequence state)
+        self._pure_attn = all(cfg.mixer_of(k) == "attn"
+                              for pattern, _ in cfg.blocks for k in pattern)
+        if not self._pure_attn and ecfg.max_group > ecfg.num_slots:
+            raise ValueError(
+                "max_group cannot exceed num_slots: per-slot-state mixers "
+                "(local/ssm/rec/xattn) place groups atomically")
+        super().__init__(cfg, rcfg, ecfg)
+        self._reset_pool()
+
+    # ------------------------------------------------------------ host pool
+    def _reset_pool(self) -> None:
+        s = self.ecfg.num_slots
+        self._alloc = PageAllocator(self.num_pages)
+        self._slot_prompt_pages: list = [[] for _ in range(s)]
+        self._slot_decode_pages: list = [[] for _ in range(s)]
+        self._slot_plen = np.zeros((s,), np.int32)
+        self._slot_budget = np.zeros((s,), np.int32)
+        self._n_gen_ub = np.zeros((s,), np.int64)  # host upper bound on n_gen
+        self._dirty: set = set()  # freed pages awaiting pos-invalidation
+        # partially-placed groups: prompt prefilled, some siblings parked
+        # awaiting a free slot; each record holds one extra prompt-page
+        # reference until its last sibling places or cancels
+        self._pending: list = []
+
+    def begin(self, params, key: Array, *, on_finish=None) -> None:
+        super().begin(params, key, on_finish=on_finish)
+        self._reset_pool()
+        self.stats.update(prompt_prefills=0, pages_in_use=0,
+                          peak_pages_in_use=0)
+
+    def _free_slot_pages(self, s: int) -> None:
+        freed = self._alloc.release(self._slot_decode_pages[s])
+        freed += self._alloc.release(self._slot_prompt_pages[s])
+        self._dirty.update(freed)
+        self._slot_decode_pages[s] = []
+        self._slot_prompt_pages[s] = []
+
+    def _harvest(self, s: int, host, cancelled: bool) -> Completion:
+        comp = super()._harvest(s, host, cancelled)
+        self._free_slot_pages(s)
+        return comp
+
+    # ------------------------------------------------------------- submit
+    def submit(self, requests: Sequence[Request]) -> None:
+        """Ungrouped requests: each becomes its own group of one (no
+        sharing, but the paged lifecycle still applies)."""
+        for r in requests:
+            self.submit_group([r])
+
+    def submit_group(self, requests: Sequence[Request]) -> None:
+        """Enqueue one group: siblings share a single prompt whose pages
+        are prefilled once and refcounted across all of them."""
+        reqs = list(requests)
+        if not reqs:
+            return
+        if len(reqs) > self.ecfg.max_group:
+            raise ValueError(
+                f"group of {len(reqs)} exceeds max_group="
+                f"{self.ecfg.max_group}")
+        self._validate_requests(reqs)
+        t0 = np.asarray(reqs[0].tokens)
+        for r in reqs[1:]:
+            if not np.array_equal(np.asarray(r.tokens), t0):
+                raise ValueError(
+                    "submit_group: siblings must share one prompt "
+                    f"(uid {r.uid} differs from uid {reqs[0].uid})")
+        pl_, n = self.ecfg.page_len, self.rcfg.max_new_tokens
+        # worst-case CONCURRENT need: prompt pages once, plus decode pages
+        # for the largest siblings that can run at the same time (parking
+        # bounds concurrency by the slot count)
+        dp = sorted((-(-(r.budget or n) // pl_) for r in reqs), reverse=True)
+        need = -(-len(t0) // pl_) + sum(dp[:self.ecfg.num_slots])
+        if need > self.num_pages:
+            raise PagePoolExhausted(
+                f"group needs up to {need} concurrent pages but the pool "
+                f"holds only {self.num_pages}; grow "
+                "PagedEngineConfig.num_pages")
+        self._queue.append(reqs)
+
+    # ------------------------------------------------------------ device side
+    def _init_state(self, params, key: Array) -> dict:
+        """Zeroed pool + per-slot planes.  Pool storage dtype comes from an
+        abstract ``paged_prefill`` (what refills actually produce), with
+        ``paged_cache_decl`` shapes as the contract; every page starts
+        pos-poisoned (-1 = empty)."""
+        ecfg = self.ecfg
+        s, n = ecfg.num_slots, self.rcfg.max_new_tokens
+        pl_, npg = ecfg.page_len, self.num_pages
+        cfg = self.cfg
+        if self._cache_tmpl is None:
+            raw = jax.eval_shape(
+                lambda p: paged_prefill(
+                    p, cfg,
+                    jnp.zeros((ecfg.group_lanes, ecfg.max_prompt_len),
+                              jnp.int32),
+                    cache_len=self.cache_len,
+                    prefill_len=jnp.ones((ecfg.group_lanes,), jnp.int32))[1],
+                params)
+            decl = paged_cache_decl(cfg, s, self.cache_len,
+                                    num_pages=npg, page_len=pl_)
+            tmpl = {}
+            for gi, (pattern, repeat) in enumerate(cfg.blocks):
+                layer = {}
+                for j, kind in enumerate(pattern):
+                    e = raw[f"group{gi}"][f"l{j}"]
+                    if cfg.mixer_of(kind) == "attn":
+                        kvh, dh = e["k"].shape[-2:]
+                        layer[f"l{j}"] = {
+                            "k": jax.ShapeDtypeStruct(
+                                (repeat, npg, pl_, kvh, dh), e["k"].dtype),
+                            "v": jax.ShapeDtypeStruct(
+                                (repeat, npg, pl_, kvh, dh), e["v"].dtype),
+                            "pos": jax.ShapeDtypeStruct(
+                                (repeat, npg, pl_), jnp.int32),
+                        }
+                    else:
+                        # per-slot entry: widen the lane batch dim to S
+                        layer[f"l{j}"] = jax.tree.map(
+                            lambda d: jax.ShapeDtypeStruct(
+                                (d.shape[0], s) + d.shape[2:], d.dtype), e)
+                tmpl[f"group{gi}"] = layer
+
+            def check(a, b):
+                assert a.shape == b.shape, \
+                    f"paged cache shape drift {a.shape}!={b.shape}"
+
+            jax.tree.map(check, tmpl, decl)
+            self._cache_tmpl = tmpl
+        cache = jax.tree.map(lambda d: jnp.zeros(d.shape, d.dtype),
+                             self._cache_tmpl)
+        cache = invalidate_pages(cfg, cache, jnp.ones((npg,), bool))
+        return {
+            "cache": cache,
+            # prompt logits of the last prefill, per lane: survives the
+            # round so the host can snapshot them for parked siblings
+            "prefill_logits": jnp.zeros(
+                (ecfg.group_lanes, self.cfg.vocab_size), F32),
+            "logits": jnp.zeros((s, self.cfg.vocab_size), F32),
+            "pos": jnp.zeros((s,), jnp.int32),
+            "prompt_len": jnp.zeros((s,), jnp.int32),
+            "n_gen": jnp.zeros((s,), jnp.int32),
+            "budget": jnp.zeros((s,), jnp.int32),
+            "active": jnp.zeros((s,), bool),
+            "done": jnp.zeros((s,), bool),
+            "eos_hit": jnp.zeros((s,), bool),
+            "key": jnp.array(key),
+            "out_tok": jnp.full((s, n), self.rcfg.pad_id, jnp.int32),
+            "out_logp": jnp.zeros((s, n), F32),
+            "out_ent": jnp.zeros((s, n), F32),
+        }
+
+    def _make_step(self):
+        cfg, rcfg, ecfg = self.cfg, self.rcfg, self.ecfg
+        s_slots = ecfg.num_slots
+        n = rcfg.max_new_tokens
+        tp = ecfg.max_prompt_len
+        pl_ = ecfg.page_len
+        npg = self.num_pages
+        n_pp, max_pages = self._n_pp, self._max_pages
+        gmax = ecfg.max_group
+        pad_t = n_pp * pl_
+        cache_len = self.cache_len
+        attn_impl = ecfg.attn_impl
+
+        def step(params, state, block_tables, free_page_mask, refill_toks,
+                 refill_lens, refill_page_ids, refill_slots, refill_budgets,
+                 refill_mask, resume_slots, resume_logits, resume_lens,
+                 resume_budgets, resume_mask, cancel_mask):
+            st = dict(state)
+            # 1. cancelled slots become free (harvest happened on host)
+            st["active"] = st["active"] & ~cancel_mask
+            st["done"] = st["done"] & ~cancel_mask
+            # 2. pos-poison freed pages before any reuse this round: a
+            # recycled page must never leak its previous occupant's
+            # positions as valid entries (gather isolation)
+            st["cache"] = invalidate_pages(cfg, st["cache"], free_page_mask)
+
+            # 3. group refill: one prompt prefill per lane, its raw KV
+            # scattered into the shared prompt pages, logits and per-slot
+            # (non-attention) states broadcast to every sibling slot
+            tgt = jnp.where(refill_slots < s_slots, refill_slots,
+                            s_slots).astype(jnp.int32).reshape(-1)  # (R*Gmax,)
+            flat_pages = jnp.minimum(refill_page_ids,
+                                     npg).astype(jnp.int32).reshape(-1)
+
+            def do_refill(st):
+                st = dict(st)
+                logits0, fresh = paged_prefill(
+                    params, cfg, refill_toks, cache_len=cache_len,
+                    prefill_len=jnp.maximum(refill_lens, 1))
+                qpos = jnp.arange(pad_t)[None, :]
+                page_vals = jnp.where(qpos < refill_lens[:, None], qpos,
+                                      -1).astype(jnp.int32)
+                page_vals = page_vals.reshape(-1, pl_)       # (R*n_pp, pl)
+
+                new_cache = {}
+                for gi, (pattern, repeat) in enumerate(cfg.blocks):
+                    grp = {}
+                    for j, kind in enumerate(pattern):
+                        e_old = st["cache"][f"group{gi}"][f"l{j}"]
+                        e_new = fresh[f"group{gi}"][f"l{j}"]
+                        if cfg.mixer_of(kind) == "attn":
+                            def scat_kv(pool, raw):
+                                # raw (repeat, R, Tp, KV, D) -> page blocks
+                                raw = jnp.pad(raw, ((0, 0), (0, 0),
+                                                    (0, pad_t - tp),
+                                                    (0, 0), (0, 0)))
+                                rep, r_ = raw.shape[:2]
+                                raw = raw.reshape(rep, r_ * n_pp, pl_,
+                                                  *raw.shape[3:])
+                                return pool.at[:, flat_pages].set(
+                                    raw.astype(pool.dtype), mode="drop")
+
+                            rep = e_old["pos"].shape[0]
+                            pos_new = e_old["pos"].at[:, flat_pages].set(
+                                jnp.broadcast_to(
+                                    page_vals, (rep,) + page_vals.shape),
+                                mode="drop")
+                            grp[f"l{j}"] = {"k": scat_kv(e_old["k"],
+                                                         e_new["k"]),
+                                            "v": scat_kv(e_old["v"],
+                                                         e_new["v"]),
+                                            "pos": pos_new}
+                        else:
+                            def scat_slot(arena, rows):
+                                rows = jnp.repeat(rows, gmax, axis=1)
+                                return arena.at[:, tgt].set(
+                                    rows.astype(arena.dtype), mode="drop")
+
+                            grp[f"l{j}"] = jax.tree.map(scat_slot, e_old,
+                                                        e_new)
+                    new_cache[f"group{gi}"] = grp
+                st["cache"] = new_cache
+
+                st["prefill_logits"] = logits0.astype(F32)
+                return _place_slot_planes(
+                    st, tgt, jnp.repeat(refill_lens, gmax),
+                    refill_budgets.reshape(-1),
+                    jnp.repeat(logits0, gmax, axis=0), n, rcfg.pad_id)
+
+            st = jax.lax.cond(refill_mask.any(), do_refill,
+                              lambda s_: dict(s_), st)
+
+            # 3b. resume parked siblings (pure-attention configs): the
+            # prompt state is exactly its shared pages (already in the
+            # block table) + the saved prompt logits — placement is a
+            # pure scatter, nothing recomputes
+            rtgt = jnp.where(resume_slots < s_slots, resume_slots,
+                             s_slots).astype(jnp.int32)
+
+            def do_resume(st):
+                return _place_slot_planes(dict(st), rtgt, resume_lens,
+                                          resume_budgets, resume_logits, n,
+                                          rcfg.pad_id)
+
+            st = jax.lax.cond(resume_mask.any(), do_resume,
+                              lambda s_: dict(s_), st)
+
+            # 4. masked decode substeps through the block tables
+            def substep(st, _):
+                st = dict(st)
+                nxt, live = _substep_sample(st, rcfg, n, s_slots)
+                # write target: decode token i = n_gen opens/extends the
+                # slot's private pages AFTER its prompt pages — never a
+                # shared page, so prompt pages stay read-only
+                n_pp_s = (st["prompt_len"] + pl_ - 1) // pl_
+                page_slot = jnp.minimum(n_pp_s + st["n_gen"] // pl_,
+                                        max_pages - 1)
+                bt_entry = jnp.take_along_axis(
+                    block_tables, page_slot[:, None], axis=1)[:, 0]
+                wp = jnp.where(live & (bt_entry >= 0), bt_entry,
+                               npg).astype(jnp.int32)
+                wo = (st["n_gen"] % pl_).astype(jnp.int32)
+                new_logits, new_cache = decode_step(
+                    params, cfg, nxt, st["cache"], st["pos"],
+                    block_tables=block_tables, write_page=wp, write_off=wo,
+                    attn_impl=attn_impl)
+                st["cache"] = new_cache
+                st = _substep_advance(st, nxt, live, new_logits, rcfg)
+                return st, None
+
+            st, _ = jax.lax.scan(substep, st, None,
+                                 length=ecfg.steps_per_sync)
+            return st
+
+        return step
+
+    # ------------------------------------------------------------- drive
+    @property
+    def idle(self) -> bool:
+        return super().idle and not self._pending
+
+    def drive(self) -> list:
+        """One paged round: harvest (freeing pages), resume parked
+        siblings into freed slots, place queued groups with one shared
+        prompt prefill each, allocate-ahead decode pages, dispatch the
+        jitted step with fresh block tables."""
+        ecfg, rcfg = self.ecfg, self.rcfg
+        s_slots, tp = ecfg.num_slots, ecfg.max_prompt_len
+        pl_, sps = ecfg.page_len, ecfg.steps_per_sync
+        state, slot_uid, queue = self._state, self._slot_uid, self._queue
+        harvested, cancel_mask = self._collect_retirements()
+
+        # snapshot prompt logits for parked groups (written by the prefill
+        # one round earlier; read before any new prefill reuses the lane)
+        if any(rec["logits"] is None for rec in self._pending):
+            lane_logits = np.asarray(state["prefill_logits"])
+            for rec in self._pending:
+                if rec["logits"] is None:
+                    rec["logits"] = lane_logits[rec["lane"]].copy()
+
+        # -- allocate-ahead for slots already decoding: each must own
+        # pages for every token it can write this round (exhaustion here
+        # is a real undersized pool — raise, never corrupt)
+        occupied = [s for s in range(s_slots) if slot_uid[s] is not None]
+        for s in occupied:
+            want = int(min(self._n_gen_ub[s] + sps, self._slot_budget[s]))
+            need = -(-want // pl_)
+            while len(self._slot_decode_pages[s]) < need:
+                self._slot_decode_pages[s].extend(
+                    self._alloc.alloc(1, f" (slot {s} decode-ahead)"))
+        free_slots = [s for s in range(s_slots) if slot_uid[s] is None]
+
+        def place(s: int, r: Request, plen: int, ppages: list,
+                  first_ref: bool) -> int:
+            """Install sibling ``r`` in slot ``s``: take a prompt-page
+            reference (unless it inherits the allocation's first ref) and
+            allocate its first decode pages."""
+            budget = r.budget or rcfg.max_new_tokens
+            if not first_ref:
+                self._alloc.retain(ppages)
+            slot_uid[s] = r.uid
+            self._slot_prompt_pages[s] = ppages
+            self._slot_decode_pages[s] = self._alloc.alloc(
+                -(-min(sps, budget) // pl_), f" (slot {s} decode)")
+            self._slot_plen[s] = plen
+            self._slot_budget[s] = budget
+            self._n_gen_ub[s] = 0
+            occupied.append(s)
+            return budget
+
+        # -- resume parked siblings into freed slots (pure scatter: their
+        # prompt state is the shared pages + the saved prompt logits);
+        # lane width bounds the (lanes, vocab) logits operand per round —
+        # leftovers simply wait for the next round
+        rw = ecfg.resumes
+        resume_mask = np.zeros((rw,), bool)
+        resume_slots = np.full((rw,), s_slots, np.int32)
+        resume_logits = np.zeros((rw, self.cfg.vocab_size), np.float32)
+        resume_lens = np.ones((rw,), np.int32)
+        resume_budgets = np.zeros((rw,), np.int32)
+        ri = 0
+        for rec in list(self._pending):
+            still = []
+            for r in rec["reqs"]:
+                if r.uid in self._to_cancel:
+                    harvested.append(self._cancelled_completion(r))
+                else:
+                    still.append(r)
+            rec["reqs"] = still
+            while (still and free_slots and ri < rw
+                   and rec["logits"] is not None):
+                budget = still[0].budget or rcfg.max_new_tokens
+                if -(-min(sps, budget) // pl_) > self._alloc.num_free:
+                    if not occupied and not resume_mask.any():
+                        self._alloc.alloc(  # raises with occupancy
+                            -(-min(sps, budget) // pl_), " (sibling resume)")
+                    break
+                r = still.pop(0)
+                s = free_slots.pop(0)
+                resume_budgets[ri] = place(s, r, rec["plen"], rec["ppages"],
+                                           first_ref=False)
+                resume_mask[ri] = True
+                resume_slots[ri] = s
+                resume_logits[ri] = rec["logits"]
+                resume_lens[ri] = rec["plen"]
+                ri += 1
+            if not rec["reqs"]:
+                # last sibling placed/cancelled: drop the record's ref
+                self._dirty.update(self._alloc.release(rec["ppages"]))
+                self._pending.remove(rec)
+
+        # -- place queued groups, one prompt prefill per lane; siblings
+        # beyond the free slots are parked (pure-attention) or the whole
+        # group waits (per-slot-state mixers place atomically)
+        lanes, gmax, n_pp = ecfg.group_lanes, ecfg.max_group, self._n_pp
+        refill_mask = np.zeros((lanes,), bool)
+        refill_toks = np.full((lanes, tp), rcfg.pad_id, np.int32)
+        refill_lens = np.ones((lanes,), np.int32)
+        refill_page_ids = np.full((lanes, n_pp), self.num_pages, np.int32)
+        refill_slots = np.full((lanes, gmax), s_slots, np.int32)
+        refill_budgets = np.zeros((lanes, gmax), np.int32)
+        lane = 0
+        while lane < lanes and queue and free_slots:
+            group = queue[0]
+            live = []
+            for r in group:
+                if r.uid in self._to_cancel:
+                    harvested.append(self._cancelled_completion(r))
+                else:
+                    live.append(r)
+            # strip emitted cancellations from the QUEUED group in place:
+            # the defer breaks below leave the group at the queue head, and
+            # a re-examined sibling must never re-emit its Completion
+            group[:] = live
+            if not live:
+                queue.popleft()
+                continue
+            if not self._pure_attn and len(live) > len(free_slots):
+                break  # atomic placement: wait for slots to free up
+            placed = live[:len(free_slots)]
+            parked = live[len(placed):]
+            plen = len(live[0].tokens)
+            n_pp_g = -(-plen // pl_)
+            need = n_pp_g + sum(
+                -(-min(sps, r.budget or rcfg.max_new_tokens) // pl_)
+                for r in placed)
+            if need > self._alloc.num_free:
+                if (not occupied and not refill_mask.any()
+                        and not resume_mask.any()):
+                    self._alloc.alloc(need, " (group placement)")  # raises
+                break  # wait for retirements to return pages
+            ppages = self._alloc.alloc(n_pp_g, " (group prompt)")
+            queue.popleft()
+            refill_mask[lane] = True
+            refill_toks[lane, :plen] = live[0].tokens
+            refill_lens[lane] = plen
+            refill_page_ids[lane, :n_pp_g] = ppages
+            for gidx, r in enumerate(placed):
+                s = free_slots.pop(0)
+                refill_slots[lane, gidx] = s
+                refill_budgets[lane, gidx] = place(s, r, plen, ppages,
+                                                   first_ref=(gidx == 0))
+            if parked:
+                self._alloc.retain(ppages)  # the pending record's ref
+                self._pending.append({"reqs": parked, "ppages": ppages,
+                                      "plen": plen, "lane": lane,
+                                      "logits": None})
+            self.stats["prompt_prefills"] += 1
+            lane += 1
+
+        if not refill_mask.any() and not resume_mask.any() and not occupied:
+            self.last_state = state  # session quiescent: expose for tests
+            return harvested
+
+        # -- block tables + free-page invalidation mask, rebuilt per round
+        bt = np.full((s_slots, self._max_pages), -1, np.int32)
+        for s in occupied:
+            n_pp_s = -(-int(self._slot_plen[s]) // pl_)
+            bt[s, :n_pp_s] = self._slot_prompt_pages[s]
+            dp = self._slot_decode_pages[s]
+            bt[s, n_pp_s:n_pp_s + len(dp)] = dp
+        free_mask = np.zeros((self.num_pages,), bool)
+        if self._dirty:
+            free_mask[sorted(self._dirty)] = True
+
+        self._state = self._step(
+            self._params, state, jnp.asarray(bt), jnp.asarray(free_mask),
+            jnp.asarray(refill_toks), jnp.asarray(refill_lens),
+            jnp.asarray(refill_page_ids), jnp.asarray(refill_slots),
+            jnp.asarray(refill_budgets), jnp.asarray(refill_mask),
+            jnp.asarray(resume_slots), jnp.asarray(resume_logits),
+            jnp.asarray(resume_lens), jnp.asarray(resume_budgets),
+            jnp.asarray(resume_mask), jnp.asarray(cancel_mask))
+        self._dirty.clear()
+        for s in occupied:
+            self._n_gen_ub[s] = min(self._n_gen_ub[s] + sps,
+                                    int(self._slot_budget[s]))
+        self.stats["rounds"] += 1
+        self.stats["decode_steps"] += sps
+        self.stats["slot_substeps"] += sps * s_slots
+        self.stats["refills"] += (int((refill_slots < s_slots).sum())
+                                  + int(resume_mask.sum()))
+        self.stats["pages_in_use"] = self._alloc.in_use
+        self.stats["peak_pages_in_use"] = self._alloc.peak_in_use
+        return harvested
+
+
+def make_paged_engine(cfg: ModelConfig, rcfg, *, num_slots: int,
+                      max_prompt_len: int, steps_per_sync: int = 4,
+                      page_len: int = 16, num_pages: int = 0,
+                      max_group: int = 0, attn_impl: str = "ref",
+                      ) -> PagedRolloutEngine:
+    return PagedRolloutEngine(
+        cfg, rcfg, PagedEngineConfig(
+            num_slots=num_slots, max_prompt_len=max_prompt_len,
+            steps_per_sync=steps_per_sync, page_len=page_len,
+            num_pages=num_pages,
+            max_group=max_group or min(num_slots, rcfg.group_size),
+            attn_impl=attn_impl))

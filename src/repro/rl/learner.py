@@ -97,15 +97,14 @@ def make_train_step(
     ``param_shardings`` (optional tree of NamedShardings): constrain each
     microbatch gradient to its parameter's sharding so the data-axis psum
     lowers to a reduce-scatter instead of a full all-reduce (§Perf).
-    ``packed`` selects the packed-layout loss (PACKED_BATCH_KEYS); packed
+    ``packed`` selects the packed-layout loss (PACKED_BATCH_KEYS).  Packed
     batches cannot be split on dim 0 — a packed row holds tokens of several
-    responses while the per-response leaves stay (B,) — so gradient
-    accumulation must microbatch BEFORE packing (one layout per microbatch),
-    not after."""
-    if packed and num_microbatches > 1:
-        raise ValueError(
-            "packed layout does not compose with num_microbatches > 1: "
-            "split the batch first, then pack each microbatch")
+    responses while the per-response leaves stay (B,) — so with
+    ``num_microbatches > 1`` the batch must be microbatched BEFORE packing
+    (``core.layout.build_microbatches``: one pack plan per chunk) and the
+    train step consumes a TUPLE of per-microbatch packed dicts.  The
+    accumulation loop is unrolled — chunks may pack to different
+    (rows, pack_len) shapes, which lax.scan cannot carry."""
     loss_fn = make_loss_fn(model_cfg, grpo_cfg, mesh=mesh, rules=rules,
                            vocab_chunks=vocab_chunks, packed=packed)
     vg = jax.value_and_grad(loss_fn, has_aux=True)
@@ -116,11 +115,38 @@ def make_train_step(
         return jax.tree.map(jax.lax.with_sharding_constraint, grads,
                             param_shardings)
 
+    def packed_accum_step(params, opt_state, batches):
+        """Packed gradient accumulation: ``batches`` is a tuple of
+        ``num_microbatches`` pre-packed dicts (split on the response axis
+        before packing).  Grads and metrics average over chunks exactly as
+        the dense scan path does."""
+        m = num_microbatches
+        if not isinstance(batches, (tuple, list)) or len(batches) != m:
+            raise ValueError(
+                f"packed train step with num_microbatches={m} takes a "
+                f"tuple of {m} pre-packed batch dicts "
+                "(core.layout.build_microbatches)")
+        g_acc = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+        metrics0 = jax.eval_shape(lambda p, b: loss_fn(p, b)[1], params,
+                                  batches[0])
+        metric_acc = jax.tree.map(lambda _: jnp.zeros((), F32), metrics0)
+        for mb in batches:
+            (loss, metrics), g = vg(params, mb)
+            g = constrain(g)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(F32) / m,
+                                 g_acc, g)
+            metrics = {k: v.astype(F32) / m for k, v in metrics.items()}
+            metric_acc = jax.tree.map(lambda a, b: a + b, metric_acc,
+                                      metrics)
+        return g_acc, metric_acc
+
     def train_step(params, opt_state, batch: dict):
         m = num_microbatches
         if m == 1:
             (loss, metrics), grads = vg(params, batch)
             grads = constrain(grads)
+        elif packed:
+            grads, metrics = packed_accum_step(params, opt_state, batch)
         else:
             def split(x):
                 return x.reshape((m, x.shape[0] // m) + x.shape[1:])

@@ -261,6 +261,9 @@ def rollout_group_continuous(
     steps_per_sync: int = 4,
     cancel_on_quota: bool = True,
     budgets: Optional[np.ndarray] = None,  # (P*G',) per-row token budgets
+    paged: bool = False,
+    page_len: int = 16,
+    num_pages: int = 0,
 ) -> RolloutBatch:
     """``rollout_group`` semantics on the slot-arena engine.
 
@@ -271,20 +274,38 @@ def rollout_group_continuous(
     in-flight ones retire at the next sync) — over-provisioning then costs
     only the tokens actually generated, not G' full budgets.
 
+    Requests are submitted group-wise (``submit_group`` per prompt): on the
+    dense arena that is plain FIFO submission, on the paged arena
+    (``paged=True``, DESIGN.md §8) each group's prompt KV is prefilled once
+    into refcounted shared pages across all G' siblings.
+
     ``budgets`` overrides the per-row decode budget (row r = prompt r//G',
     rollout r%G'), the hook length-curricula and the overlap benchmark's
     straggler mixes use; default is ``max_new_tokens`` everywhere.
     """
-    from repro.rl.engine import ContinuousRolloutEngine, EngineConfig, Request
+    from repro.rl.engine import (
+        ContinuousRolloutEngine, EngineConfig, PagedEngineConfig,
+        PagedRolloutEngine, Request,
+    )
 
     p, tp = prompt_tokens.shape
     g = rcfg.group_size
     gp = int(np.ceil(g * rcfg.overprovision))
     if engine is None:
-        engine = ContinuousRolloutEngine(
-            cfg, rcfg, EngineConfig(num_slots=num_slots or p * g,
-                                    max_prompt_len=tp,
-                                    steps_per_sync=steps_per_sync))
+        if paged:
+            # default slot count must cover one full G' group: configs
+            # with per-slot sequence state place groups atomically
+            engine = PagedRolloutEngine(
+                cfg, rcfg, PagedEngineConfig(
+                    num_slots=num_slots or max(p * g, gp),
+                    max_prompt_len=tp,
+                    steps_per_sync=steps_per_sync, page_len=page_len,
+                    num_pages=num_pages, max_group=gp))
+        else:
+            engine = ContinuousRolloutEngine(
+                cfg, rcfg, EngineConfig(num_slots=num_slots or p * g,
+                                        max_prompt_len=tp,
+                                        steps_per_sync=steps_per_sync))
     requests = [
         Request(uid=i * gp + j,
                 tokens=np.asarray(prompt_tokens[i, :int(prompt_lens[i])]),
@@ -306,7 +327,11 @@ def rollout_group_continuous(
                     if pi * gp + j not in finished]
         return None
 
-    comps = engine.run(params, requests, key, on_finish=on_finish)
+    # group-wise submission so the paged arena can share prompts; the
+    # dense arena sees the same FIFO request order as before
+    comps = engine.run_groups(
+        params, [requests[i * gp:(i + 1) * gp] for i in range(p)], key,
+        on_finish=on_finish)
 
     stats = dict(engine.stats)
     stats["tokens_budget"] = (int(budgets.sum()) if budgets is not None

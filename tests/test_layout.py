@@ -251,13 +251,85 @@ def test_packed_loss_and_grads_match_padded(sel_name, kw):
                                atol=5e-3 * scale, rtol=0)
 
 
-def test_packed_train_step_runs_and_rejects_microbatching():
+def _packed_learner_inputs(m):
+    """Build (full LayoutBatch, list of m per-microbatch LayoutBatches) for
+    the same selection — split on the response axis BEFORE packing."""
+    from repro.core.layout import build_microbatches
+
+    batch, pl_, rl_, rmask = synth_batch(b=8, t=64)
+    batch, sel = select(batch, rmask, "rpc", min_cut=4)
+    ladder = bucket_ladder(64, 4, 8)
+    layout = make_layout("packed")
+    kw = dict(prompt_lens=pl_, response_lens=rl_,
+              keep_len=np.asarray(sel.keep_len),
+              keep_mask=np.asarray(sel.ht_weights) > 0,
+              prefix_structured=sel.prefix_structured, ladder=ladder)
+    return layout.build(batch, **kw), build_microbatches(layout, batch, m,
+                                                         **kw)
+
+
+def test_packed_microbatch_accumulation_matches_single_step():
+    """packed + num_microbatches > 1: split responses into microbatches
+    BEFORE packing (per-microbatch BatchLayout.build), accumulate grads —
+    the updated params match num_microbatches=1 within reassociation
+    tolerance (the estimator is identical; only the pack plans differ)."""
+    from repro.optim import AdamWConfig, init_opt_state
+
     cfg = tiny_cfg()
-    from repro.core.grpo import GRPOConfig
-    from repro.optim import AdamWConfig
-    with pytest.raises(ValueError, match="packed layout"):
-        make_train_step(cfg, GRPOConfig(), AdamWConfig(), packed=True,
-                        num_microbatches=2)
+    params = init_params(jax.random.PRNGKey(0), model_decl(cfg))
+    oc = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt = init_opt_state(params, oc)
+    lb1, mbs = _packed_learner_inputs(2)
+    step1 = jax.jit(make_train_step(cfg, GRPOConfig(), oc, vocab_chunks=1,
+                                    packed=True))
+    step2 = jax.jit(make_train_step(cfg, GRPOConfig(), oc, vocab_chunks=1,
+                                    packed=True, num_microbatches=2))
+
+    def dev(d):
+        return {k: jnp.asarray(v) for k, v in d.items()}
+
+    p1, _, m1 = step1(params, opt, dev(lb1.data))
+    p2, _, m2 = step2(params, opt, tuple(dev(mb.data) for mb in mbs))
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=2e-5)
+    flat1, _ = ravel_pytree(p1)
+    flat2, _ = ravel_pytree(p2)
+    # params are bf16: allow one-ulp rounding on the handful of entries
+    # whose accumulated grad lands on a rounding boundary
+    np.testing.assert_allclose(np.asarray(flat2, np.float32),
+                               np.asarray(flat1, np.float32),
+                               rtol=1e-2, atol=1e-3)
+
+
+def test_packed_microbatch_step_requires_prebuilt_tuple():
+    """The packed accumulation path refuses a single flat dict: packed rows
+    cannot be split after packing, so the caller must pre-split (the shape
+    of the old num_microbatches>1 rejection, now with an escape hatch)."""
+    from repro.optim import AdamWConfig, init_opt_state
+
+    cfg = tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), model_decl(cfg))
+    oc = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt = init_opt_state(params, oc)
+    lb1, _ = _packed_learner_inputs(2)
+    step = make_train_step(cfg, GRPOConfig(), oc, vocab_chunks=1,
+                           packed=True, num_microbatches=2)
+    with pytest.raises(ValueError, match="pre-packed"):
+        step(params, opt, {k: jnp.asarray(v) for k, v in lb1.data.items()})
+
+
+def test_build_microbatches_requires_even_split():
+    from repro.core.layout import build_microbatches
+
+    batch, pl_, rl_, rmask = synth_batch(b=8, t=64)
+    batch, sel = select(batch, rmask, "rpc", min_cut=4)
+    with pytest.raises(ValueError, match="does not split"):
+        build_microbatches(
+            make_layout("packed"), batch, 3, prompt_lens=pl_,
+            response_lens=rl_, keep_len=np.asarray(sel.keep_len),
+            keep_mask=np.asarray(sel.ht_weights) > 0,
+            prefix_structured=sel.prefix_structured,
+            ladder=bucket_ladder(64, 4, 8))
 
 
 def test_packed_rejects_recurrent_mixers():
