@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.core.grpo import GRPOConfig
+from repro.launch.hlo_stats import cost_stats
 from repro.core.selectors import make_selector
 from repro.models.config import ModelConfig, dense_blocks
 from repro.models import init_params, model_decl
@@ -26,8 +27,7 @@ B, T = 8, 256
 
 def flops_of(fn, *args) -> float:
     c = jax.jit(fn).lower(*args).compile()
-    ca = c.cost_analysis() or {}
-    return float(ca.get("flops", 0.0))
+    return cost_stats(c)["flops"]
 
 
 def run(draws: int = 150) -> None:

@@ -23,6 +23,13 @@ Gating policy:
     a failure (a silently dropped suite is not a pass),
   * every other shared metric is reported (trajectory visibility), never
     gated — micro-benchmarks on shared CI runners are too noisy to block.
+
+``--coverage`` gates the architecture-coverage matrix instead (DESIGN.md
+§9): every legal (config, layout, engine) cell recorded in the committed
+``benchmarks/coverage_baseline.json`` must still be legal per
+``models/capabilities.py`` — coverage can grow, never shrink.  New cells
+are reported with a reminder to re-commit the baseline so the ratchet
+advances.
 """
 from __future__ import annotations
 
@@ -141,6 +148,40 @@ def check(fresh_path: str, root: str) -> int:
     return 0
 
 
+COVERAGE_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                 "coverage_baseline.json")
+
+
+def check_coverage(baseline_path: str = COVERAGE_BASELINE,
+                   write: bool = False) -> int:
+    """Coverage ratchet: the set of legal (config, layout, engine) cells
+    may gain members but never lose them vs the committed baseline."""
+    from repro.models.capabilities import coverage_cells
+
+    cells = {tuple(c) for c in coverage_cells()}
+    if write:
+        with open(baseline_path, "w") as f:
+            json.dump({"cells": sorted(list(c) for c in cells)}, f, indent=1)
+            f.write("\n")
+        print(f"# wrote {len(cells)} coverage cells to {baseline_path}")
+        return 0
+    with open(baseline_path) as f:
+        base = {tuple(c) for c in json.load(f)["cells"]}
+    lost = sorted(base - cells)
+    gained = sorted(cells - base)
+    print(f"# coverage matrix: {len(cells)} legal cells "
+          f"(baseline {len(base)})")
+    for c in gained:
+        print(f"  + {c} (new — re-run with --write-coverage to ratchet)")
+    if lost:
+        print("# COVERAGE GATE FAILED — legal cells disappeared:")
+        for c in lost:
+            print(f"  - {c}")
+        return 1
+    print("# coverage gate passed")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("fresh", nargs="?", default="",
@@ -149,10 +190,16 @@ def main(argv=None) -> int:
                     help="print the next BENCH_<n>.json filename and exit")
     ap.add_argument("--root", default=".",
                     help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--coverage", action="store_true",
+                    help="gate the architecture-coverage matrix instead")
+    ap.add_argument("--write-coverage", action="store_true",
+                    help="rewrite the committed coverage baseline")
     args = ap.parse_args(argv)
     if args.next_name:
         print(next_name(args.root))
         return 0
+    if args.coverage or args.write_coverage:
+        return check_coverage(write=args.write_coverage)
     if not args.fresh:
         ap.error("either --next-name or a fresh results file is required")
     return check(args.fresh, args.root)

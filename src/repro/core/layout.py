@@ -157,6 +157,12 @@ class PackedLayout(BatchLayout):
     is exactly 0 either way, and the loss means over ``num_segments`` = B
     regardless.  ``row_quant`` rounds the row count up (fewer distinct
     shapes -> fewer jit recompiles) at the cost of whole padding rows.
+
+    Which mixers accept packed rows is decided by the capability table
+    (``models/capabilities.py``): attention kinds mask on segment
+    equality, ssm/rec zero their state at segment starts, xattn refuses.
+    ``NATTrainerConfig(layout="packed")`` on an unsupported config raises
+    ``CapabilityError`` at construction (``capabilities.check_packed``).
     """
 
     row_quant: int = 1

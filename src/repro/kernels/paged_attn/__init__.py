@@ -1,9 +1,16 @@
-from repro.kernels.paged_attn.kernel import paged_decode_pallas
-from repro.kernels.paged_attn.ops import paged_attention
-from repro.kernels.paged_attn.ref import paged_attention_ref
+from repro.kernels.paged_attn.kernel import (
+    paged_decode_pallas, paged_mla_decode_pallas,
+)
+from repro.kernels.paged_attn.ops import paged_attention, paged_mla_attention
+from repro.kernels.paged_attn.ref import (
+    paged_attention_ref, paged_mla_attention_ref,
+)
 
 __all__ = [
     "paged_attention",
     "paged_attention_ref",
     "paged_decode_pallas",
+    "paged_mla_attention",
+    "paged_mla_attention_ref",
+    "paged_mla_decode_pallas",
 ]

@@ -75,6 +75,104 @@ def _kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
                                 0.0).astype(o_ref.dtype)
 
 
+def _mla_kernel(bt_ref, qpos_ref, qa_ref, qr_ref, c_ref, kr_ref, pos_ref,
+                o_ref, m_sc, l_sc, acc_sc, *, nm, scale):
+    s = pl.program_id(0)
+    mi = pl.program_id(1)
+
+    @pl.when(mi == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    qp = qpos_ref[s]
+
+    @pl.when((bt_ref[s, mi] >= 0) & (qp >= 0))
+    def _compute():
+        qa = qa_ref[0].astype(F32)           # (H, R) absorbed queries
+        qr = qr_ref[0].astype(F32)           # (H, Dr) rotary queries
+        c = c_ref[0].astype(F32)             # (page_len, R) latents
+        kr = kr_ref[0].astype(F32)           # (page_len, Dr)
+        pos = pos_ref[0]                     # (page_len,)
+        sc = (jax.lax.dot_general(qa, c, (((1,), (1,)), ((), ())),
+                                  precision=jax.lax.Precision.HIGHEST)
+              + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                    precision=jax.lax.Precision.HIGHEST)
+              ) * scale
+        valid = (pos >= 0) & (pos <= qp)     # (page_len,)
+        sc = jnp.where(valid[None, :], sc, NEG)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(sc - m_new[:, None])
+        p = jnp.where(valid[None, :], p, 0.0)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=-1)
+        # the "value" IS the latent page: output stays in latent rank R
+        acc_sc[...] = acc_sc[...] * corr[:, None] + jax.lax.dot(
+            p, c, precision=jax.lax.Precision.HIGHEST)
+        m_sc[...] = m_new
+
+    @pl.when(mi == nm - 1)
+    def _fin():
+        l = l_sc[...]
+        ok = l > 0
+        lsafe = jnp.where(ok, l, 1.0)
+        o_ref[0] = jnp.where(ok[:, None], acc_sc[...] / lsafe[:, None],
+                             0.0).astype(o_ref.dtype)
+
+
+def paged_mla_decode_pallas(q_abs, q_rope, c_pages, kr_pages, pos_pages,
+                            block_tables, q_pos, *, scale: float,
+                            interpret: bool = True):
+    """Paged decode attention over compressed MLA latents (absorbed form).
+
+    q_abs: (S, H, R) absorbed queries (q_nope @ W_uk); q_rope: (S, H, Dr);
+    c_pages: (P, page_len, R); kr_pages: (P, page_len, Dr); pos_pages:
+    (P, page_len) int32; block_tables: (S, M) int32 (-1 = unallocated);
+    q_pos: (S,) int32 (-1 = inactive slot); ``scale`` is the caller's
+    1/sqrt(qk_nope + qk_rope) (NOT derivable from R).  Grid (S, M): the
+    latent is MQA-shaped — one shared "kv head" — so each grid step scores
+    all H heads against one latent page; the softmax output contracts
+    against the SAME page (out rank R, W_uv applied by the caller).
+    Returns out (S, H, R)."""
+    s, h, r = q_abs.shape
+    dr = q_rope.shape[-1]
+    p, page_len = pos_pages.shape
+    m = block_tables.shape[1]
+    kern = functools.partial(_mla_kernel, nm=m, scale=scale)
+
+    def page_idx(s_, mi, bt, qp):
+        return (jnp.maximum(bt[s_, mi], 0), 0, 0)
+
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(s, m),
+            in_specs=[
+                pl.BlockSpec((1, h, r), lambda s_, mi, bt, qp: (s_, 0, 0)),
+                pl.BlockSpec((1, h, dr), lambda s_, mi, bt, qp: (s_, 0, 0)),
+                pl.BlockSpec((1, page_len, r), page_idx),
+                pl.BlockSpec((1, page_len, dr), page_idx),
+                pl.BlockSpec((1, page_len),
+                             lambda s_, mi, bt, qp:
+                             (jnp.maximum(bt[s_, mi], 0), 0)),
+            ],
+            out_specs=pl.BlockSpec((1, h, r),
+                                   lambda s_, mi, bt, qp: (s_, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((h,), F32),
+                pltpu.VMEM((h,), F32),
+                pltpu.VMEM((h, r), F32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((s, h, r), q_abs.dtype),
+        interpret=interpret,
+    )(block_tables, q_pos, q_abs, q_rope, c_pages, kr_pages, pos_pages)
+    return out
+
+
 def paged_decode_pallas(q, k_pages, v_pages, pos_pages, block_tables, q_pos,
                         *, interpret: bool = True):
     """q: (S, KV, G, D); k_pages/v_pages: (P, page_len, KV, D); pos_pages:

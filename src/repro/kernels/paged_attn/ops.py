@@ -26,3 +26,16 @@ def paged_attention(q, k_pages, v_pages, pos_pages, block_tables, q_pos,
         q.reshape(s, kvh, g, d), k_pages, v_pages, pos_pages, block_tables,
         q_pos, interpret=interpret)
     return o.reshape(s, h, d)
+
+
+def paged_mla_attention(q_abs, q_rope, c_pages, kr_pages, pos_pages,
+                        block_tables, q_pos, *, scale: float,
+                        interpret: bool = True):
+    """MLA variant: the latent pool is MQA-shaped (no kv-head axis, no GQA
+    regrouping) and the value operand IS the latent page, so the kernel's
+    output stays in latent rank R — the caller applies W_uv / W_o.
+    q_abs: (S, H, R); q_rope: (S, H, Dr); c_pages: (P, page_len, R);
+    kr_pages: (P, page_len, Dr).  Returns out (S, H, R)."""
+    return K.paged_mla_decode_pallas(
+        q_abs, q_rope, c_pages, kr_pages, pos_pages, block_tables, q_pos,
+        scale=scale, interpret=interpret)

@@ -53,3 +53,35 @@ def paged_attention_ref(q, k_pages, v_pages, pos_pages, block_tables, q_pos):
     o = o / jnp.maximum(l, 1e-30)[..., None]
     o = jnp.where((l > 0)[..., None], o, 0.0)
     return o.astype(q.dtype)
+
+
+def paged_mla_attention_ref(q_abs, q_rope, c_pages, kr_pages, pos_pages,
+                            block_tables, q_pos, *, scale):
+    """MLA oracle: q_abs (S, H, R) absorbed queries, q_rope (S, H, Dr);
+    c_pages (P, page_len, R) latents, kr_pages (P, page_len, Dr); same
+    block-table / ``pos`` visibility rules as ``paged_attention_ref``; the
+    value operand is the latent page itself.  Returns out (S, H, R)."""
+    s, h, r = q_abs.shape
+    bt = jnp.maximum(block_tables, 0)
+    cg = c_pages[bt]                      # (S, M, pl, R)
+    krg = kr_pages[bt]
+    posg = jnp.where(block_tables[..., None] >= 0, pos_pages[bt], -1)
+    m, pl = bt.shape[1], pos_pages.shape[1]
+    cg = cg.reshape(s, m * pl, r)
+    krg = krg.reshape(s, m * pl, krg.shape[-1])
+    posg = posg.reshape(s, m * pl)
+
+    sc = (jnp.einsum("shr,slr->shl", q_abs.astype(F32), cg.astype(F32))
+          + jnp.einsum("shk,slk->shl", q_rope.astype(F32),
+                       krg.astype(F32))) * scale
+    valid = (posg >= 0) & (posg <= q_pos[:, None]) & (q_pos[:, None] >= 0)
+    sc = jnp.where(valid[:, None, :], sc, -jnp.inf)
+    mx = jnp.max(sc, axis=-1)
+    mx_safe = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    pr = jnp.exp(sc - mx_safe[..., None])
+    pr = jnp.where(valid[:, None, :], pr, 0.0)
+    l = jnp.sum(pr, axis=-1)
+    o = jnp.einsum("shl,slr->shr", pr, cg.astype(F32))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    o = jnp.where((l > 0)[..., None], o, 0.0)
+    return o.astype(q_abs.dtype)

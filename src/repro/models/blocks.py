@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn
+from repro.models import capabilities as caps
 from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
 from repro.models import rglru as rg_mod
@@ -74,18 +75,16 @@ def block_apply(
 ):
     """Full-sequence application.  Returns (x, cache_entry_or_None, aux).
 
-    ``segment_ids`` (B, T) selects the packed batch layout: attention mixers
-    confine visibility to same-segment tokens.  Mixers whose state flows
-    along the row (ssm/rec) and cross-attention would leak across packed
-    neighbors, so they reject the packed layout.
+    ``segment_ids`` (B, T) selects the packed batch layout.  Isolation per
+    mixer kind follows the capability table (models/capabilities.py):
+    attention kinds mask visibility on segment equality; ssm/rec zero their
+    recurrent state and conv taps at segment starts; cross-attention rejects
+    packing (its image K-V is shared across the whole row).
     """
     mixer = cfg.mixer_of(kind)
     mlp = cfg.mlp_of(kind)
-    if segment_ids is not None and mixer in ("ssm", "rec", "xattn"):
-        raise NotImplementedError(
-            f"packed layout (segment_ids) is not supported for {mixer!r} "
-            "mixers: recurrent state / image K-V would cross segment "
-            "boundaries; use the padded or bucketed layout")
+    if segment_ids is not None:
+        caps.require_packed_mixer(mixer)
     aux = jnp.zeros((), jnp.float32)
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
     cache_entry = None
@@ -109,11 +108,13 @@ def block_apply(
             cache_entry = {"c_kv": c_kv, "k_rope": k_rope}
     elif mixer == "ssm":
         out, st = ssm_mod.ssm_apply(p["mixer"], h, cfg.ssm, lengths=lengths,
-                                    return_state=collect_cache)
+                                    return_state=collect_cache,
+                                    segment_ids=segment_ids)
         cache_entry = st
     elif mixer == "rec":
         out, st = rg_mod.rglru_apply(p["mixer"], h, cfg.rglru, lengths=lengths,
-                                     return_state=collect_cache)
+                                     return_state=collect_cache,
+                                     segment_ids=segment_ids)
         cache_entry = st
     else:
         raise ValueError(mixer)
@@ -149,10 +150,11 @@ def block_decode(
     """One-token decode.  x: (B, 1, D).  Returns (x, new_cache).
 
     ``paged`` (arrays: ``block_tables`` (S, M), ``write_page`` /
-    ``write_off`` (S,)) switches global-attention layers to the paged KV
-    pool (``attn.paged_decode_attention``); other mixers keep their
-    per-slot state — local rings are already window-bounded and ssm/rec
-    states are O(1), so only the O(T) global KV is worth paging.
+    ``write_off`` (S,)) switches pool-resident mixers (capability table:
+    ``shared_prefix_ok``) to the paged pool — global attention pages full
+    KV, MLA pages its compressed latents; other mixers keep their per-slot
+    state — local rings are already window-bounded and ssm/rec states are
+    O(1), so only O(T) per-token state is worth paging.
     """
     mixer = cfg.mixer_of(kind)
     mlp = cfg.mlp_of(kind)
@@ -162,6 +164,11 @@ def block_decode(
             p["mixer"], h, cache, pos, paged["block_tables"],
             paged["write_page"], paged["write_off"],
             rope_theta=cfg.rope_theta, impl=attn_impl)
+    elif mixer == "mla" and paged is not None:
+        out, new_cache = mla_mod.mla_paged_decode(
+            p["mixer"], h, cache, pos, paged["block_tables"],
+            paged["write_page"], paged["write_off"], cfg.mla,
+            norm_eps=cfg.norm_eps, impl=attn_impl)
     elif mixer in ("attn", "local"):
         out, new_cache = attn.decode_attention(
             p["mixer"], h, cache, pos, window=_window_of(cfg, mixer),
@@ -194,10 +201,10 @@ def block_cache_decl(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
                      paged: Optional[tuple] = None):
     """Abstract decode-cache entry for one layer of this kind (or None).
 
-    ``paged = (num_pages, page_len)`` declares global-attention layers as
-    shared KV pools instead of per-slot rows; every other mixer keeps its
-    per-slot layout (see ``block_decode``).  MLA latents are not paged
-    yet — the paged engine rejects MLA configs up front.
+    ``paged = (num_pages, page_len)`` declares pool-resident layers
+    (capability table: attn full KV, MLA compressed latents) as shared
+    pools instead of per-slot rows; every other mixer keeps its per-slot
+    layout (see ``block_decode``).
     """
     mixer = cfg.mixer_of(kind)
     if mixer == "attn":
@@ -215,6 +222,9 @@ def block_cache_decl(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
         return {"ik": sds((batch, n, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
                 "iv": sds((batch, n, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)}
     if mixer == "mla":
+        if paged is not None:
+            num_pages, page_len = paged
+            return mla_mod.mla_paged_cache_decl(num_pages, page_len, cfg.mla)
         return mla_mod.mla_cache_decl(batch, cache_len, cfg.mla)
     if mixer == "ssm":
         return ssm_mod.ssm_cache_decl(batch, cfg.d_model, cfg.ssm)

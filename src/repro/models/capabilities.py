@@ -1,0 +1,253 @@
+"""Per-mixer capability table: which batch layouts and rollout engines each
+mixer kind legally supports, and how it isolates packed segments.
+
+Before this table existed, "which config runs which fast path" lived in
+scattered ``raise`` guards (``models/blocks.py``, ``rl/engine.py``,
+``models/model.py``) and silent fallbacks (``rl/async_trainer.py`` would
+happily run a packed-capable config on the padded grid).  Every consumer now
+asks one table, every rejection names its row, and
+``tests/test_config_matrix.py`` sweeps configs x layouts x engines to pin
+that each config exercises the fastest path its rows permit (DESIGN.md §9).
+
+Row semantics:
+
+* ``packed_ok``       — the mixer can run ``PackedLayout`` rows: per-token
+  outputs depend only on same-segment tokens.  Attention kinds mask on
+  segment equality (bitwise vs the padded grid); recurrent kinds zero their
+  state at segment starts (exact in math, ULP-level reassociation vs the
+  padded grid — see ``state_reset``).
+* ``paged_ok``        — the mixer runs under ``PagedRolloutEngine``: either
+  pool-resident (per-token KV pages named by block tables) or per-slot
+  (O(1)/window-bounded state widened to the slot axis).
+* ``shared_prefix_ok``— per-token state lives in the shared page pool, so a
+  group's prompt pages can be refcount-shared across siblings and parked
+  siblings can resume on freed slots.  Per-slot-state mixers place groups
+  atomically instead.
+* ``state_reset``     — packed-segment isolation mechanism: ``"mask"``
+  (stateless across tokens; visibility masked on segment equality),
+  ``"zero"`` (recurrent state + conv taps zeroed at segment boundaries), or
+  ``"unsupported"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.models.config import ModelConfig
+
+
+class CapabilityError(ValueError):
+    """A config asked for a layout/engine its capability row forbids."""
+
+
+@dataclasses.dataclass(frozen=True)
+class MixerCapability:
+    kind: str
+    packed_ok: bool
+    paged_ok: bool
+    shared_prefix_ok: bool
+    state_reset: str          # "mask" | "zero" | "unsupported"
+    notes: str
+
+
+CAPABILITIES = {
+    "attn": MixerCapability(
+        "attn", packed_ok=True, paged_ok=True, shared_prefix_ok=True,
+        state_reset="mask",
+        notes="global KV pages in the shared pool; bitwise packed parity"),
+    "local": MixerCapability(
+        "local", packed_ok=True, paged_ok=True, shared_prefix_ok=False,
+        state_reset="mask",
+        notes="window ring stays per-slot (already O(window)); packed mask "
+              "windows on ORIGINAL positions"),
+    "mla": MixerCapability(
+        "mla", packed_ok=True, paged_ok=True, shared_prefix_ok=True,
+        state_reset="mask",
+        notes="compressed latent (c_kv, k_rope) pages in the shared pool "
+              "(smaller page stride than full KV)"),
+    "ssm": MixerCapability(
+        "ssm", packed_ok=True, paged_ok=True, shared_prefix_ok=False,
+        state_reset="zero",
+        notes="SSD state + conv taps zeroed at segment starts; per-slot "
+              "O(1) state in the paged engine"),
+    "rec": MixerCapability(
+        "rec", packed_ok=True, paged_ok=True, shared_prefix_ok=False,
+        state_reset="zero",
+        notes="RG-LRU a_t=0 at segment starts (+ conv tap masking); "
+              "per-slot O(1) state in the paged engine"),
+    "xattn": MixerCapability(
+        "xattn", packed_ok=False, paged_ok=False, shared_prefix_ok=False,
+        state_reset="unsupported",
+        notes="image K/V is shared across ALL tokens of a row; packing "
+              "would cross-attend packed neighbors to the wrong image, and "
+              "no rollout engine provides image embeddings"),
+}
+
+_LAYOUT_ORDER = ("packed", "bucketed", "padded")       # fastest first
+_ENGINE_ORDER = ("paged", "continuous", "legacy")      # fastest first
+
+
+def capability(kind: str) -> MixerCapability:
+    try:
+        return CAPABILITIES[kind]
+    except KeyError as e:
+        raise CapabilityError(
+            f"unknown mixer kind {kind!r}; capability table rows: "
+            f"{sorted(CAPABILITIES)}") from e
+
+
+def describe_row(kind: str) -> str:
+    c = capability(kind)
+    return (f"capability row {kind!r}: packed_ok={c.packed_ok} "
+            f"paged_ok={c.paged_ok} shared_prefix_ok={c.shared_prefix_ok} "
+            f"state_reset={c.state_reset!r} ({c.notes})")
+
+
+def require_packed_mixer(kind: str) -> None:
+    """Raise unless this mixer kind supports packed (segment-id) rows."""
+    if not capability(kind).packed_ok:
+        raise CapabilityError(
+            f"packed layout (segment_ids) is not supported for {kind!r} "
+            f"mixers — {describe_row(kind)}")
+
+
+def config_mixers(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Ordered unique mixer kinds a config's block patterns use."""
+    seen: list = []
+    for pattern, _repeat in cfg.blocks:
+        for kind in pattern:
+            m = cfg.mixer_of(kind)
+            if m not in seen:
+                seen.append(m)
+    return tuple(seen)
+
+
+def _packed_blocker(cfg: ModelConfig) -> Optional[str]:
+    if cfg.num_codebooks:
+        return (f"num_codebooks={cfg.num_codebooks}: packed logp parity is "
+                "only defined for single-plane token grids")
+    for m in config_mixers(cfg):
+        if not capability(m).packed_ok:
+            return describe_row(m)
+    return None
+
+
+def _paged_blocker(cfg: ModelConfig) -> Optional[str]:
+    if cfg.num_codebooks:
+        return (f"num_codebooks={cfg.num_codebooks}: the slot arena serves "
+                "single-plane token streams")
+    for m in config_mixers(cfg):
+        if not capability(m).paged_ok:
+            return describe_row(m)
+    return None
+
+
+def check_packed(cfg: ModelConfig) -> None:
+    """Config-time gate for ``layout='packed'`` — raises at construction,
+    not deep inside the learner's first jitted step."""
+    why = _packed_blocker(cfg)
+    if why is not None:
+        raise CapabilityError(f"layout 'packed' is illegal for this config "
+                              f"— {why}")
+
+
+def check_paged(cfg: ModelConfig) -> None:
+    """Config-time gate for ``PagedRolloutEngine``."""
+    why = _paged_blocker(cfg)
+    if why is not None:
+        raise CapabilityError(f"the paged rollout engine is illegal for "
+                              f"this config — {why}")
+
+
+def check_engine(cfg: ModelConfig, engine: str) -> None:
+    """Config-time gate for any rollout engine by name."""
+    why = _engine_blocker(cfg, engine)
+    if why is not None:
+        raise CapabilityError(f"rollout engine {engine!r} is illegal for "
+                              f"this config — {why}")
+
+
+def pool_resident(kind: str) -> bool:
+    """True when this mixer's per-token state lives in the shared page pool
+    (so group prefix pages can be refcount-shared / parked siblings can
+    resume on freed slots)."""
+    return capability(kind).shared_prefix_ok
+
+
+def pure_pool_prefix(cfg: ModelConfig) -> bool:
+    """All mixers pool-resident -> groups need not be placed atomically."""
+    return all(pool_resident(m) for m in config_mixers(cfg))
+
+
+def _engine_blocker(cfg: ModelConfig, engine: str) -> Optional[str]:
+    if engine == "legacy":
+        if any(m == "xattn" for m in config_mixers(cfg)):
+            return ("no rollout path provides image embeddings — "
+                    + describe_row("xattn"))
+        return None
+    if engine == "continuous":
+        if cfg.num_codebooks:
+            return (f"num_codebooks={cfg.num_codebooks}: the slot arena "
+                    "serves single-plane token streams")
+        if any(m == "xattn" for m in config_mixers(cfg)):
+            return ("no rollout path provides image embeddings — "
+                    + describe_row("xattn"))
+        return None
+    if engine == "paged":
+        if any(m == "xattn" for m in config_mixers(cfg)):
+            return ("no rollout path provides image embeddings — "
+                    + describe_row("xattn"))
+        return _paged_blocker(cfg)
+    raise CapabilityError(f"unknown engine {engine!r}; expected one of "
+                          f"{_ENGINE_ORDER}")
+
+
+def legal_layouts(cfg: ModelConfig) -> Tuple[str, ...]:
+    return tuple(n for n in _LAYOUT_ORDER
+                 if n != "packed" or _packed_blocker(cfg) is None)
+
+
+def legal_engines(cfg: ModelConfig) -> Tuple[str, ...]:
+    return tuple(n for n in _ENGINE_ORDER
+                 if _engine_blocker(cfg, n) is None)
+
+
+def fastest_layout(cfg: ModelConfig) -> str:
+    return legal_layouts(cfg)[0]
+
+
+def fastest_engine(cfg: ModelConfig) -> Optional[str]:
+    """Fastest legal rollout engine, or None when no engine serves the
+    config (vision: nothing feeds image embeddings to a rollout)."""
+    legal = legal_engines(cfg)
+    return legal[0] if legal else None
+
+
+def coverage_cells(archs=None):
+    """All legal (config, layout, engine) cells plus each config's fastest
+    pair — the coverage surface ``tests/test_config_matrix.py`` exercises
+    and ``benchmarks/check_gates.py`` gates (the count may never shrink)."""
+    from repro.configs import ALL_ARCHS, get_config
+
+    cells = []
+    for arch in (archs if archs is not None else ALL_ARCHS):
+        cfg = get_config(arch)
+        for layout in legal_layouts(cfg):
+            for engine in legal_engines(cfg) or (None,):
+                cells.append((arch, layout, engine))
+    return cells
+
+
+def render_matrix(archs=None) -> str:
+    """Markdown matrix of config -> (mixers, fastest layout, fastest
+    engine) — the rendered table DESIGN.md §9 embeds."""
+    from repro.configs import ALL_ARCHS, get_config
+
+    rows = ["| config | mixers | fastest layout | fastest engine |",
+            "|---|---|---|---|"]
+    for arch in (archs if archs is not None else ALL_ARCHS):
+        cfg = get_config(arch)
+        rows.append(
+            f"| {arch} | {'+'.join(config_mixers(cfg))} "
+            f"| {fastest_layout(cfg)} | {fastest_engine(cfg) or '—'} |")
+    return "\n".join(rows)

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.config import MLAConfig
 from repro.models.layers import apply_rope, rmsnorm, rmsnorm_decl
@@ -156,6 +157,121 @@ def mla_cache_axes():
         "k_rope": ("batch", "kv_seq", "head_dim"),
         "pos": ("batch", "kv_seq"),
     }
+
+
+def mla_paged_cache_decl(num_pages: int, page_len: int, m: MLAConfig,
+                         dtype=jnp.bfloat16):
+    """Abstract paged latent pool for one MLA layer.
+
+    Same shared-pool convention as ``attention.paged_attn_cache_decl`` —
+    no batch axis, per-slot structure lives in the engine's block tables,
+    ``pos`` is per-entry absolute position with ``-1`` = empty — but the
+    per-token payload is the compressed latent (rank R + the shared rotary
+    key), so the page stride is R + Dr instead of 2 * KV * D."""
+    return {
+        "c_kv": jax.ShapeDtypeStruct((num_pages, page_len, m.kv_lora_rank),
+                                     dtype),
+        "k_rope": jax.ShapeDtypeStruct((num_pages, page_len, m.qk_rope_dim),
+                                       dtype),
+        "pos": jax.ShapeDtypeStruct((num_pages, page_len), jnp.int32),
+    }
+
+
+def mla_paged_cache_axes():
+    return {
+        "c_kv": ("kv_pages", None, "kv_lora"),
+        "k_rope": ("kv_pages", None, "head_dim"),
+        "pos": ("kv_pages", None),
+    }
+
+
+def mla_paged_cache_update(pool: dict, c_new: Array, kr_new: Array, pos: Array,
+                           write_page: Array, write_off: Array) -> dict:
+    """Write one token's latents per slot into its private decode page
+    (``write_page == num_pages`` is the drop sentinel, as for attention)."""
+    new_c = pool["c_kv"].at[write_page, write_off].set(
+        c_new[:, 0].astype(pool["c_kv"].dtype), mode="drop")
+    new_kr = pool["k_rope"].at[write_page, write_off].set(
+        kr_new[:, 0].astype(pool["k_rope"].dtype), mode="drop")
+    new_pos = pool["pos"].at[write_page, write_off].set(
+        pos[:, 0].astype(jnp.int32), mode="drop")
+    return {"c_kv": new_c, "k_rope": new_kr, "pos": new_pos}
+
+
+def mla_gather_pages(pool: dict, block_tables: Array):
+    """Materialize each slot's logical latent sequence through its block
+    table (jnp reference realization; the Pallas kernel reads pages through
+    the same table without the dense copy)."""
+    s, m_ = block_tables.shape
+    bt = jnp.maximum(block_tables, 0)
+    cg = pool["c_kv"][bt]                    # (S, M, page_len, R)
+    krg = pool["k_rope"][bt]
+    posg = jnp.where(block_tables[..., None] >= 0, pool["pos"][bt], -1)
+    pl_ = posg.shape[-1]
+    return (cg.reshape(s, m_ * pl_, cg.shape[-1]),
+            krg.reshape(s, m_ * pl_, krg.shape[-1]),
+            posg.reshape(s, m_ * pl_))
+
+
+def mla_paged_decode(
+    p,
+    x: Array,
+    pool: dict,
+    pos: Array,
+    block_tables: Array,
+    write_page: Array,
+    write_off: Array,
+    m: MLAConfig,
+    *,
+    norm_eps: float,
+    impl: str = "ref",
+):
+    """One-token absorbed-form decode against the paged latent pool.
+    x: (S, 1, D).  Returns (out (S, 1, D), new_pool).
+
+    Same math as ``mla_decode`` — absorbed query contracts against cached
+    latents, softmax output contracts against the SAME latents — with the
+    page gather in place of the per-slot ring.  ``impl="kernel"`` routes
+    the contraction through the Pallas paged MLA kernel; ``"ref"`` mirrors
+    ``mla_decode``'s exact op sequence (dense-parity numerics), while
+    ``kernels/paged_attn/ref.py`` mirrors the kernel's decomposition as
+    its oracle — the same two-references split as paged attention.
+    """
+    from repro.models.attention import _norm_pos
+
+    b = x.shape[0]
+    q_nope, q_rope = _queries(p, x, m, norm_eps)       # (S, 1, H, *)
+    posb = _norm_pos(pos, b)
+    q_rope = apply_rope(q_rope, posb, 10_000.0)
+    c_new, kr_new = _latents(p, x, m, norm_eps, posb)  # (S, 1, R), (S, 1, Dr)
+
+    new_pool = mla_paged_cache_update(pool, c_new, kr_new, posb,
+                                      write_page, write_off)
+    q_abs = jnp.einsum("bthk,rhk->bthr", q_nope, p["w_uk"])
+    # python float: jit-safe (the kernel takes it as a static operand)
+    scale = 1.0 / float(np.sqrt(m.qk_nope_dim + m.qk_rope_dim))
+
+    if impl == "kernel":
+        from repro.kernels.paged_attn import paged_mla_attention
+
+        o_lat = paged_mla_attention(
+            q_abs[:, 0], q_rope[:, 0], new_pool["c_kv"], new_pool["k_rope"],
+            new_pool["pos"], block_tables, posb[:, 0],
+            scale=scale)[:, None]
+    else:
+        cg, krg, posg = mla_gather_pages(new_pool, block_tables)
+        s = jnp.einsum("bthr,bsr->bhts", q_abs, cg.astype(q_abs.dtype),
+                       preferred_element_type=F32)
+        s += jnp.einsum("bthk,bsk->bhts", q_rope, krg.astype(q_rope.dtype),
+                        preferred_element_type=F32)
+        s *= scale
+        valid = (posg >= 0) & (posg <= posb)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        pa = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhts,bsr->bthr", pa, cg.astype(pa.dtype))
+    o = jnp.einsum("bthr,rhk->bthk", o_lat.astype(x.dtype), p["w_uv"])
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+    return out, new_pool
 
 
 def mla_cache_from_prefill(c_kv: Array, k_rope: Array, s_len: int, prefill_len) -> dict:

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.dist.sharding import ShardingRules, DEFAULT_RULES, shard_constraint
 from repro.models import blocks as B
+from repro.models import capabilities as caps
 from repro.models.config import ModelConfig
 from repro.models.layers import (
     chunked_token_logprobs,
@@ -280,23 +281,22 @@ def paged_prefill(
     mesh=None,
     rules: ShardingRules = DEFAULT_RULES,
 ):
-    """Prompt prefill for the paged engine: raw K/V instead of dense rows.
+    """Prompt prefill for the paged engine: raw per-token state instead of
+    dense rows.
 
-    Same forward as ``prefill``, but global-attention layers come back as
-    raw roped projections ``{"k"/"v": (repeat, B, T, KV, D)}`` — the
-    engine scatters them straight into pool pages, shared by every slot
-    of a GRPO group — while every other mixer is converted to its normal
-    per-slot decode entry (the engine broadcasts those to the group's
-    slots; they are O(window) or O(1), not worth paging).
+    Same forward as ``prefill``, but pool-resident layers (capability
+    table ``shared_prefix_ok``: attn, mla) come back raw — global
+    attention as roped projections ``{"k"/"v": (repeat, B, T, KV, D)}``,
+    MLA as compressed latents ``{"c_kv": (repeat, B, T, R), "k_rope":
+    (repeat, B, T, Dr)}`` — the engine scatters them straight into pool
+    pages, shared by every slot of a GRPO group — while every other mixer
+    is converted to its normal per-slot decode entry (the engine
+    broadcasts those to the group's slots; they are O(window) or O(1),
+    not worth paging).
 
-    Returns (last_logits (B, V), cache_tree).  MLA is not paged yet: its
-    O(T) latent cache would silently stay per-slot, so it is rejected.
+    Returns (last_logits (B, V), cache_tree).
     """
-    for pattern, _ in cfg.blocks:
-        for kind in pattern:
-            if cfg.mixer_of(kind) == "mla":
-                raise NotImplementedError(
-                    "paged_prefill: MLA latent caches are not paged yet")
+    caps.check_paged(cfg)
     bsz, t = tokens.shape[:2]
     if prefill_len is None:
         prefill_len = jnp.full((bsz,), t, jnp.int32)
@@ -309,9 +309,13 @@ def paged_prefill(
         entries = raw[f"group{gi}"]
         out = {}
         for j, kind in enumerate(pattern):
-            if cfg.mixer_of(kind) == "attn":
+            mixer = cfg.mixer_of(kind)
+            if mixer == "attn":
                 out[f"l{j}"] = {"k": entries[f"l{j}"]["k"],
                                 "v": entries[f"l{j}"]["v"]}
+            elif mixer == "mla":
+                out[f"l{j}"] = {"c_kv": entries[f"l{j}"]["c_kv"],
+                                "k_rope": entries[f"l{j}"]["k_rope"]}
             else:
                 conv = partial(B.block_cache_from_prefill, cfg, kind,
                                cache_len=cache_len, prefill_len=prefill_len)
@@ -442,15 +446,15 @@ def invalidate_pages(cfg: ModelConfig, cache: dict, page_mask: Array) -> dict:
     analogue of ``invalidate_cache_rows``: the engine applies it to pages
     returned to the free list (refcount hit zero) before they can be
     reallocated, so a recycled page can never leak its previous
-    occupant's positions as valid entries.  K/V bytes are left in place:
-    an entry with ``pos = -1`` is unreachable.  Non-attention per-slot
-    entries are untouched.
+    occupant's positions as valid entries.  K/V (or latent) bytes are left
+    in place: an entry with ``pos = -1`` is unreachable.  Per-slot entries
+    of non-pool mixers are untouched.
     """
     out = {}
     for gi, (pattern, repeat) in enumerate(cfg.blocks):
         grp = dict(cache[f"group{gi}"])
         for j, kind in enumerate(pattern):
-            if cfg.mixer_of(kind) == "attn":
+            if caps.pool_resident(cfg.mixer_of(kind)):
                 entry = dict(grp[f"l{j}"])
                 # leaves are stacked (repeat, num_pages, page_len)
                 entry["pos"] = jnp.where(page_mask[None, :, None], -1,

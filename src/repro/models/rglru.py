@@ -84,10 +84,19 @@ def _linear_scan(a: Array, b: Array) -> Array:
     return h[:, :t]
 
 
-def _conv1d(x: Array, w: Array, b: Array) -> Array:
+def _conv1d(x: Array, w: Array, b: Array, seg=None) -> Array:
+    """``seg`` (B, T) masks taps that would read across a packed-segment
+    boundary — identical to the zero left-padding a padded-row start sees."""
     k = w.shape[0]
+    t = x.shape[1]
     xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
-    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    if seg is None:
+        out = sum(xp[:, i:i + t] * w[i][None, None, :] for i in range(k))
+    else:
+        sp = jnp.pad(seg, ((0, 0), (k - 1, 0)), constant_values=-2)
+        out = sum(
+            jnp.where((sp[:, i:i + t] == seg)[:, :, None], xp[:, i:i + t], 0)
+            * w[i][None, None, :] for i in range(k))
     return out + b[None, None, :]
 
 
@@ -103,22 +112,34 @@ def _gates(p, xb: Array, cfg: RGLRUConfig):
 
 
 def rglru_apply(p, x: Array, cfg: RGLRUConfig, *, lengths=None,
-                return_state: bool = False):
+                return_state: bool = False, segment_ids=None):
     """Full-sequence recurrent block.  x: (B, T, D).
 
     ``lengths`` (B,) marks valid prefixes: padded positions become identity
     transitions (a=1, input 0) so the final recurrent state equals the state
-    at position lengths-1."""
+    at position lengths-1.
+
+    ``segment_ids`` (B, T) activates packed-segment state resets
+    (capability table ``state_reset='zero'``): conv taps never read across
+    a boundary, and a_t = 0 at every segment start, so h_start = b_start —
+    exactly the padded-row recurrence from a zero state.  (Exact, not
+    bitwise: the two-level scan reassociates f32 sums at packed offsets —
+    DESIGN.md §9.)"""
     t = x.shape[1]
     gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["w_gate"]).astype(F32))
     xb_raw = jnp.einsum("btd,dw->btw", x, p["w_x"])
-    xb = _conv1d(xb_raw, p["conv_w"], p["conv_b"])
+    xb = _conv1d(xb_raw, p["conv_w"], p["conv_b"], segment_ids)
     a, scale_in = _gates(p, xb, cfg)
     bterm = scale_in * xb.astype(F32)
     if lengths is not None:
         valid = (jnp.arange(t)[None, :] < lengths[:, None])[:, :, None]
         a = jnp.where(valid, a, 1.0)
         bterm = jnp.where(valid, bterm, 0.0)
+    if segment_ids is not None:
+        start = jnp.concatenate(
+            [jnp.ones_like(segment_ids[:, :1], bool),
+             segment_ids[:, 1:] != segment_ids[:, :-1]], axis=1)
+        a = jnp.where(start[:, :, None], 0.0, a)
 
     h = _linear_scan(a, bterm)
     y = (h * gate).astype(x.dtype)

@@ -62,21 +62,33 @@ def _gated_norm(w: Array, x: Array, z: Array, eps: float = 1e-6) -> Array:
 
 
 def ssm_apply(p, x: Array, cfg: SSMConfig, *, lengths=None,
-              return_state: bool = False):
+              return_state: bool = False, segment_ids=None):
     """Full-sequence SSD.  x: (B, T, D) -> (B, T, D).
 
     ``lengths`` (B,) marks valid prefixes: padded positions become identity
     transitions (decay 1, zero input) so the final state equals the state at
     position lengths-1 — required for variable-length prefill and for the
     internal pad-to-chunk-multiple.
+
+    ``segment_ids`` (B, T) activates packed-segment state resets
+    (capability table ``state_reset='zero'``): the conv taps, intra-chunk
+    decay, inter-chunk carry, and carried-state readout are all masked to
+    same-segment pairs, so every token's output depends only on its own
+    segment — exactly the math of scoring each segment from a zero state.
+    (Exact, not bitwise: chunk boundaries fall at different offsets than in
+    the padded grid, so f32 cumsums reassociate — see DESIGN.md §9.)
     """
     bsz, t_orig, d_model = x.shape
     q = min(cfg.chunk, t_orig)
+    seg = None if segment_ids is None else segment_ids.astype(jnp.int32)
     if t_orig % q:
         pad = q - t_orig % q
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
         if lengths is None:
             lengths = jnp.full((bsz,), t_orig, jnp.int32)
+        if seg is not None:
+            # tail gets its own segment id: never interacts with real tokens
+            seg = jnp.pad(seg, ((0, 0), (0, pad)), constant_values=-1)
     bsz, t, d_model = x.shape
     nc = t // q
     zxbcdt = jnp.einsum("btd,de->bte", x, p["w_in"])
@@ -86,7 +98,7 @@ def ssm_apply(p, x: Array, cfg: SSMConfig, *, lengths=None,
 
     # causal depthwise conv over [x, B, C]
     conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
-    conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], seg)
     xin, bmat, cmat = jnp.split(conv, [d_inner, d_inner + cfg.n_groups * cfg.state_dim],
                                 axis=-1)
 
@@ -108,6 +120,16 @@ def ssm_apply(p, x: Array, cfg: SSMConfig, *, lengths=None,
     dac = da.reshape(bsz, nc, q, h)
     cum = jnp.cumsum(dac, axis=2)                                   # within-chunk
     seg_total = cum[:, :, -1]                                       # (B, nc, H)
+    if seg is not None:
+        seg_q = seg.reshape(bsz, nc, q)
+        seg_first = seg_q[:, :, :1]                                 # (B, nc, 1)
+        seg_last = seg_q[:, :, -1:]
+        # chunk flags: does a packed-segment boundary cross this chunk, and
+        # does the carry entering it belong to a different segment?
+        broken = seg_first[:, :, 0] != seg_last[:, :, 0]            # (B, nc)
+        reset = (jnp.concatenate([seg_first[:, :1, 0],
+                                  seg_last[:, :-1, 0]], axis=1)
+                 != seg_first[:, :, 0])                             # (B, nc)
 
     bq = bh.reshape(bsz, nc, q, h, n).astype(F32)
     cq = ch.reshape(bsz, nc, q, h, n).astype(F32)
@@ -118,6 +140,9 @@ def ssm_apply(p, x: Array, cfg: SSMConfig, *, lengths=None,
     li = cum[:, :, :, None, :] - cum[:, :, None, :, :]              # (B,nc,q,q,H)
     mask = jnp.tril(jnp.ones((q, q), bool))
     decay = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    if seg is not None:
+        same = seg_q[:, :, :, None] == seg_q[:, :, None, :]         # (B,nc,q,q)
+        decay = jnp.where(same[..., None], decay, 0.0)
     cb = jnp.einsum("bnihs,bnjhs->bnijh", cq, bq)                   # (B,nc,q,q,H)
     att = cb * decay * dtq[:, :, None, :, :]                        # weight by dt_j
     y_intra = jnp.einsum("bnijh,bnjhp->bnihp", att, xq)
@@ -125,20 +150,46 @@ def ssm_apply(p, x: Array, cfg: SSMConfig, *, lengths=None,
     # inter-chunk: states carried by a scan
     # chunk state contribution: S_n = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
     w_state = jnp.exp(seg_total[:, :, None, :] - cum) * dtq         # (B,nc,q,H)
+    if seg is not None:
+        # only the chunk's suffix run (same segment as its last token) may
+        # feed the carried state
+        w_state = w_state * (seg_q == seg_last)[..., None]
     bx = jnp.einsum("bnjh,bnjhs,bnjhp->bnhps", w_state, bq, xq)     # (B,nc,H,P,N)
 
-    def scan_fn(state, inp):
-        bx_n, seg_n = inp                                           # (B,H,P,N), (B,H)
-        new = state * jnp.exp(seg_n)[:, :, None, None] + bx_n
-        return new, state                                           # emit PREVIOUS
-
     init = jnp.zeros((bsz, h, pdim, n), F32)
-    final_state, prev_states = jax.lax.scan(
-        scan_fn, init, (jnp.moveaxis(bx, 1, 0), jnp.moveaxis(seg_total, 1, 0)))
+    if seg is None:
+
+        def scan_fn(state, inp):
+            bx_n, seg_n = inp                                       # (B,H,P,N),(B,H)
+            new = state * jnp.exp(seg_n)[:, :, None, None] + bx_n
+            return new, state                                       # emit PREVIOUS
+
+        final_state, prev_states = jax.lax.scan(
+            scan_fn, init,
+            (jnp.moveaxis(bx, 1, 0), jnp.moveaxis(seg_total, 1, 0)))
+    else:
+
+        def scan_fn(state, inp):
+            bx_n, seg_n, reset_n, broken_n = inp
+            # carry from a different segment never enters; a chunk whose
+            # suffix run started inside it emits only its own bx
+            state_in = jnp.where(reset_n[:, None, None, None], 0.0, state)
+            new = jnp.where(broken_n[:, None, None, None], bx_n,
+                            state_in * jnp.exp(seg_n)[:, :, None, None] + bx_n)
+            return new, state_in                                    # emit PREVIOUS
+
+        final_state, prev_states = jax.lax.scan(
+            scan_fn, init,
+            (jnp.moveaxis(bx, 1, 0), jnp.moveaxis(seg_total, 1, 0),
+             jnp.moveaxis(reset, 1, 0), jnp.moveaxis(broken, 1, 0)))
     prev_states = jnp.moveaxis(prev_states, 0, 1)                   # (B,nc,H,P,N)
 
     # contribution of carried state to each position: C_i exp(cum_i) S_prev
     y_inter = jnp.einsum("bnihs,bnhps,bnih->bnihp", cq, prev_states, jnp.exp(cum))
+    if seg is not None:
+        # the carry only reaches the chunk's prefix run (same segment as
+        # its first token)
+        y_inter = y_inter * (seg_q == seg_first)[..., None, None]
     y = (y_intra + y_inter).reshape(bsz, t, h, pdim)
     y = y + xh.astype(F32) * p["d_skip"][None, None, :, None]
     y = y.reshape(bsz, t, d_inner)
@@ -150,11 +201,22 @@ def ssm_apply(p, x: Array, cfg: SSMConfig, *, lengths=None,
     return out, None
 
 
-def _causal_conv(x: Array, w: Array, b: Array) -> Array:
-    """Depthwise causal conv, width K.  x: (B, T, C), w: (K, C)."""
+def _causal_conv(x: Array, w: Array, b: Array, seg=None) -> Array:
+    """Depthwise causal conv, width K.  x: (B, T, C), w: (K, C).
+
+    ``seg`` (B, T) masks taps that would read across a packed-segment
+    boundary — bitwise-identical to the zero left-padding each segment sees
+    at the start of a padded row."""
     k = w.shape[0]
+    t = x.shape[1]
     xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
-    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    if seg is None:
+        out = sum(xp[:, i:i + t] * w[i][None, None, :] for i in range(k))
+    else:
+        sp = jnp.pad(seg, ((0, 0), (k - 1, 0)), constant_values=-2)
+        out = sum(
+            jnp.where((sp[:, i:i + t] == seg)[:, :, None], xp[:, i:i + t], 0)
+            * w[i][None, None, :] for i in range(k))
     return jax.nn.silu((out + b[None, None, :]).astype(F32)).astype(x.dtype)
 
 

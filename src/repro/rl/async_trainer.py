@@ -51,6 +51,7 @@ from repro.core.grpo import GRPOConfig, group_advantages
 from repro.core.layout import make_layout
 from repro.core.repack import bucket_ladder
 from repro.core.selectors import EntropySelector, make_selector
+from repro.models import capabilities as caps
 # NOTE: repro.data sits ABOVE repro.rl in the layering (data imports
 # rl.env), so importing it at module scope would be circular whenever
 # repro.data.pipeline is the entry point.  Import lazily at use sites.
@@ -259,9 +260,12 @@ class AsyncNATGRPOTrainer:
             # which the slot arena does not serve yet
             self.engine = None
         self.step_count = 0
-        self.layout = make_layout(
-            tcfg.layout or ("bucketed" if tcfg.repack else "padded"),
-            **dict(tcfg.layout_kwargs))
+        layout_name = tcfg.layout or ("bucketed" if tcfg.repack else "padded")
+        if layout_name == "packed":
+            # fail at config time, naming the capability-table row, rather
+            # than silently falling back or erroring steps later in-jit
+            caps.check_packed(model_cfg)
+        self.layout = make_layout(layout_name, **dict(tcfg.layout_kwargs))
         self._train_step = jax.jit(make_train_step(
             model_cfg, tcfg.grpo, tcfg.adamw, mesh=mesh, rules=rules,
             vocab_chunks=1, packed=self.layout.packed))

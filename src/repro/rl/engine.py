@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import capabilities as caps
 from repro.models.config import ModelConfig
 from repro.models.model import (
     cache_decl,
@@ -179,6 +180,7 @@ class ContinuousRolloutEngine:
     def __init__(self, cfg: ModelConfig, rcfg, ecfg: EngineConfig):
         if cfg.num_codebooks:
             raise NotImplementedError("engine serves text LMs (no codebooks)")
+        caps.check_engine(cfg, "continuous")
         if ecfg.lanes > ecfg.num_slots:
             raise ValueError("refill_lanes cannot exceed num_slots")
         self.cfg = cfg
@@ -687,25 +689,21 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
     """
 
     def __init__(self, cfg: ModelConfig, rcfg, ecfg: PagedEngineConfig):
-        for pattern, _ in cfg.blocks:
-            for kind in pattern:
-                if cfg.mixer_of(kind) == "mla":
-                    raise NotImplementedError(
-                        "paged engine: MLA latent caches are not paged yet")
+        caps.check_paged(cfg)
         pl_ = ecfg.page_len
         self._n_pp = -(-ecfg.max_prompt_len // pl_)    # max prompt pages
         self._n_dp = -(-rcfg.max_new_tokens // pl_)    # max decode pages
         self._max_pages = self._n_pp + self._n_dp      # block table width
         self.num_pages = ecfg.num_pages or ecfg.num_slots * self._max_pages
         # deferred sibling placement needs the prompt state to live wholly
-        # in shared pages + saved logits: true only for pure-attention
-        # stacks (local rings / ssm / rec carry per-slot sequence state)
-        self._pure_attn = all(cfg.mixer_of(k) == "attn"
-                              for pattern, _ in cfg.blocks for k in pattern)
-        if not self._pure_attn and ecfg.max_group > ecfg.num_slots:
+        # in shared pages + saved logits: true only for pure pool-resident
+        # stacks (capability table shared_prefix_ok: attn full KV, mla
+        # latents; local rings / ssm / rec carry per-slot sequence state)
+        self._pure_pool = caps.pure_pool_prefix(cfg)
+        if not self._pure_pool and ecfg.max_group > ecfg.num_slots:
             raise ValueError(
                 "max_group cannot exceed num_slots: per-slot-state mixers "
-                "(local/ssm/rec/xattn) place groups atomically")
+                "(local/ssm/rec) place groups atomically")
         super().__init__(cfg, rcfg, ecfg)
         self._reset_pool()
 
@@ -805,13 +803,25 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
                 layer = {}
                 for j, kind in enumerate(pattern):
                     e = raw[f"group{gi}"][f"l{j}"]
-                    if cfg.mixer_of(kind) == "attn":
+                    mixer = cfg.mixer_of(kind)
+                    if mixer == "attn":
                         kvh, dh = e["k"].shape[-2:]
                         layer[f"l{j}"] = {
                             "k": jax.ShapeDtypeStruct(
                                 (repeat, npg, pl_, kvh, dh), e["k"].dtype),
                             "v": jax.ShapeDtypeStruct(
                                 (repeat, npg, pl_, kvh, dh), e["v"].dtype),
+                            "pos": jax.ShapeDtypeStruct(
+                                (repeat, npg, pl_), jnp.int32),
+                        }
+                    elif mixer == "mla":
+                        layer[f"l{j}"] = {
+                            "c_kv": jax.ShapeDtypeStruct(
+                                (repeat, npg, pl_, e["c_kv"].shape[-1]),
+                                e["c_kv"].dtype),
+                            "k_rope": jax.ShapeDtypeStruct(
+                                (repeat, npg, pl_, e["k_rope"].shape[-1]),
+                                e["k_rope"].dtype),
                             "pos": jax.ShapeDtypeStruct(
                                 (repeat, npg, pl_), jnp.int32),
                         }
@@ -901,12 +911,13 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
                     for j, kind in enumerate(pattern):
                         e_old = st["cache"][f"group{gi}"][f"l{j}"]
                         e_new = fresh[f"group{gi}"][f"l{j}"]
-                        if cfg.mixer_of(kind) == "attn":
-                            def scat_kv(pool, raw):
-                                # raw (repeat, R, Tp, KV, D) -> page blocks
-                                raw = jnp.pad(raw, ((0, 0), (0, 0),
-                                                    (0, pad_t - tp),
-                                                    (0, 0), (0, 0)))
+                        if caps.pool_resident(cfg.mixer_of(kind)):
+                            def scat_pool(pool, raw):
+                                # raw (repeat, R, Tp, *feat) -> page blocks
+                                # (attn: KV, D feature dims; mla: R / Dr)
+                                raw = jnp.pad(
+                                    raw, ((0, 0), (0, 0), (0, pad_t - tp))
+                                    + ((0, 0),) * (raw.ndim - 3))
                                 rep, r_ = raw.shape[:2]
                                 raw = raw.reshape(rep, r_ * n_pp, pl_,
                                                   *raw.shape[3:])
@@ -918,11 +929,10 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
                                 jnp.broadcast_to(
                                     page_vals, (rep,) + page_vals.shape),
                                 mode="drop")
-                            grp[f"l{j}"] = {"k": scat_kv(e_old["k"],
-                                                         e_new["k"]),
-                                            "v": scat_kv(e_old["v"],
-                                                         e_new["v"]),
-                                            "pos": pos_new}
+                            entry = {key: scat_pool(e_old[key], e_new[key])
+                                     for key in e_new}
+                            entry["pos"] = pos_new
+                            grp[f"l{j}"] = entry
                         else:
                             def scat_slot(arena, rows):
                                 rows = jnp.repeat(rows, gmax, axis=1)
@@ -1108,7 +1118,7 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
             if not live:
                 queue.popleft()
                 continue
-            if not self._pure_attn and len(live) > len(free_slots):
+            if not self._pure_pool and len(live) > len(free_slots):
                 break  # atomic placement: wait for slots to free up
             placed = live[:len(free_slots)]
             parked = live[len(placed):]

@@ -1,0 +1,253 @@
+"""Architecture-coverage matrix (DESIGN.md §9): every config in configs/
+x {layout: padded/bucketed/packed} x {engine: legacy/continuous/paged}.
+
+Three contracts, all keyed off the capability table
+(``models/capabilities.py``):
+
+1. **Fastest legal path, no silent fallback** — each config's
+   ``(fastest_layout, fastest_engine)`` equals the hand-written EXPECTED
+   table below.  If a future edit quietly demotes deepseek-v2 (MLA) off the
+   paged engine or mamba2/recurrentgemma off the packed learner, this file
+   fails by name.
+2. **Layout parity** — for every legal layout, per-token logp matches the
+   padded-grid reference token-for-token (attention kinds bitwise-level;
+   ssm/rec within reassociation tolerance — the chunked scans re-run at
+   different offsets inside packed rows).
+3. **Engine parity** — for every legal arena engine, greedy completions
+   match the legacy scan token-exactly, and illegal cells raise
+   ``CapabilityError`` at construction time, never mid-run.
+
+The sweep instantiates each family's REDUCED (smoke) config; the
+capability verdicts are computed on the FULL config (same mixer rows).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config, get_smoke
+from repro.core.layout import PAD_SEGMENT, make_layout
+from repro.core.repack import bucket_ladder
+from repro.core.selectors import make_selector
+from repro.models import capabilities as caps
+from repro.models import init_params, model_decl
+from repro.models.capabilities import CapabilityError
+from repro.models.model import score_tokens
+from repro.rl import (
+    ContinuousRolloutEngine,
+    EngineConfig,
+    PagedEngineConfig,
+    PagedRolloutEngine,
+    Request,
+    RolloutConfig,
+)
+from repro.rl.rollout import generate
+
+# full-zoo sweep: breadth coverage, runs in the dedicated config-matrix CI
+# job (-m slow), not the fast tier
+pytestmark = pytest.mark.slow
+
+# The committed coverage table.  Changing a capability row is allowed —
+# but it must be done HERE, visibly, not by a fallback deep in a trainer.
+EXPECTED = {
+    "llama-3.2-vision-90b": ("bucketed", None),
+    "nemotron-4-340b": ("packed", "paged"),
+    "h2o-danube-3-4b": ("packed", "paged"),
+    "mistral-nemo-12b": ("packed", "paged"),
+    "gemma3-27b": ("packed", "paged"),
+    "recurrentgemma-9b": ("packed", "paged"),
+    "deepseek-v2-236b": ("packed", "paged"),
+    "qwen3-moe-235b-a22b": ("packed", "paged"),
+    "mamba2-130m": ("packed", "paged"),
+    "musicgen-large": ("bucketed", "legacy"),
+    "nat-qwen3-8b": ("packed", "paged"),
+}
+
+B, T = 6, 48
+
+
+def _synth(cfg, seed=0):
+    """Ragged rollout-shaped batch in the config's vocab (+ codebook planes
+    / image embeds where the config wants them)."""
+    rng = np.random.default_rng(seed)
+    pl = rng.integers(4, 10, B).astype(np.int32)
+    rl = rng.integers(5, T - 12, B).astype(np.int32)
+    shape = (B, T, cfg.num_codebooks) if cfg.num_codebooks else (B, T)
+    toks = rng.integers(1, cfg.vocab_size, shape).astype(np.int32)
+    rmask = np.zeros((B, T), np.float32)
+    for r in range(B):
+        rmask[r, pl[r]:pl[r] + rl[r]] = 1
+        toks[r, pl[r] + rl[r]:] = 0
+    img = (rng.standard_normal(
+        (B, cfg.num_image_tokens, cfg.d_model)).astype(np.float32)
+        if cfg.num_image_tokens else None)
+    return toks, pl, rl, rmask, img
+
+
+def test_expected_table_is_exhaustive():
+    assert sorted(EXPECTED) == sorted(ALL_ARCHS)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_fastest_legal_path(arch):
+    """The no-silent-fallback pin: fastest layout/engine per config equals
+    the committed table, and the legal lists are ordered fastest-first."""
+    cfg = get_config(arch)
+    want_layout, want_engine = EXPECTED[arch]
+    assert caps.fastest_layout(cfg) == want_layout, arch
+    assert caps.fastest_engine(cfg) == want_engine, arch
+    layouts, engines = caps.legal_layouts(cfg), caps.legal_engines(cfg)
+    assert layouts and layouts[0] == want_layout
+    assert list(layouts) == [n for n in ("packed", "bucketed", "padded")
+                             if n in layouts]
+    assert list(engines) == [n for n in ("paged", "continuous", "legacy")
+                             if n in engines]
+    # padded grid + legacy scan are universal fallbacks for non-vision
+    assert "padded" in layouts
+    if "xattn" not in caps.config_mixers(cfg):
+        assert "legacy" in engines
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_layout_logp_parity(arch):
+    """Every legal layout reproduces the padded grid's per-token logp for
+    the tokens it scores — cell (arch, layout) in the coverage matrix."""
+    cfg = get_smoke(arch)
+    full = get_config(arch)
+    params = init_params(jax.random.PRNGKey(0), model_decl(cfg))
+    toks, pl, rl, rmask, img = _synth(cfg)
+    imgj = None if img is None else jnp.asarray(img, jnp.bfloat16)
+    sel = make_selector("rpc", min_cut=4)(jax.random.PRNGKey(3),
+                                          jnp.asarray(rmask))
+    hw = np.asarray(sel.ht_weights, np.float32)
+    batch = {"tokens": toks, "ht_weights": hw}
+    kw = dict(prompt_lens=pl, response_lens=rl,
+              keep_len=np.asarray(sel.keep_len), keep_mask=hw > 0,
+              prefix_structured=sel.prefix_structured,
+              ladder=bucket_ladder(T, 4, 8))
+    lp_pad, _ = score_tokens(params, cfg, jnp.asarray(toks),
+                             lengths=jnp.asarray(pl + rl),
+                             image_embeds=imgj, vocab_chunks=1)
+    lp_pad = np.asarray(lp_pad, np.float64)
+
+    layouts = caps.legal_layouts(full)
+    for name in layouts:
+        lb = make_layout(name).build(batch, **kw)
+        d = lb.data
+        if name == "packed":
+            lp, _ = score_tokens(params, cfg, jnp.asarray(d["tokens"]),
+                                 positions=jnp.asarray(d["positions"]),
+                                 segment_ids=jnp.asarray(d["segment_ids"]),
+                                 vocab_chunks=1)
+            lp = np.asarray(lp, np.float64)
+            real = d["segment_ids"] < int(PAD_SEGMENT)
+            got = lp[real]
+            ref = lp_pad[d["resp_ids"][real], d["positions"][real]]
+        else:
+            t_new = d["tokens"].shape[1]
+            lp, _ = score_tokens(params, cfg, jnp.asarray(d["tokens"]),
+                                 image_embeds=imgj, vocab_chunks=1)
+            lp = np.asarray(lp, np.float64)
+            # compare the kept tokens (the estimator's support); bucketed
+            # slicing only drops the all-cut tail, a causal no-op upstream
+            keep = d["ht_weights"][:, :t_new] > 0
+            got, ref = lp[keep], lp_pad[:, :t_new][keep]
+        # attention kinds mask (bitwise-level); ssm/rec zero state at
+        # segment starts — exact math, ULP-level reassociation (the
+        # chunked scans re-run at shifted offsets inside packed rows)
+        np.testing.assert_allclose(got, ref, atol=1e-2, rtol=0,
+                                   err_msg=f"{arch}/{name}")
+        assert np.all(np.isfinite(got)), f"{arch}/{name}"
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a in ALL_ARCHS if EXPECTED[a][1] is not None])
+def test_engine_greedy_parity(arch):
+    """Every legal arena engine reproduces the legacy scan's greedy
+    completions token-exactly — cell (arch, engine) in the matrix."""
+    cfg = get_smoke(arch)
+    full = get_config(arch)
+    engines = caps.legal_engines(full)
+    assert engines[0] == EXPECTED[arch][1]
+    if engines == ("legacy",):     # codebooks: the scan IS the only cell
+        assert cfg.num_codebooks
+        return
+    params = init_params(jax.random.PRNGKey(0), model_decl(cfg))
+    rng = np.random.default_rng(1)
+    prompts = rng.integers(3, cfg.vocab_size, size=(3, 10)).astype(np.int32)
+    plens = np.full((3,), 10, np.int32)
+    n = 8
+    key = jax.random.PRNGKey(0)
+    rcfg = RolloutConfig(max_new_tokens=n, temperature=0.0, eos_id=-1)
+    ref, ref_logp, _, _, _ = generate(
+        params, cfg, rcfg, jnp.asarray(prompts), jnp.asarray(plens), key)
+    ref, ref_logp = np.asarray(ref), np.asarray(ref_logp)
+    reqs = [Request(uid=i, tokens=prompts[i], budget=n) for i in range(3)]
+    tp = prompts.shape[1]
+
+    for name in engines:
+        if name == "legacy":
+            continue
+        if name == "continuous":
+            eng = ContinuousRolloutEngine(cfg, rcfg, EngineConfig(
+                num_slots=2, max_prompt_len=10, steps_per_sync=3,
+                refill_lanes=1))
+        else:
+            eng = PagedRolloutEngine(cfg, rcfg, PagedEngineConfig(
+                num_slots=2, max_prompt_len=10, steps_per_sync=3,
+                page_len=4, max_group=2))
+        comps = {c.uid: c for c in eng.run(params, reqs, key)}
+        assert len(comps) == 3, f"{arch}/{name}"
+        for i in range(3):
+            c = comps[i]
+            np.testing.assert_array_equal(
+                c.tokens, ref[i, tp:tp + c.response_len],
+                err_msg=f"{arch}/{name}")
+            np.testing.assert_allclose(
+                c.logp, ref_logp[i, :c.response_len], atol=1e-5,
+                err_msg=f"{arch}/{name}")
+        if name == "paged":
+            assert eng._alloc.in_use == 0
+
+
+def test_illegal_cells_raise_at_construction():
+    """Illegal matrix cells fail loudly at config time, naming the
+    capability row — never a silent fallback, never a mid-run error."""
+    vis = get_smoke("llama-3.2-vision-90b")
+    rcfg = RolloutConfig(max_new_tokens=4, temperature=0.0, eos_id=-1)
+    with pytest.raises(CapabilityError, match="xattn"):
+        PagedRolloutEngine(vis, rcfg, PagedEngineConfig(
+            num_slots=2, max_prompt_len=8, page_len=4, max_group=2))
+    with pytest.raises(CapabilityError, match="xattn"):
+        ContinuousRolloutEngine(vis, rcfg, EngineConfig(
+            num_slots=2, max_prompt_len=8))
+    with pytest.raises(CapabilityError, match="packed"):
+        caps.check_packed(vis)
+    music = get_smoke("musicgen-large")
+    with pytest.raises(CapabilityError, match="num_codebooks"):
+        caps.check_packed(music)
+
+
+def test_trainer_packed_layout_rejected_at_config_time():
+    """Satellite regression: NATTrainerConfig(layout='packed') on an
+    unsupported mixer raises CapabilityError from the trainer constructor
+    (formerly it silently built and failed steps later in-jit)."""
+    from repro.rl import NATGRPOTrainer, NATTrainerConfig
+
+    vis = get_smoke("llama-3.2-vision-90b")
+    tcfg = NATTrainerConfig(layout="packed", rollout_engine="legacy",
+                            prompts_per_step=1, max_prompt_len=8)
+    with pytest.raises(CapabilityError, match="capability row 'xattn'"):
+        NATGRPOTrainer(vis, tcfg)
+
+
+def test_coverage_cells_cover_every_arch():
+    cells = caps.coverage_cells()
+    archs = {a for a, _, _ in cells}
+    assert archs == set(ALL_ARCHS)
+    # the three headline rows the issue names
+    assert ("deepseek-v2-236b", "packed", "paged") in cells
+    assert ("mamba2-130m", "packed", "paged") in cells
+    assert ("recurrentgemma-9b", "packed", "paged") in cells
+    # vision has no engine cells but still has layout coverage
+    assert ("llama-3.2-vision-90b", "bucketed", None) in cells

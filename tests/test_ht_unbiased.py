@@ -143,3 +143,66 @@ def test_grpo_special_case_full_tokens(batch):
     ref = full_token_loss_reference(logp, old_logp, adv, rm)
     np.testing.assert_allclose(float(loss), float(ref), rtol=1e-6)
     np.testing.assert_allclose(float(metrics["selected_ratio"]), 1.0)
+
+
+# ---------------------------------------- arbitrary-design property test
+# (hypothesis when installed; deterministic seeded fallback otherwise)
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    from hypothesis_fallback import given, settings, st
+
+
+@jax.jit
+def _mc_value_and_grad(logp, old_logp, adv, rm, p, keys):
+    """MC mean of (loss, grad) for independent Bernoulli(p_t) masks with
+    HT weights w_t = m_t / p_t (Eq. 6), vmapped over draw keys."""
+    lengths = rm.sum(-1)
+
+    def loss(lp, w):
+        out, _ = nat_grpo_loss(lp, old_logp, adv, w, lengths)
+        return out
+
+    def one(k):
+        m = (jax.random.uniform(k, rm.shape) < p).astype(jnp.float32) * rm
+        w = m / p
+        return loss(logp, w), jax.grad(loss)(logp, w)
+
+    vals, grads = jax.vmap(one)(keys)
+    return vals, grads.mean(0)
+
+
+@settings(max_examples=15)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.floats(min_value=0.15, max_value=0.9))
+def test_ht_unbiased_for_random_inclusion_probabilities(seed, p_min):
+    """Eq. 6 pins w_t = m_t / p_t as unbiased for ANY inclusion-probability
+    field p_t in (0, 1] — not just the shipped URS/RPC designs.  Draw a
+    random per-token field, estimate by MC, and check the mean matches the
+    full-token loss AND gradient within standard-error tolerance."""
+    key = jax.random.PRNGKey(seed)
+    kp, kb, k1, k2, k3 = jax.random.split(key, 5)
+    logp = -jnp.abs(jax.random.normal(k1, (B, T))) * 0.4
+    old_logp = logp + 0.15 * jax.random.normal(k2, (B, T))
+    adv = jax.random.normal(k3, (B,))
+    rm = np.zeros((B, T), np.float32)
+    for i, l in enumerate([40, 32, 24, 16, 40, 8]):
+        rm[i, :l] = 1.0
+    rm = jnp.asarray(rm)
+    # arbitrary inclusion probabilities in [p_min, 1]; 1 off-response so
+    # the reweighting never divides by a vanishing p outside the support
+    u = jax.random.uniform(kp, (B, T))
+    p = jnp.where(rm > 0, p_min + (1.0 - p_min) * u, 1.0)
+
+    full = full_token_loss_reference(logp, old_logp, adv, rm)
+    g_full = jax.grad(
+        lambda lp: full_token_loss_reference(lp, old_logp, adv, rm))(logp)
+
+    n = 512
+    vals, g_mc = _mc_value_and_grad(logp, old_logp, adv, rm, p,
+                                    jax.random.split(kb, n))
+    se = float(jnp.std(vals)) / np.sqrt(n)
+    assert abs(float(jnp.mean(vals)) - float(full)) < 6 * se + 2e-3, \
+        (float(jnp.mean(vals)), float(full), se)
+    rel = float(jnp.linalg.norm(g_mc - g_full) / jnp.linalg.norm(g_full))
+    assert rel < 0.25, (rel, p_min)

@@ -93,3 +93,59 @@ def test_unallocated_pages_do_not_contribute():
     o2 = paged_decode_pallas(q, jnp.asarray(kp2), jnp.asarray(vp2),
                              jnp.asarray(pos2), bt, qp)
     np.testing.assert_array_equal(np.asarray(o1)[0], np.asarray(o2)[0])
+
+
+# ------------------------------------------------------------- MLA variant
+MLA_SWEEP = [
+    # (S, H, R, Dr, P, page_len, M)
+    (4, 4, 16, 8, 12, 8, 4),
+    (2, 8, 32, 16, 8, 4, 5),
+    (3, 1, 8, 4, 16, 16, 3),
+]
+
+
+def mla_data(s, h, r, dr, p, pl, m, seed=0):
+    """Latent pool shaped like ``mla_paged_cache_decl``: value operand IS
+    the latent page; same shared-prompt/partial-page/inactive-slot
+    structure as ``data``."""
+    key = jax.random.PRNGKey(seed)
+    qa = jax.random.normal(key, (s, h, r), jnp.float32) * 0.3
+    qr = jax.random.normal(jax.random.fold_in(key, 1), (s, h, dr)) * 0.3
+    cp = jax.random.normal(jax.random.fold_in(key, 2), (p, pl, r)) * 0.3
+    krp = jax.random.normal(jax.random.fold_in(key, 3), (p, pl, dr)) * 0.3
+    _, _, _, pos, bt, qp = data(s, 1, 1, 8, p, pl, m, seed=seed)
+    return qa, qr, cp, krp, pos, bt, qp
+
+
+@pytest.mark.parametrize("s,h,r,dr,p,pl,m", MLA_SWEEP)
+def test_mla_kernel_vs_ref(s, h, r, dr, p, pl, m):
+    from repro.kernels.paged_attn import (
+        paged_mla_attention_ref, paged_mla_decode_pallas,
+    )
+
+    qa, qr, cp, krp, pos, bt, qp = mla_data(s, h, r, dr, p, pl, m)
+    scale = 1.0 / np.sqrt(r + dr)
+    o = paged_mla_decode_pallas(qa, qr, cp, krp, pos, bt, qp, scale=scale)
+    oref = paged_mla_attention_ref(qa, qr, cp, krp, pos, bt, qp, scale=scale)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref),
+                               rtol=2e-5, atol=2e-5)
+    assert np.all(np.asarray(o)[-1] == 0)   # inactive slot -> exact zero
+
+
+def test_mla_unallocated_pages_do_not_contribute():
+    s, h, r, dr, p, pl, m = MLA_SWEEP[0]
+    from repro.kernels.paged_attn import paged_mla_decode_pallas
+
+    qa, qr, cp, krp, pos, bt, qp = mla_data(s, h, r, dr, p, pl, m)
+    scale = 1.0 / np.sqrt(r + dr)
+    o1 = paged_mla_decode_pallas(qa, qr, cp, krp, pos, bt, qp, scale=scale)
+    owned = set(np.asarray(bt)[0][np.asarray(bt)[0] >= 0].tolist())
+    cp2, krp2, pos2 = (np.array(x) for x in (cp, krp, pos))
+    for page in range(p):
+        if page not in owned:
+            cp2[page] = 1e3
+            krp2[page] = -1e3
+            pos2[page] = np.arange(pl)
+    o2 = paged_mla_decode_pallas(qa, qr, jnp.asarray(cp2), jnp.asarray(krp2),
+                                 jnp.asarray(pos2), bt, qp, scale=scale)
+    np.testing.assert_array_equal(np.asarray(o1)[0], np.asarray(o2)[0])

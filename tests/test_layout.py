@@ -332,7 +332,11 @@ def test_build_microbatches_requires_even_split():
             ladder=bucket_ladder(64, 4, 8))
 
 
-def test_packed_rejects_recurrent_mixers():
+def test_packed_accepts_ssm_rejects_xattn():
+    """The capability table (models/capabilities.py) now admits ssm/rec
+    under the packed layout (segment-boundary state resets) and rejects
+    only mixers whose row says packed_ok=False (xattn)."""
+    from repro.models.capabilities import CapabilityError
     from repro.models.model import score_tokens
 
     from repro.models.config import SSMConfig
@@ -346,10 +350,21 @@ def test_packed_rejects_recurrent_mixers():
     params = init_params(jax.random.PRNGKey(0), model_decl(cfg))
     toks = jnp.zeros((2, 16), jnp.int32)
     seg = jnp.zeros((2, 16), jnp.int32)
-    pos = jnp.zeros((2, 16), jnp.int32)
-    with pytest.raises(NotImplementedError, match="packed layout"):
-        score_tokens(params, cfg, toks, positions=pos, segment_ids=seg,
-                     vocab_chunks=1)
+    pos = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32), (2, 16))
+    logp, _ = score_tokens(params, cfg, toks, positions=pos, segment_ids=seg,
+                           vocab_chunks=1)
+    assert np.all(np.isfinite(np.asarray(logp, np.float32)))
+
+    xcfg = ModelConfig(name="xattn-tiny", d_model=32, n_heads=2, n_kv_heads=2,
+                       head_dim=16, d_ff=64, vocab_size=VOCAB_SIZE,
+                       blocks=((("attn", "xattn"), 1),), seq_parallel=False,
+                       remat_policy="none", scan_layers=False,
+                       num_image_tokens=4)
+    xparams = init_params(jax.random.PRNGKey(1), model_decl(xcfg))
+    img = jnp.zeros((2, 4, 32), jnp.bfloat16)
+    with pytest.raises(CapabilityError, match="xattn"):
+        score_tokens(xparams, xcfg, toks, positions=pos, segment_ids=seg,
+                     image_embeds=img, vocab_chunks=1)
 
 
 def test_train_inputs_packed_spec():

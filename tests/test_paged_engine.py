@@ -193,7 +193,7 @@ def test_stateful_mixer_places_atomically(setup):
     eng = PagedRolloutEngine(local_cfg, rcfg, PagedEngineConfig(
         num_slots=2, max_prompt_len=10, steps_per_sync=2, page_len=4,
         max_group=g))
-    assert not eng._pure_attn
+    assert not eng._pure_pool
     groups = [[Request(uid=pi * g + j, tokens=prompts[pi], budget=n)
                for j in range(g)] for pi in range(2)]
     comps = {c.uid: c for c in eng.run_groups(params, groups, key)}
@@ -459,3 +459,93 @@ def test_trainer_paged_rollout_metrics():
     assert np.isfinite(m["loss"])
     assert m["tokens_budget"] == 2 * 6 * 8
     assert 0 < m["tokens_generated"] <= m["tokens_budget"]
+
+
+# ------------------------------------------- allocator property tests
+# (hypothesis when installed; deterministic seeded fallback otherwise)
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    from hypothesis_fallback import given, settings, st
+
+
+def _check_partition(a):
+    """The free list and the live refcounts partition the pool exactly:
+    every page is either on the free list (refcount 0) or live
+    (refcount > 0), never both, never neither, never twice."""
+    free = a._free
+    assert len(free) == len(set(free)), "free list holds a page twice"
+    live = set(np.flatnonzero(a.refcount > 0).tolist())
+    assert live.isdisjoint(free), "page simultaneously free and live"
+    assert len(live) + len(free) == a.num_pages, "pages leaked"
+    assert a.in_use == len(live)
+    assert np.all(a.refcount >= 0)
+
+
+@settings(max_examples=60)
+@given(st.integers(min_value=2, max_value=12),
+       st.lists(st.integers(min_value=0, max_value=10 ** 6),
+                min_size=1, max_size=80))
+def test_page_allocator_interleavings_never_double_free_or_leak(
+        num_pages, ops):
+    """Arbitrary alloc/retain/release interleavings keep the free list +
+    refcounts an exact partition of the pool (the invariant that makes
+    retire a free-list push and cancellation safe mid-group)."""
+    a = PageAllocator(num_pages)
+    handles = []          # (pages, model_refs) for every live allocation
+    for op in ops:
+        kind = op % 3
+        if kind == 0:                       # alloc 1..3 pages
+            n = 1 + (op // 3) % 3
+            if n > a.num_free:
+                with pytest.raises(PagePoolExhausted):
+                    a.alloc(n)
+            else:
+                pages = a.alloc(n)
+                assert len(pages) == n
+                assert all(a.refcount[p] == 1 for p in pages)
+                handles.append([pages, 1])
+        elif kind == 1 and handles:         # retain (another sibling)
+            h = handles[(op // 3) % len(handles)]
+            a.retain(h[0])
+            h[1] += 1
+        elif kind == 2 and handles:         # release one reference
+            i = (op // 3) % len(handles)
+            h = handles[i]
+            freed = a.release(h[0])
+            h[1] -= 1
+            # pages free exactly when the LAST reference drops
+            if h[1] == 0:
+                assert sorted(freed) == sorted(h[0])
+                handles.pop(i)
+            else:
+                assert freed == []
+        _check_partition(a)
+    # drain: dropping every remaining reference returns the whole pool
+    for pages, refs in handles:
+        for _ in range(refs):
+            a.release(pages)
+    _check_partition(a)
+    assert a.in_use == 0 and a.num_free == num_pages
+    assert np.all(a.refcount == 0)
+
+
+@settings(max_examples=40)
+@given(st.integers(min_value=1, max_value=8),
+       st.integers(min_value=0, max_value=8))
+def test_page_allocator_exhaustion_reports_exact_occupancy(pool, held):
+    """PagePoolExhausted names the exact in-use/free occupancy at the
+    moment of failure — the numbers operators size num_pages from."""
+    held = min(held, pool)
+    a = PageAllocator(pool)
+    if held:
+        a.alloc(held)
+    want = a.num_free + 1               # always one more than is free
+    with pytest.raises(
+            PagePoolExhausted,
+            match=rf"allocating {want} page\(s\): {held}/{pool} pages "
+                  rf"in use \({pool - held} free\)"):
+        a.alloc(want)
+    # a failed alloc must not perturb the pool
+    _check_partition(a)
+    assert a.in_use == held
