@@ -1,0 +1,156 @@
+"""Serving load generator: TTFT / TPS / cache-hit-rate under a
+system-prompt-heavy many-users mix (DESIGN.md §10) — BENCH row family
+``serving/*``.
+
+The workload is the radix cache's target shape: N_SYS distinct system
+prompts (3 full pages each), USERS requests per system prompt from
+separate tenants, each appending a short private user suffix.  Uncached,
+every request prefills its full prompt; with the trie, each system prompt
+prefills once and every later arrival pays only its suffix, so
+
+  * ``serving/cache_hit_rate`` (prefix_hit_tokens / prompt_tokens) is a
+    DETERMINISTIC counter ratio — gated >= 0.5 and chained across the
+    trajectory,
+  * ``serving/prefill_token_ratio`` (prefill_tokens / prompt_tokens) is
+    its ceiling-gated complement: prompt prefill work must stay sublinear
+    in the request count,
+  * ``serving/tps`` and ``serving/ttft_ms`` are wall-clock rows — gated
+    by generous ABSOLUTE bounds only (CPU CI noise), never chained.
+
+The page pool is sized BELOW the mix's worst-case working set on purpose:
+placement pressure must be absorbed by deferral + LRU eviction of cold
+trie branches — if ``PagePoolExhausted`` surfaces, the bench (and the CI
+lane running it) fails.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.models import init_params, model_decl
+from repro.models.config import ModelConfig, dense_blocks
+from repro.rl.engine import PagedEngineConfig, PagedRolloutEngine, Request
+from repro.rl.rollout import RolloutConfig
+from repro.serve import AsyncLMServer, ServeConfig
+
+SLOTS = 8
+PAGE_LEN = 16
+SYS_LEN = 3 * PAGE_LEN      # 3 full pages of cacheable system prompt
+USER_LEN = 8                # private suffix -> one partial page
+MAX_NEW = 16
+STEPS_PER_SYNC = 8
+NUM_PAGES = 14              # < worst-case working set: eviction territory
+
+
+def _model():
+    return ModelConfig(name="bench-serve", d_model=256, n_heads=8,
+                       n_kv_heads=4, head_dim=32, d_ff=512, vocab_size=512,
+                       blocks=dense_blocks(4), seq_parallel=False,
+                       remat_policy="none", scan_layers=False)
+
+
+def _workload(rng, n_sys: int, users: int):
+    """(tenant, tokens) rows: ``users`` requests per system prompt, tenants
+    interleaved so DRR admission mixes the system prompts."""
+    sys_prompts = rng.integers(3, 512, (n_sys, SYS_LEN)).astype(np.int32)
+    reqs = []
+    for _u in range(users):
+        for s in range(n_sys):
+            user = rng.integers(3, 512, (USER_LEN,)).astype(np.int32)
+            reqs.append((f"tenant{s}",
+                         np.concatenate([sys_prompts[s], user])))
+    return reqs
+
+
+async def _serve(engine, params, key, reqs, max_new):
+    server = AsyncLMServer(
+        engine, params, key,
+        ServeConfig(max_queue=len(reqs) + 1, max_backlog=2, quantum=128))
+    await server.start()
+    t0 = time.perf_counter()
+    streams = [server.submit(toks, tenant=tenant, max_new=max_new)
+               for tenant, toks in reqs]
+
+    async def consume(st):
+        async for _delta in st:
+            pass
+        return await st.result()
+
+    comps = await asyncio.gather(*[consume(s) for s in streams])
+    dt = time.perf_counter() - t0
+    await server.stop()
+    return server, comps, dt
+
+
+def run(smoke: bool = False) -> dict:
+    n_sys, users = (2, 3) if smoke else (4, 6)
+    max_new = 8 if smoke else MAX_NEW
+    cfg = _model()
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, model_decl(cfg))
+    rng = np.random.default_rng(0)
+    reqs = _workload(rng, n_sys, users)
+
+    engine = PagedRolloutEngine(
+        cfg, RolloutConfig(max_new_tokens=MAX_NEW, temperature=1.0,
+                           eos_id=-1),
+        PagedEngineConfig(num_slots=SLOTS, max_prompt_len=SYS_LEN + USER_LEN,
+                          steps_per_sync=STEPS_PER_SYNC, page_len=PAGE_LEN,
+                          num_pages=NUM_PAGES, max_group=1,
+                          prefix_cache=True))
+
+    # compile pass (prefill + step), then the timed run on a fresh session
+    engine.run_groups(
+        params, [[Request(uid=0, tokens=reqs[0][1], budget=2)]], key)
+    server, comps, dt = asyncio.run(_serve(engine, params, key, reqs,
+                                           max_new))
+
+    st, est = server.stats, engine.stats
+    n_req = len(reqs)
+    assert st["completed"] == n_req and len(comps) == n_req, (
+        "load-gen mix lost requests")
+    assert st["shed"] == 0, "sized queue must admit the whole mix"
+    hit_rate = est["prefix_hit_tokens"] / max(est["prompt_tokens"], 1)
+    prefill_ratio = est["prefill_tokens"] / max(est["prompt_tokens"], 1)
+    tps = st["tokens_out"] / dt
+    ttft_ms = server.mean_ttft * 1e3
+    ttft_max_ms = st["ttft_max"] * 1e3
+
+    print(f"# bench_serving: {n_req} requests ({n_sys} system prompts x "
+          f"{users} users), {SLOTS} slots, pool {NUM_PAGES} pages, "
+          f"budget {max_new}{' [smoke]' if smoke else ''}")
+    print(f"  wall={dt:.2f}s tps={tps:.1f} ttft_mean={ttft_ms:.0f}ms "
+          f"ttft_max={ttft_max_ms:.0f}ms")
+    print(f"  cache_hit_rate={hit_rate:.3f} "
+          f"prefill_token_ratio={prefill_ratio:.3f} "
+          f"(prefilled {est['prefill_tokens']}/{est['prompt_tokens']} "
+          f"prompt tokens)")
+    print(f"  evicted_pages={est['evicted_pages']} "
+          f"peak_pages={est['peak_pages_in_use']}/{NUM_PAGES} "
+          f"rounds={est['rounds']}")
+
+    emit("serving/load_mix", dt,
+         f"requests={n_req};tokens_out={st['tokens_out']};"
+         f"evicted_pages={est['evicted_pages']};"
+         f"peak_pages={est['peak_pages_in_use']}")
+    emit("serving/tps", dt, f"tps={tps:.1f}")
+    emit("serving/ttft_ms", server.mean_ttft,
+         f"ttft_ms={ttft_ms:.1f};ttft_max_ms={ttft_max_ms:.1f}")
+    emit("serving/cache_hit_rate", 0.0, f"cache_hit_rate={hit_rate:.4f}")
+    emit("serving/prefill_token_ratio", 0.0,
+         f"prefill_token_ratio={prefill_ratio:.4f}")
+    return {"tps": tps, "ttft_ms": ttft_ms, "cache_hit_rate": hit_rate,
+            "prefill_token_ratio": prefill_ratio,
+            "evicted_pages": est["evicted_pages"]}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced mix for the blocking serving CI job")
+    run(smoke=ap.parse_args().smoke)

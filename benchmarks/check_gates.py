@@ -11,18 +11,33 @@ the workflow YAML never embeds filenames or heredoc Python:
 
 Gating policy:
   * absolute floors on the headline speedups (rollout/speedup >= 1.5x,
-    async/overlap_speedup >= 1.3x) and on paged/decode_tps_ratio >= 0.95
+    async/overlap_speedup >= 1.3x), on paged/decode_tps_ratio >= 0.95
     (the paged arena must not trade >5% decode throughput for memory),
+    and on the serving lane (serving/cache_hit_rate >= 0.5: the radix trie
+    must serve at least half of all prompt tokens under the load-gen mix;
+    serving/tps above a collapse floor),
   * absolute ceilings on cost ratios (packed/tokens_scored_ratio <= 0.65:
     the packed learner must keep beating the padded grid by >= 35% scored
     tokens at a 50% keep budget; paged/prompt_kv_bytes_ratio <= 1/G +
-    slack: prompt KV per group must stay O(1) in the group size),
+    slack: prompt KV per group must stay O(1) in the group size;
+    serving/prefill_token_ratio <= 0.5: prompt prefill work sublinear in
+    the request count; serving/ttft_ms under a generous wall bound),
   * >10% regression vs the newest committed artifact on those same rows
-    (drop for floors, rise for ceilings),
+    (drop for floors, rise for ceilings); pure wall-clock rows AND
+    within-run wall-time ratios (rollout/speedup, async/overlap_speedup,
+    paged/decode_tps_ratio) are in ABSOLUTE_ONLY and never chained (CPU
+    runner noise); floors that measure thread-level parallelism are
+    skipped when the producing runner had a single CPU (recorded as
+    env.cpu_count in the artifact) — overlap is impossible there by
+    construction, and the skip is printed, not silent,
   * a gated row present in the baseline but missing from the fresh run is
     a failure (a silently dropped suite is not a pass),
   * every other shared metric is reported (trajectory visibility), never
     gated — micro-benchmarks on shared CI runners are too noisy to block.
+
+When ``$GITHUB_STEP_SUMMARY`` is set, the delta table and gate verdicts
+are also appended there as markdown, so the trajectory renders on the
+workflow run page.
 
 ``--coverage`` gates the architecture-coverage matrix instead (DESIGN.md
 §9): every legal (config, layout, engine) cell recorded in the committed
@@ -47,6 +62,13 @@ GATES = {
     # the paged arena buys memory, not time: decode throughput must stay
     # within 5% of the dense arena at G=8 sibling groups
     "paged/decode_tps_ratio": ("tps_ratio", 0.95),
+    # the radix trie must serve >= half of all prompt tokens from cached
+    # pages under the system-prompt-heavy load-gen mix — a deterministic
+    # counter ratio, so it also chains through the trajectory guard
+    "serving/cache_hit_rate": ("cache_hit_rate", 0.5),
+    # serving throughput floor: pure wall clock, bounded far below the
+    # measured value so only a collapse (not runner noise) trips it
+    "serving/tps": ("tps", 25.0),
 }
 # row name -> (metric key, absolute ceiling): lower is better
 CEILINGS = {
@@ -54,13 +76,24 @@ CEILINGS = {
     # prompt KV per GRPO group must scale O(1) in G, not O(G): at G=8 the
     # ideal is 1/G = 0.125; slack covers page-quantization of odd prompts
     "paged/prompt_kv_bytes_ratio": ("prompt_kv_bytes_ratio", 1 / 8 + 0.075),
+    # prompt-prefill work must stay sublinear in the request count: the
+    # complement of the hit rate, counter-deterministic, chained
+    "serving/prefill_token_ratio": ("prefill_token_ratio", 0.5),
+    # mean time-to-first-token under the load-gen mix, wall clock
+    "serving/ttft_ms": ("ttft_ms", 10_000.0),
 }
 REL_REGRESSION = 0.10  # gated metrics may not regress >10% vs the baseline
-# rows gated ONLY by their absolute bound: a ratio of two CPU wall times
-# swings well beyond 10% run-to-run on shared runners, so chaining runs
-# via the trajectory guard would fail on pure noise — the floor/ceiling
-# above already encodes the whole requirement
-ABSOLUTE_ONLY = {"paged/decode_tps_ratio"}
+# rows gated ONLY by their absolute bound: a ratio of (or a raw) CPU wall
+# time swings well beyond 10% run-to-run on shared runners, so chaining
+# runs via the trajectory guard would fail on pure noise — the
+# floor/ceiling above already encodes the whole requirement
+ABSOLUTE_ONLY = {"rollout/speedup", "async/overlap_speedup",
+                 "paged/decode_tps_ratio", "serving/tps",
+                 "serving/ttft_ms"}
+# floors that measure thread-level parallelism: undefined on a runner with
+# one CPU (actor and learner cannot overlap by construction), so they are
+# skipped — loudly — when the fresh artifact records cpu_count == 1
+PARALLEL_FLOORS = {"async/overlap_speedup"}
 
 
 def committed_benches(root: str) -> list:
@@ -79,21 +112,58 @@ def next_name(root: str) -> str:
     return f"BENCH_{n}.json"
 
 
-def _rows(path: str) -> dict:
+def _load(path: str) -> tuple:
     with open(path) as f:
         payload = json.load(f)
-    return {r["name"]: r.get("metrics", {}) for r in payload["rows"]}
+    rows = {r["name"]: r.get("metrics", {}) for r in payload["rows"]}
+    return rows, payload.get("env", {})
+
+
+def _rows(path: str) -> dict:
+    return _load(path)[0]
+
+
+def _append_step_summary(title: str, deltas: list, gates: list,
+                         failures: list) -> None:
+    """Markdown delta table into $GITHUB_STEP_SUMMARY (satellite of the
+    serving CI lane): the per-metric trajectory and gate verdicts render
+    on the workflow run page instead of hiding in the job log."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    lines = [f"### Perf gates — {title}", ""]
+    if deltas:
+        lines += ["| metric | baseline | fresh | delta |",
+                  "|---|---:|---:|---:|"]
+        lines += [f"| `{n}` | {bv:.4g} | {fv:.4g} | {pct:+.1f}% |"
+                  for n, bv, fv, pct in deltas]
+        lines.append("")
+    if gates:
+        lines += ["| gate | value | bound | status |",
+                  "|---|---:|---:|---|"]
+        lines += [f"| `{n}` | {fv:.3f} | {kind} {bound:g} | {status} |"
+                  for n, fv, kind, bound, status in gates]
+        lines.append("")
+    lines.append("**FAILED:** " + "; ".join(failures) if failures
+                 else "**All perf gates passed.**")
+    lines.append("")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
 
 
 def check(fresh_path: str, root: str) -> int:
-    fresh = _rows(fresh_path)
+    fresh, fresh_env = _load(fresh_path)
+    single_cpu = fresh_env.get("cpu_count") == 1
     baseline = [(n, p) for n, p in committed_benches(root)
                 if os.path.abspath(p) != os.path.abspath(fresh_path)]
     failures = []
+    deltas, gate_rows = [], []
+    title = os.path.basename(fresh_path)
 
     if baseline:
         bn, bp = baseline[-1]
         base = _rows(bp)
+        title += f" vs BENCH_{bn}.json"
         shared = sorted(set(fresh) & set(base))
         print(f"# perf trajectory: {os.path.basename(fresh_path)} "
               f"vs committed BENCH_{bn}.json ({len(shared)} shared rows)")
@@ -103,8 +173,10 @@ def check(fresh_path: str, root: str) -> int:
                 if not isinstance(fv, (int, float)) or not isinstance(
                         bv, (int, float)) or bv == 0:
                     continue
+                pct = (fv / bv - 1) * 100
+                deltas.append((f"{name}:{mk}", bv, fv, pct))
                 print(f"  {name}:{mk}: {bv:.4g} -> {fv:.4g} "
-                      f"({(fv / bv - 1) * 100:+.1f}%)")
+                      f"({pct:+.1f}%)")
         for gated, lower_is_better in ((GATES, False), (CEILINGS, True)):
             for name, (mk, _bound) in gated.items():
                 if name not in base or mk not in base[name]:
@@ -127,8 +199,16 @@ def check(fresh_path: str, root: str) -> int:
     for name, (mk, floor) in GATES.items():
         if name in fresh and mk in fresh[name]:
             fv = fresh[name][mk]
+            if name in PARALLEL_FLOORS and single_cpu:
+                print(f"  gate {name}:{mk} = {fv:.3f} (floor {floor}) "
+                      "SKIPPED — single-CPU runner, thread overlap "
+                      "impossible by construction")
+                gate_rows.append((f"{name}:{mk}", fv, "floor", floor,
+                                  "skipped (1 cpu)"))
+                continue
             status = "ok" if fv >= floor else "FAIL"
             print(f"  gate {name}:{mk} = {fv:.3f} (floor {floor}) {status}")
+            gate_rows.append((f"{name}:{mk}", fv, "floor", floor, status))
             if fv < floor:
                 failures.append(f"{name}:{mk} below floor {floor}: {fv:.3f}")
     for name, (mk, ceil) in CEILINGS.items():
@@ -136,9 +216,11 @@ def check(fresh_path: str, root: str) -> int:
             fv = fresh[name][mk]
             status = "ok" if fv <= ceil else "FAIL"
             print(f"  gate {name}:{mk} = {fv:.3f} (ceiling {ceil}) {status}")
+            gate_rows.append((f"{name}:{mk}", fv, "ceiling", ceil, status))
             if fv > ceil:
                 failures.append(f"{name}:{mk} above ceiling {ceil}: {fv:.3f}")
 
+    _append_step_summary(title, deltas, gate_rows, failures)
     if failures:
         print("# PERF GATES FAILED")
         for f in failures:

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 
@@ -26,7 +27,7 @@ def main():
     ap.add_argument("--only", default="",
                     help="comma list: unbiasedness,gradnorm,matrix,ratio,"
                          "efficiency,quality,rollout,async,packed,paged,"
-                         "roofline")
+                         "serving,roofline")
     ap.add_argument("--json", default="",
                     help="write aggregated machine-readable results here")
     args = ap.parse_args()
@@ -72,6 +73,10 @@ def main():
         from benchmarks import bench_paged_decode
         bench_paged_decode.run()
         print()
+    if on("serving"):
+        from benchmarks import bench_serving
+        bench_serving.run()
+        print()
     if on("quality"):
         from benchmarks import bench_quality
         bench_quality.run(steps=150 if args.full else 40,
@@ -98,6 +103,10 @@ def main():
                 "jax": jax.__version__,
                 "backend": jax.default_backend(),
                 "device_count": jax.device_count(),
+                # thread-parallelism floors (async/overlap_speedup) are
+                # meaningless on a single-CPU runner; check_gates reads
+                # this to know whether they apply
+                "cpu_count": os.cpu_count(),
             },
             "rows": RESULTS,
         }

@@ -1,20 +1,25 @@
-"""Serving example: paged continuous-batching decode with prefix sharing.
+"""Serving example: async front-end, paged continuous batching, prefix reuse.
 
 The same engine that backs RL rollout (``repro.rl.engine``) is the serving
 decode loop: requests carry their own token budgets, rows retire at EOS or
 budget, and freed slots are immediately re-prefilled from the queue — short
 requests never wait on long neighbours (DESIGN.md §3).
 
-Part 1 serves an n-best sampling workload (G samples per prompt — the
+Part 1 runs the real server path (DESIGN.md §10): ``AsyncLMServer`` over a
+radix-prefix-cached paged engine, two tenants sharing a system prompt whose
+KV pages are prefilled once and matched from the trie by every later
+request, tokens streamed back through each request's ``TokenStream``.
+Part 2 serves an n-best sampling workload (G samples per prompt — the
 serving twin of a GRPO group) through the PAGED arena (DESIGN.md §8): each
 prompt's KV is prefilled once into refcounted shared pages, every sample
 only pays private decode pages, and retirement returns pages to a free
-list.  Part 2 keeps the legacy fixed-shape prefill+decode smoke across
+list.  Part 3 keeps the legacy fixed-shape prefill+decode smoke across
 attention families (dense GQA, MLA, SSM) — the same ``decode_step`` the
 dry-run lowers at scale.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
+import asyncio
 import time
 
 import jax
@@ -27,8 +32,56 @@ from repro.models import decode_step, init_params, model_decl, prefill
 from repro.rl import (
     PagedEngineConfig, PagedRolloutEngine, Request, RolloutConfig, make_env,
 )
+from repro.serve import AsyncLMServer, ServeConfig
 
-# ------------------------------------------- 1. paged n-best-of-G serving
+# ------------------------- 1. async serving with the radix prefix cache
+S_ARCH, S_NEW, S_PAGE = "mistral-nemo-12b", 16, 16
+scfg_model = get_smoke(S_ARCH)
+s_params = init_params(jax.random.PRNGKey(0), model_decl(scfg_model))
+s_rcfg = RolloutConfig(max_new_tokens=S_NEW, temperature=1.0, eos_id=-1)
+s_engine = PagedRolloutEngine(
+    scfg_model, s_rcfg,
+    PagedEngineConfig(num_slots=4, max_prompt_len=64, steps_per_sync=4,
+                      page_len=S_PAGE, max_group=1, prefix_cache=True))
+system_prompt = np.arange(3, 3 + 3 * S_PAGE, dtype=np.int32) % 29 + 3
+
+
+async def serve_demo():
+    server = AsyncLMServer(
+        s_engine, s_params, jax.random.PRNGKey(7),
+        ServeConfig(max_queue=32, max_backlog=2, quantum=128),
+        tenant_weights={"alice": 2.0, "bob": 1.0})
+    await server.start()
+
+    async def ask(tenant, i):
+        user = np.int32([40 + i, 41 + i, 9, 10])
+        stream = server.submit(np.concatenate([system_prompt, user]),
+                               tenant=tenant, max_new=S_NEW)
+        n = 0
+        async for delta in stream:            # tokens arrive per round
+            n += len(delta)
+        comp = await stream.result()
+        return tenant, stream.uid, n, stream.ttft, comp
+
+    t0 = time.perf_counter()
+    outs = await asyncio.gather(*[ask("alice" if i % 2 else "bob", i)
+                                  for i in range(8)])
+    dt = time.perf_counter() - t0
+    await server.stop()
+    st, est = server.stats, s_engine.stats
+    print(f"{S_ARCH}: async-served {st['completed']} requests "
+          f"({st['tokens_out']} streamed tokens) in {dt:.2f}s incl. compile")
+    print(f"  cache_hit_rate="
+          f"{est['prefix_hit_tokens'] / max(est['prompt_tokens'], 1):.2f} "
+          f"(prefilled {est['prefill_tokens']} of {est['prompt_tokens']} "
+          f"prompt tokens)  mean_ttft={server.mean_ttft * 1e3:.0f}ms")
+    for tenant, uid, n, ttft, comp in outs[:4]:
+        print(f"  uid={uid} tenant={tenant:5s} streamed={n:2d} "
+              f"completed={comp.completed}")
+
+asyncio.run(serve_demo())
+
+# ------------------------------------------- 2. paged n-best-of-G serving
 ARCH = "mistral-nemo-12b"
 SLOTS, TP, MAX_NEW = 8, 32, 48
 N_PROMPTS, G = 6, 4          # 24 samples served through 8 slots
@@ -81,7 +134,7 @@ for c in completions[:4]:
     print(f"  uid={c.uid:2d} prompt={c.prompt_len:2d} "
           f"generated={c.response_len:2d}/{budgets[c.uid]:2d}")
 
-# ----------------------------------------- 2. fixed-shape decode-step smoke
+# ----------------------------------------- 3. fixed-shape decode-step smoke
 ARCHS = ["deepseek-v2-236b", "h2o-danube-3-4b", "mamba2-130m"]
 B, TPS, NEW = 4, 32, 16
 

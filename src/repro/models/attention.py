@@ -104,6 +104,7 @@ def self_attention(
     rope_theta: float,
     lengths: Optional[Array] = None,
     segment_ids: Optional[Array] = None,
+    prefix: Optional[dict] = None,
 ) -> Array:
     """Full-sequence self-attention (train / prefill).
 
@@ -112,6 +113,17 @@ def self_attention(
     ``segment_ids`` (B, T) switches to the packed layout: attention is
     confined to same-segment tokens (see ``segment_mask``) and ``lengths``
     is ignored — packed rows carry no per-row valid prefix.
+
+    ``prefix`` is the partial-prefix resume path (radix prefix cache,
+    DESIGN.md §10): {"k"/"v": (B, Sp, KV, D) already-roped pool K/V,
+    "pos": (B, Sp) absolute positions, -1 = empty}.  ``x`` then holds only
+    the uncached suffix and ``positions`` must carry the suffix's absolute
+    positions (prefix_len + arange).  Prefix keys are visible to a query
+    iff their position is valid and strictly precedes the query's; the
+    reduction order [prefix, suffix] matches a full prefill's, so resumed
+    logits agree with recomputation up to dtype rounding of stored K/V.
+    Restricted to full-causal attention: a sliding window or packed
+    segments would need window/segment bookkeeping across the splice.
     """
     b, t, _ = x.shape
     h = p["wq"].shape[1]
@@ -123,6 +135,31 @@ def self_attention(
     q = apply_rope(q, positions, rope_theta)
     k = apply_rope(k, positions, rope_theta)
     scale = 1.0 / jnp.sqrt(dh).astype(F32)
+
+    if prefix is not None:
+        if window > 0 or segment_ids is not None:
+            raise ValueError(
+                "prefix resume requires full-causal attention "
+                "(no sliding window, no packed segments)")
+        kp = prefix["k"].astype(k.dtype)
+        vp = prefix["v"].astype(v.dtype)
+        pp = prefix["pos"]
+        sp = kp.shape[1]
+        k_all = jnp.concatenate([kp, k], axis=1)
+        v_all = jnp.concatenate([vp, v], axis=1)
+        m_self = causal_window_mask(t, t, 0)[None, None]
+        if lengths is not None:
+            m_self = m_self & (jnp.arange(t)[None, None, None, :]
+                               < lengths[:, None, None, None])
+        m_pre = ((pp[:, None, :] >= 0)
+                 & (pp[:, None, :] < positions[:, :, None]))[:, None]
+        mask = jnp.concatenate(
+            [jnp.broadcast_to(m_pre, (b, 1, t, sp)),
+             jnp.broadcast_to(m_self, (b, 1, t, t))], axis=-1)
+        o = sdpa(q, repeat_kv(k_all, h // kv), repeat_kv(v_all, h // kv),
+                 mask, scale)
+        out = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+        return out, (k, v)
 
     use_banded = (window > 0 and t % window == 0 and t // window >= 2
                   and segment_ids is None)

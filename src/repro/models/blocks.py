@@ -72,6 +72,7 @@ def block_apply(
     collect_cache: bool,
     shard=None,
     segment_ids: Optional[Array] = None,
+    prefix_kv: Optional[dict] = None,
 ):
     """Full-sequence application.  Returns (x, cache_entry_or_None, aux).
 
@@ -80,11 +81,19 @@ def block_apply(
     attention kinds mask visibility on segment equality; ssm/rec zero their
     recurrent state and conv taps at segment starts; cross-attention rejects
     packing (its image K-V is shared across the whole row).
+
+    ``prefix_kv`` is this layer's cached-prefix K/V for partial-prefix
+    prefill resume (radix prefix cache) — only the global-attention mixer
+    supports it; the capability table gates configs before we get here.
     """
     mixer = cfg.mixer_of(kind)
     mlp = cfg.mlp_of(kind)
     if segment_ids is not None:
         caps.require_packed_mixer(mixer)
+    if prefix_kv is not None and mixer != "attn":
+        raise caps.CapabilityError(
+            f"partial-prefix prefill resume requires the 'attn' mixer "
+            f"(full-KV pool pages); got {mixer!r}")
     aux = jnp.zeros((), jnp.float32)
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
     cache_entry = None
@@ -92,7 +101,7 @@ def block_apply(
         out, (k, v) = attn.self_attention(
             p["mixer"], h, positions, window=_window_of(cfg, mixer),
             rope_theta=cfg.rope_theta, lengths=lengths,
-            segment_ids=segment_ids)
+            segment_ids=segment_ids, prefix=prefix_kv)
         if collect_cache:
             cache_entry = {"k": k, "v": v}
     elif mixer == "xattn":

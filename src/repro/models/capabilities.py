@@ -167,6 +167,27 @@ def check_engine(cfg: ModelConfig, engine: str) -> None:
                               f"this config — {why}")
 
 
+def prefix_cache_ok(cfg: ModelConfig) -> bool:
+    """True when the cross-request radix prefix cache (DESIGN.md §10) can
+    serve this config: every mixer must be global attention, whose pool
+    pages hold the complete per-token state (post-rope K/V) needed to
+    resume a prefill mid-prompt.  Window rings would need cross-splice
+    window bookkeeping, MLA latents a latent-resume prefill, and ssm/rec
+    carry O(1) state that cannot be re-entered at a page boundary."""
+    return all(m == "attn" for m in config_mixers(cfg))
+
+
+def check_prefix_cache(cfg: ModelConfig) -> None:
+    """Config-time gate for ``PagedEngineConfig(prefix_cache=True)``."""
+    if prefix_cache_ok(cfg):
+        return
+    bad = next(m for m in config_mixers(cfg) if m != "attn")
+    raise CapabilityError(
+        "the radix prefix cache requires a pure global-attention stack "
+        f"(full-KV pool pages support partial-prefix prefill resume) — "
+        f"{describe_row(bad)}")
+
+
 def pool_resident(kind: str) -> bool:
     """True when this mixer's per-token state lives in the shared page pool
     (so group prefix pages can be refcount-shared / parked siblings can

@@ -82,6 +82,7 @@ def forward_hidden(
     mesh=None,
     rules: ShardingRules = DEFAULT_RULES,
     collect_cache: bool = False,
+    prefix_kv: Optional[dict] = None,
 ):
     """tokens: (B, T) int32 (or (B, T, K) codebook grid).
 
@@ -89,6 +90,15 @@ def forward_hidden(
     each row holds several sequences back to back, attention never crosses
     segment boundaries, and ``positions`` carries each token's ORIGINAL
     position (rope + window distances stay exact).
+
+    ``prefix_kv`` enables partial-prefix prefill resume (radix prefix
+    cache, DESIGN.md §10): a tree mirroring the cache layout —
+    ``prefix_kv[f"group{gi}"][f"l{j}"] = {"k"/"v": (repeat, B, Sp, KV, D),
+    "pos": (repeat, B, Sp)}`` — holding already-computed (roped) K/V for a
+    cached prompt prefix; ``tokens`` then carries only the suffix and
+    ``positions`` its absolute offsets.  Every layer must have an entry
+    (the capability table restricts this path to pure global-attention
+    stacks).
 
     Returns (hidden (B, T, D) after final norm, caches or None, aux scalar).
     Caches (when collected) are per-group dicts of stacked prefill entries.
@@ -106,9 +116,11 @@ def forward_hidden(
     aux_total = jnp.zeros((), jnp.float32)
     for gi, (pattern, repeat) in enumerate(cfg.blocks):
         gp = params[f"group{gi}"]
+        pfx_g = None if prefix_kv is None else prefix_kv[f"group{gi}"]
 
-        def body(carry, layer_p, _pattern=pattern):
+        def body(carry, xs, _pattern=pattern):
             xx = carry
+            layer_p, pfx_l = xs if prefix_kv is not None else (xs, None)
             entries = {}
             aux = jnp.zeros((), jnp.float32)
             for j, kind in enumerate(_pattern):
@@ -117,7 +129,8 @@ def forward_hidden(
                     positions=positions, lengths=lengths,
                     image_embeds=image_embeds,
                     collect_cache=collect_cache, shard=shard,
-                    segment_ids=segment_ids)
+                    segment_ids=segment_ids,
+                    prefix_kv=None if pfx_l is None else pfx_l[f"l{j}"])
                 if collect_cache:
                     entries[f"l{j}"] = ce
                 aux = aux + a
@@ -125,13 +138,16 @@ def forward_hidden(
 
         body = _remat(cfg, body)
         if cfg.scan_layers and repeat > 1:
-            x, (entries, aux) = jax.lax.scan(body, x, gp)
+            xs = gp if prefix_kv is None else (gp, pfx_g)
+            x, (entries, aux) = jax.lax.scan(body, x, xs)
             aux = jnp.sum(aux)
         else:
             entries_list, aux = [], jnp.zeros((), jnp.float32)
             for r in range(repeat):
                 lp = jax.tree.map(lambda a: a[r], gp)
-                x, (e, a) = body(x, lp)
+                xs = lp if prefix_kv is None else (
+                    lp, jax.tree.map(lambda a: a[r], pfx_g))
+                x, (e, a) = body(x, xs)
                 entries_list.append(e)
                 aux = aux + a
             entries = (jax.tree.map(lambda *xs: jnp.stack(xs), *entries_list)
@@ -278,11 +294,21 @@ def paged_prefill(
     *,
     cache_len: int,
     prefill_len: Optional[Array] = None,
+    prefix_kv: Optional[dict] = None,
+    prefix_len: Optional[Array] = None,
     mesh=None,
     rules: ShardingRules = DEFAULT_RULES,
 ):
     """Prompt prefill for the paged engine: raw per-token state instead of
     dense rows.
+
+    ``prefix_kv`` + ``prefix_len`` (B,) switch on partial-prefix resume
+    (radix prefix cache): ``tokens`` holds only the uncached suffix
+    (``prefill_len`` counts suffix tokens), ``prefix_kv`` carries the
+    cached pages' K/V gathered per layer (see ``forward_hidden``), and
+    positions are offset by ``prefix_len`` so rope and causal masking see
+    absolute coordinates.  Returned raw K/V covers the suffix only — the
+    engine scatters it into fresh pages after the cached ones.
 
     Same forward as ``prefill``, but pool-resident layers (capability
     table ``shared_prefix_ok``: attn, mla) come back raw — global
@@ -300,9 +326,13 @@ def paged_prefill(
     bsz, t = tokens.shape[:2]
     if prefill_len is None:
         prefill_len = jnp.full((bsz,), t, jnp.int32)
+    positions = None
+    if prefix_len is not None:
+        positions = (jnp.asarray(prefix_len).reshape(-1, 1)
+                     + jnp.arange(t)[None, :]).astype(jnp.int32)
     hidden, raw, _ = forward_hidden(
-        params, cfg, tokens, lengths=prefill_len, mesh=mesh, rules=rules,
-        collect_cache=True)
+        params, cfg, tokens, positions=positions, lengths=prefill_len,
+        mesh=mesh, rules=rules, collect_cache=True, prefix_kv=prefix_kv)
 
     cache = {}
     for gi, (pattern, repeat) in enumerate(cfg.blocks):

@@ -27,6 +27,7 @@ from repro.rl.engine import (
     make_paged_engine,
 )
 from repro.rl.learner import make_loss_fn, make_train_step
+from repro.rl.radix import RadixNode, RadixPrefixCache
 from repro.rl.rollout import (
     RolloutBatch,
     RolloutConfig,
@@ -42,6 +43,7 @@ __all__ = [
     "ContinuousRolloutEngine", "EngineConfig", "PageAllocator",
     "PagedEngineConfig", "PagedRolloutEngine", "PagePoolExhausted",
     "Request", "make_engine", "make_paged_engine",
+    "RadixNode", "RadixPrefixCache",
     "RolloutBatch", "RolloutConfig", "generate", "rollout_group",
     "rollout_group_continuous", "NATGRPOTrainer", "NATTrainerConfig",
     "AsyncNATGRPOTrainer", "SampleQueue", "TaggedGroup",

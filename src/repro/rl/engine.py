@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import capabilities as caps
+from repro.models.attention import gather_pages
 from repro.models.config import ModelConfig
 from repro.models.model import (
     cache_decl,
@@ -61,6 +62,7 @@ from repro.models.model import (
     paged_prefill,
     prefill,
 )
+from repro.rl.radix import RadixPrefixCache
 
 Array = jax.Array
 F32 = jnp.float32
@@ -197,6 +199,8 @@ class ContinuousRolloutEngine:
         # and introspection work on a never-begun engine)
         self._params = None
         self._on_finish = None
+        self._on_token = None
+        self._streamed: list = [0] * ecfg.num_slots
         self._queue: collections.deque = collections.deque()
         self._slot_uid: list = [None] * ecfg.num_slots
         self._to_cancel: set = set()
@@ -327,15 +331,25 @@ class ContinuousRolloutEngine:
         *,
         on_finish: Optional[Callable[[Completion], Optional[Iterable[int]]]]
         = None,
+        on_token: Optional[Callable[[int, np.ndarray], None]] = None,
     ) -> None:
         """Open a session: fresh arena, empty queue, zeroed stats.
 
         ``on_finish(completion)`` fires as each request retires (inside
         ``drive``) and may return uids to cancel — queued uids are dropped
         before placement, in-flight uids retire early with
-        ``cancelled=True`` in the same round they are discovered."""
+        ``cancelled=True`` in the same round they are discovered.
+
+        ``on_token(uid, tokens)`` streams incremental output: it fires at
+        the top of each ``drive`` with the tokens a request generated
+        since its last delivery (latency bounded by ``steps_per_sync``
+        substeps), and a request's deltas always arrive before its
+        Completion.  Streaming syncs two extra planes per round, so leave
+        it off for pure-throughput rollout."""
         self._params = params
         self._on_finish = on_finish
+        self._on_token = on_token
+        self._streamed = [0] * self.ecfg.num_slots
         self._queue: collections.deque = collections.deque()
         self._slot_uid: list = [None] * self.ecfg.num_slots
         self._to_cancel: set = set()
@@ -380,6 +394,12 @@ class ContinuousRolloutEngine:
         """No queued work and every slot free — ``drive`` would be a no-op."""
         return not self._queue and all(u is None for u in self._slot_uid)
 
+    @property
+    def backlog(self) -> int:
+        """Accepted-but-unplaced work units queued on the host — the
+        admission signal the serving front-end throttles on."""
+        return len(self._queue)
+
     def _harvest(self, s: int, host, cancelled: bool) -> Completion:
         uid = self._slot_uid[s]
         rl = int(host["n_gen"][s])
@@ -407,6 +427,22 @@ class ContinuousRolloutEngine:
         to_cancel = self._to_cancel
         s_slots = self.ecfg.num_slots
         harvested: list = []
+
+        # -- streaming: deliver each live slot's new tokens before any
+        # harvest below, so a request's deltas always precede its finish
+        if self._on_token is not None and any(
+                u is not None for u in slot_uid):
+            n_gen_h = np.asarray(state["n_gen"])
+            out_tok_h = np.asarray(state["out_tok"])
+            for s in range(s_slots):
+                if slot_uid[s] is None:
+                    continue
+                k = int(n_gen_h[s])
+                if k > self._streamed[s]:
+                    self._on_token(
+                        slot_uid[s],
+                        out_tok_h[s, self._streamed[s]:k].copy())
+                    self._streamed[s] = k
 
         # -- sync the two control planes; fetch buffers only on retirement
         active = np.asarray(state["active"])
@@ -486,6 +522,7 @@ class ContinuousRolloutEngine:
             refill_slots[lane] = s
             refill_mask[lane] = True
             slot_uid[s] = r.uid
+            self._streamed[s] = 0
             lane += 1
 
         if not refill_mask.any() and all(u is None for u in slot_uid):
@@ -579,6 +616,14 @@ class PagedEngineConfig:
     max_group: int = 8         # widest group submit_group accepts
     resume_lanes: int = 0      # parked siblings placed per round; 0 -> auto
     attn_impl: str = "ref"     # "ref" (jnp gather) | "kernel" (Pallas)
+    # cross-request radix prefix cache (DESIGN.md §10): longest-prefix
+    # match reuses resident read-only pages, only the suffix prefills,
+    # full suffix pages are chained back into the trie, and cold branches
+    # are LRU-evicted under pool pressure instead of raising.  Off by
+    # default: RL rollout re-prefills under fresh params every sync, so
+    # only fixed-params serving benefits (pure-attention configs only —
+    # see capabilities.check_prefix_cache).
+    prefix_cache: bool = False
 
     @property
     def lanes(self) -> int:
@@ -690,6 +735,8 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
 
     def __init__(self, cfg: ModelConfig, rcfg, ecfg: PagedEngineConfig):
         caps.check_paged(cfg)
+        if ecfg.prefix_cache:
+            caps.check_prefix_cache(cfg)
         pl_ = ecfg.page_len
         self._n_pp = -(-ecfg.max_prompt_len // pl_)    # max prompt pages
         self._n_dp = -(-rcfg.max_new_tokens // pl_)    # max decode pages
@@ -721,12 +768,35 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
         # awaiting a free slot; each record holds one extra prompt-page
         # reference until its last sibling places or cancels
         self._pending: list = []
+        self._prefix_cache = (RadixPrefixCache(self._alloc, self.ecfg.page_len)
+                              if self.ecfg.prefix_cache else None)
 
-    def begin(self, params, key: Array, *, on_finish=None) -> None:
-        super().begin(params, key, on_finish=on_finish)
+    def begin(self, params, key: Array, *, on_finish=None,
+              on_token=None) -> None:
+        super().begin(params, key, on_finish=on_finish, on_token=on_token)
         self._reset_pool()
         self.stats.update(prompt_prefills=0, pages_in_use=0,
-                          peak_pages_in_use=0)
+                          peak_pages_in_use=0, prompt_tokens=0,
+                          prefill_tokens=0, prefix_hit_tokens=0,
+                          evicted_pages=0)
+
+    def set_params(self, params) -> None:
+        """Weight swap invalidates every cached prefix: resident KV was
+        computed under the old params.  Evictable branches free at once;
+        branches with live readers drain via ``reap()``."""
+        super().set_params(params)
+        if self._prefix_cache is not None:
+            self._dirty.update(self._prefix_cache.flush())
+
+    def _ensure_free(self, n: int) -> bool:
+        """Make >= ``n`` pages available, LRU-evicting cold radix branches
+        under pressure; False when the pool still cannot satisfy it."""
+        short = n - self._alloc.num_free
+        if short > 0 and self._prefix_cache is not None:
+            freed = self._prefix_cache.evict(short)
+            self._dirty.update(freed)
+            self.stats["evicted_pages"] += len(freed)
+        return self._alloc.num_free >= n
 
     def _free_slot_pages(self, s: int) -> None:
         freed = self._alloc.release(self._slot_decode_pages[s])
@@ -873,9 +943,11 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
         pad_t = n_pp * pl_
         cache_len = self.cache_len
         attn_impl = ecfg.attn_impl
+        use_prefix = ecfg.prefix_cache
 
         def step(params, state, block_tables, free_page_mask, refill_toks,
-                 refill_lens, refill_page_ids, refill_slots, refill_budgets,
+                 refill_lens, refill_prefix_len, refill_prefix_bt,
+                 refill_page_ids, refill_slots, refill_budgets,
                  refill_mask, resume_slots, resume_logits, resume_lens,
                  resume_budgets, resume_mask, cancel_mask):
             st = dict(state)
@@ -897,12 +969,36 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
 
             def do_refill(st):
                 st = dict(st)
+                # radix prefix resume: gather the matched pages' K/V per
+                # layer (post-invalidation, so evicted pages are already
+                # invisible) and prefill only the unmatched suffix; the
+                # scatter below lands suffix K/V in the fresh pages with
+                # positions offset past the cached prefix.  With the cache
+                # off, refill_prefix_len is all-zero and this is exactly
+                # the old full-prompt prefill.
+                if use_prefix:
+                    pfx = {}
+                    for gi, (pattern, _repeat) in enumerate(cfg.blocks):
+                        grp_p = {}
+                        for j, _kind in enumerate(pattern):
+                            e = st["cache"][f"group{gi}"][f"l{j}"]
+                            kg, vg, posg = jax.vmap(
+                                gather_pages, in_axes=(0, None))(
+                                    {"k": e["k"], "v": e["v"],
+                                     "pos": e["pos"]}, refill_prefix_bt)
+                            grp_p[f"l{j}"] = {"k": kg, "v": vg, "pos": posg}
+                        pfx[f"group{gi}"] = grp_p
+                else:
+                    pfx = None
                 logits0, fresh = paged_prefill(
                     params, cfg, refill_toks, cache_len=cache_len,
-                    prefill_len=jnp.maximum(refill_lens, 1))
+                    prefill_len=jnp.maximum(refill_lens, 1),
+                    prefix_kv=pfx,
+                    prefix_len=refill_prefix_len if use_prefix else None)
                 qpos = jnp.arange(pad_t)[None, :]
-                page_vals = jnp.where(qpos < refill_lens[:, None], qpos,
-                                      -1).astype(jnp.int32)
+                page_vals = jnp.where(
+                    qpos < refill_lens[:, None],
+                    refill_prefix_len[:, None] + qpos, -1).astype(jnp.int32)
                 page_vals = page_vals.reshape(-1, pl_)       # (R*n_pp, pl)
 
                 new_cache = {}
@@ -945,8 +1041,9 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
                 st["cache"] = new_cache
 
                 st["prefill_logits"] = logits0.astype(F32)
+                full_lens = refill_prefix_len + refill_lens
                 return _place_slot_planes(
-                    st, tgt, jnp.repeat(refill_lens, gmax),
+                    st, tgt, jnp.repeat(full_lens, gmax),
                     refill_budgets.reshape(-1),
                     jnp.repeat(logits0, gmax, axis=0), n, rcfg.pad_id)
 
@@ -1002,6 +1099,11 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
     def idle(self) -> bool:
         return super().idle and not self._pending
 
+    @property
+    def backlog(self) -> int:
+        """Queued groups plus partially-placed (parked) groups."""
+        return len(self._queue) + len(self._pending)
+
     def drive(self) -> list:
         """One paged round: harvest (freeing pages), resume parked
         siblings into freed slots, place queued groups with one shared
@@ -1012,6 +1114,13 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
         pl_, sps = ecfg.page_len, ecfg.steps_per_sync
         state, slot_uid, queue = self._state, self._slot_uid, self._queue
         harvested, cancel_mask = self._collect_retirements()
+
+        if self._prefix_cache is not None:
+            # nodes inserted last round are matchable now (their prefill
+            # retired with the previous step), and stale-epoch branches
+            # whose readers drained get collected
+            self._prefix_cache.step()
+            self._dirty.update(self._prefix_cache.reap())
 
         # snapshot prompt logits for parked groups (written by the prefill
         # one round earlier; read before any new prefill reuses the lane)
@@ -1028,6 +1137,9 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
         for s in occupied:
             want = int(min(self._n_gen_ub[s] + sps, self._slot_budget[s]))
             need = -(-want // pl_)
+            short = need - len(self._slot_decode_pages[s])
+            if short > 0:
+                self._ensure_free(short)  # evict cold branches, else raise
             while len(self._slot_decode_pages[s]) < need:
                 self._slot_decode_pages[s].extend(
                     self._alloc.alloc(1, f" (slot {s} decode-ahead)"))
@@ -1042,6 +1154,7 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
             if not first_ref:
                 self._alloc.retain(ppages)
             slot_uid[s] = r.uid
+            self._streamed[s] = 0
             self._slot_prompt_pages[s] = ppages
             self._slot_decode_pages[s] = self._alloc.alloc(
                 -(-min(sps, budget) // pl_), f" (slot {s} decode)")
@@ -1073,7 +1186,7 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
             while (still and free_slots and ri < rw
                    and rec["logits"] is not None):
                 budget = still[0].budget or rcfg.max_new_tokens
-                if -(-min(sps, budget) // pl_) > self._alloc.num_free:
+                if not self._ensure_free(-(-min(sps, budget) // pl_)):
                     if not occupied and not resume_mask.any():
                         self._alloc.alloc(  # raises with occupancy
                             -(-min(sps, budget) // pl_), " (sibling resume)")
@@ -1099,6 +1212,8 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
         refill_mask = np.zeros((lanes,), bool)
         refill_toks = np.full((lanes, tp), rcfg.pad_id, np.int32)
         refill_lens = np.ones((lanes,), np.int32)
+        refill_prefix_len = np.zeros((lanes,), np.int32)
+        refill_prefix_bt = np.full((lanes, n_pp), -1, np.int32)
         refill_page_ids = np.full((lanes, n_pp), self.num_pages, np.int32)
         refill_slots = np.full((lanes, gmax), s_slots, np.int32)
         refill_budgets = np.zeros((lanes, gmax), np.int32)
@@ -1122,22 +1237,45 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
                 break  # atomic placement: wait for slots to free up
             placed = live[:len(free_slots)]
             parked = live[len(placed):]
-            plen = len(live[0].tokens)
+            toks0 = np.asarray(live[0].tokens)
+            plen = len(toks0)
             n_pp_g = -(-plen // pl_)
-            need = n_pp_g + sum(
+            # radix longest-prefix match: matched pages join the group's
+            # block tables read-only; only the suffix prefills.  A fully
+            # cached prompt drops its last matched page so >= 1 token is
+            # always recomputed — the prefill's last-token logits seed
+            # sampling (vLLM-style last-block recompute).
+            m_nodes: list = []
+            if self._prefix_cache is not None:
+                m_nodes = self._prefix_cache.lookup(toks0)
+                if m_nodes and len(m_nodes) * pl_ >= plen:
+                    m_nodes = m_nodes[:-1]
+            m_pages = [nd.page for nd in m_nodes]
+            mlen = len(m_pages) * pl_
+            n_fresh = n_pp_g - len(m_pages)
+            need = n_fresh + sum(
                 -(-min(sps, r.budget or rcfg.max_new_tokens) // pl_)
                 for r in placed)
-            if need > self._alloc.num_free:
+            if m_pages:
+                # pin the match before eviction can consider those pages
+                self._alloc.retain(m_pages)
+                self._prefix_cache.touch(m_nodes)
+            if not self._ensure_free(need):
+                if m_pages:
+                    self._dirty.update(self._alloc.release(m_pages))
                 if (not occupied and not refill_mask.any()
                         and not resume_mask.any()):
                     self._alloc.alloc(need, " (group placement)")  # raises
                 break  # wait for retirements to return pages
-            ppages = self._alloc.alloc(n_pp_g, " (group prompt)")
+            fresh_pages = self._alloc.alloc(n_fresh, " (group prompt)")
+            ppages = m_pages + fresh_pages
             queue.popleft()
             refill_mask[lane] = True
-            refill_toks[lane, :plen] = live[0].tokens
-            refill_lens[lane] = plen
-            refill_page_ids[lane, :n_pp_g] = ppages
+            refill_toks[lane, :plen - mlen] = toks0[mlen:]
+            refill_lens[lane] = plen - mlen
+            refill_prefix_len[lane] = mlen
+            refill_prefix_bt[lane, :len(m_pages)] = m_pages
+            refill_page_ids[lane, :n_fresh] = fresh_pages
             for gidx, r in enumerate(placed):
                 s = free_slots.pop(0)
                 refill_slots[lane, gidx] = s
@@ -1148,6 +1286,18 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
                 self._pending.append({"reqs": parked, "ppages": ppages,
                                       "plen": plen, "lane": lane,
                                       "logits": None})
+            if self._prefix_cache is not None:
+                # chain the suffix's FULL pages into the trie (ready next
+                # round, once their prefill has retired); the partial
+                # trailing page stays group-private
+                n_full_new = plen // pl_ - len(m_pages)
+                if n_full_new > 0:
+                    self._prefix_cache.insert(
+                        m_nodes[-1] if m_nodes else None, toks0, mlen,
+                        fresh_pages[:n_full_new])
+                self.stats["prefix_hit_tokens"] += mlen
+            self.stats["prompt_tokens"] += plen
+            self.stats["prefill_tokens"] += plen - mlen
             self.stats["prompt_prefills"] += 1
             lane += 1
 
@@ -1169,6 +1319,7 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
         self._state = self._step(
             self._params, state, jnp.asarray(bt), jnp.asarray(free_mask),
             jnp.asarray(refill_toks), jnp.asarray(refill_lens),
+            jnp.asarray(refill_prefix_len), jnp.asarray(refill_prefix_bt),
             jnp.asarray(refill_page_ids), jnp.asarray(refill_slots),
             jnp.asarray(refill_budgets), jnp.asarray(refill_mask),
             jnp.asarray(resume_slots), jnp.asarray(resume_logits),
@@ -1192,6 +1343,7 @@ def make_paged_engine(cfg: ModelConfig, rcfg, *, num_slots: int,
                       max_prompt_len: int, steps_per_sync: int = 4,
                       page_len: int = 16, num_pages: int = 0,
                       max_group: int = 0, attn_impl: str = "ref",
+                      prefix_cache: bool = False,
                       ) -> PagedRolloutEngine:
     return PagedRolloutEngine(
         cfg, rcfg, PagedEngineConfig(
@@ -1199,4 +1351,4 @@ def make_paged_engine(cfg: ModelConfig, rcfg, *, num_slots: int,
             steps_per_sync=steps_per_sync, page_len=page_len,
             num_pages=num_pages,
             max_group=max_group or min(num_slots, rcfg.group_size),
-            attn_impl=attn_impl))
+            attn_impl=attn_impl, prefix_cache=prefix_cache))

@@ -1,0 +1,227 @@
+"""Cross-request radix prefix cache over the paged KV pool (DESIGN.md §10).
+
+SGLang/vLLM-style RadixAttention at page granularity: a trie keyed by
+``page_len``-token chunks of prompt token ids, where each node owns exactly
+one read-only pool page (and exactly one allocator reference on it).  The
+paged engine consults the trie at group placement — the longest ready
+chain of matched nodes contributes its pages directly to the new group's
+block tables, and only the unmatched suffix is prefilled into fresh pages
+— then chains the suffix's *full* pages back into the trie so later
+requests can reuse them.  Partial trailing pages are never cached (their
+in-page layout depends on the prompt length), and a fully cached prompt
+deliberately drops its last matched page so at least one token is always
+recomputed: the prefill's last-token logits feed sampling, exactly like
+vLLM's last-block recompute.
+
+Ownership protocol (the invariant the property tests pin):
+
+* the trie holds ONE reference per resident page, taken at ``insert``;
+* readers (groups whose block tables name a cached page) hold their own
+  references via the engine's usual retain/release flow;
+* eviction only touches *leaf* nodes whose page has refcount exactly 1 —
+  i.e. trie-only, no live reader — so a page under an active request can
+  never be reclaimed; releasing the trie's reference frees the page.
+
+Freshly inserted nodes stay ``ready=False`` until the next ``step()``
+(drive round): their K/V is still being written by this round's batched
+prefill dispatch, so same-round lookups from other lanes must not match
+them.  ``flush()`` starts a new epoch (weights changed — cached K/V is
+stale): old-epoch nodes stop matching, evictable ones are freed at once,
+and ``reap()`` collects stragglers as their readers drain.
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Optional, Sequence
+
+import numpy as np
+
+
+class RadixNode:
+    """One resident pool page: the KV of one full page of prompt tokens."""
+
+    __slots__ = ("key", "page", "parent", "children", "clock", "ready",
+                 "epoch")
+
+    def __init__(self, key: tuple, page: int, parent: "RadixNode",
+                 epoch: int):
+        self.key = key
+        self.page = page
+        self.parent = parent
+        self.children: dict = {}
+        self.clock = 0
+        self.ready = False
+        self.epoch = epoch
+
+
+class RadixPrefixCache:
+    """Trie over token-id chunks; one pool page (and one allocator ref)
+    per node.  ``alloc`` is duck-typed as ``rl.engine.PageAllocator``
+    (``retain``/``release``/``refcount``)."""
+
+    def __init__(self, alloc, page_len: int):
+        self.alloc = alloc
+        self.page_len = int(page_len)
+        self.root = RadixNode((), -1, None, 0)
+        self.root.ready = True
+        self._clock = 0
+        self._epoch = 0
+        self._pending: List[RadixNode] = []
+        self._has_stale = False
+        self._stale_roots: List[RadixNode] = []
+
+    # ------------------------------------------------------ round lifecycle
+    def step(self) -> None:
+        """Open the nodes inserted last round for matching: their pages'
+        prefill writes landed when the previous round's step retired."""
+        for nd in self._pending:
+            nd.ready = True
+        self._pending.clear()
+
+    # ------------------------------------------------------------ matching
+    def lookup(self, tokens) -> List[RadixNode]:
+        """Longest ready chain of full-page chunks of ``tokens``.
+
+        Pure: takes no references and bumps no clocks, so a placement that
+        aborts (pool pressure) leaks nothing.  The engine retains the
+        matched pages and calls ``touch`` when it commits.
+        """
+        t = tuple(int(x) for x in np.asarray(tokens).reshape(-1).tolist())
+        pl = self.page_len
+        node, out, i = self.root, [], 0
+        while i + pl <= len(t):
+            child = node.children.get(t[i:i + pl])
+            if child is None or not child.ready or child.epoch != self._epoch:
+                break
+            out.append(child)
+            node = child
+            i += pl
+        return out
+
+    def touch(self, nodes: Sequence[RadixNode]) -> None:
+        """LRU clock bump along a committed match chain."""
+        self._clock += 1
+        for nd in nodes:
+            nd.clock = self._clock
+
+    # ----------------------------------------------------------- insertion
+    def insert(self, parent: Optional[RadixNode], tokens, start: int,
+               pages: Sequence[int]) -> List[RadixNode]:
+        """Chain ``pages`` below ``parent`` as the full-page chunks of
+        ``tokens[start:]``; ``start`` must be page-aligned and ``parent``
+        the node covering ``tokens[:start]`` (or None for the root).
+
+        The trie retains each page it adopts.  A chunk already present
+        keeps its incumbent node — the duplicate page stays caller-owned
+        and dies with its group — and chaining continues underneath it.
+        Returns the newly adopted nodes (ready after the next ``step()``).
+        """
+        t = tuple(int(x) for x in np.asarray(tokens).reshape(-1).tolist())
+        pl = self.page_len
+        assert start % pl == 0, "insert start must be page-aligned"
+        node = parent if parent is not None else self.root
+        self._clock += 1
+        adopted: List[RadixNode] = []
+        for j, page in enumerate(pages):
+            i = start + j * pl
+            key = t[i:i + pl]
+            assert len(key) == pl, "only full pages are cacheable"
+            incumbent = node.children.get(key)
+            if incumbent is not None and incumbent.epoch == self._epoch:
+                node = incumbent
+                continue
+            if incumbent is not None:
+                # same chunk, stale epoch: shadow it — the stale node keeps
+                # its page until reaped, but stops being reachable by key
+                self._orphan(incumbent)
+            child = RadixNode(key, int(page), node, self._epoch)
+            child.clock = self._clock
+            self.alloc.retain([int(page)])
+            node.children[key] = child
+            self._pending.append(child)
+            adopted.append(child)
+            node = child
+        return adopted
+
+    def _orphan(self, nd: RadixNode) -> None:
+        """Detach a stale subtree so a fresh chain can take its key; its
+        nodes stay reapable through ``_stale_roots``."""
+        nd.parent.children.pop(nd.key, None)
+        nd.parent = None
+        self._stale_roots.append(nd)
+
+    # ------------------------------------------------------------ eviction
+    def _iter_nodes(self, root: Optional[RadixNode] = None
+                    ) -> Iterator[RadixNode]:
+        stack = list((root or self.root).children.values())
+        if root is None:
+            stack.extend(self._stale_roots)
+        while stack:
+            nd = stack.pop()
+            yield nd
+            stack.extend(nd.children.values())
+
+    def _evictable(self, stale_only: bool) -> List[RadixNode]:
+        out = []
+        for nd in self._iter_nodes():
+            if nd.children or not nd.ready:
+                continue
+            if stale_only and nd.epoch == self._epoch:
+                continue
+            if int(self.alloc.refcount[nd.page]) != 1:
+                continue  # a live reader still reaches this page
+            out.append(nd)
+        return out
+
+    def _drop(self, nd: RadixNode) -> List[int]:
+        if nd.parent is not None:
+            nd.parent.children.pop(nd.key, None)
+        else:
+            self._stale_roots = [r for r in self._stale_roots if r is not nd]
+        return self.alloc.release([nd.page])
+
+    def evict(self, want: int, stale_only: bool = False) -> List[int]:
+        """Free up to ``want`` pages: stale-epoch branches first, then the
+        coldest (LRU) current leaves.  Cascades — freeing a leaf may expose
+        its parent as the next candidate.  Returns the freed page ids (the
+        engine must pos-poison them before reuse)."""
+        freed: List[int] = []
+        while len(freed) < want:
+            cands = self._evictable(stale_only=True)
+            if not cands and not stale_only:
+                cands = self._evictable(stale_only=False)
+            if not cands:
+                break
+            cands.sort(key=lambda nd: nd.clock)
+            for nd in cands:
+                freed += self._drop(nd)
+                if len(freed) >= want:
+                    break
+        if not self._evictable(stale_only=True):
+            self._has_stale = bool(self._stale_roots) or any(
+                nd.epoch != self._epoch for nd in self._iter_nodes())
+        return freed
+
+    def flush(self) -> List[int]:
+        """Invalidate every cached prefix (weights changed: resident KV no
+        longer matches the policy).  Evictable branches are freed now;
+        branches with live readers survive — unreachable to ``lookup`` —
+        until ``reap()`` collects them."""
+        self._epoch += 1
+        self._has_stale = True
+        return self.evict(1 << 30, stale_only=True)
+
+    def reap(self) -> List[int]:
+        """Collect stale-epoch branches whose readers have drained; called
+        once per drive round, cheap no-op when nothing is stale."""
+        if not self._has_stale:
+            return []
+        return self.evict(1 << 30, stale_only=True)
+
+    # --------------------------------------------------------- introspection
+    @property
+    def resident_pages(self) -> set:
+        return {nd.page for nd in self._iter_nodes()}
+
+    @property
+    def num_resident(self) -> int:
+        return sum(1 for _ in self._iter_nodes())

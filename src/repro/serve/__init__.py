@@ -1,0 +1,10 @@
+"""Async serving front-end: DRR admission, streaming, graceful shedding
+over the paged rollout engine (DESIGN.md §10)."""
+from repro.serve.server import (
+    AsyncLMServer,
+    ServeConfig,
+    ServerSaturated,
+    TokenStream,
+)
+
+__all__ = ["AsyncLMServer", "ServeConfig", "ServerSaturated", "TokenStream"]

@@ -1,0 +1,349 @@
+"""Serving stack: engine-level radix prefix-cache parity (cached == uncached
+greedy tokens, sublinear prefill, epoch flush on weight swap, capability
+gate), streaming contract (deltas precede completion, concatenate to it),
+and the async front-end (DRR fairness, graceful shedding, eviction instead
+of PagePoolExhausted under a saturating system-prompt mix) — DESIGN.md §10.
+
+Async tests run via ``asyncio.run`` inside plain sync tests: the container
+has no pytest-asyncio, and the server's pump is an ordinary task."""
+import asyncio
+import types
+
+import numpy as np
+import jax
+import pytest
+
+from repro.models import init_params, model_decl
+from repro.models.capabilities import CapabilityError
+from repro.models.config import ModelConfig, dense_blocks
+from repro.rl import (
+    Completion,
+    PagePoolExhausted,
+    Request,
+    RolloutConfig,
+    VOCAB_SIZE,
+)
+from repro.rl.engine import make_paged_engine
+from repro.serve import AsyncLMServer, ServeConfig, ServerSaturated
+
+PAGE = 8
+SYS = (np.arange(1, 25, dtype=np.int32) % 29 + 3)   # 24-tok shared prefix
+
+
+def tiny_cfg(**kw):
+    return ModelConfig(name="tiny", d_model=64, n_heads=4, n_kv_heads=2,
+                       head_dim=16, d_ff=128, vocab_size=VOCAB_SIZE,
+                       blocks=dense_blocks(2), seq_parallel=False,
+                       remat_policy="none", scan_layers=False, **kw)
+
+
+def prompt(i):
+    """System prompt (3 full pages) + a short per-request user suffix that
+    crosses into a partial page."""
+    return np.concatenate([SYS, np.int32([30 + i, 31 + i, 6, 7])])
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), model_decl(cfg))
+    rcfg = RolloutConfig(max_new_tokens=10, temperature=0.0, group_size=1)
+    mk = lambda **kw: make_paged_engine(
+        cfg, rcfg, num_slots=4, max_prompt_len=32, page_len=PAGE, **kw)
+    groups = [[Request(uid=i, tokens=prompt(i % 3), budget=8)]
+              for i in range(6)]
+    key = jax.random.PRNGKey(1)
+    eng_off, eng_on = mk(), mk(prefix_cache=True)
+    base = eng_off.run_groups(params, groups, key)
+    cached = eng_on.run_groups(params, groups, key)
+    return types.SimpleNamespace(
+        cfg=cfg, params=params, rcfg=rcfg, mk=mk, groups=groups, key=key,
+        eng_on=eng_on, base=base, cached=cached,
+        stats_off=dict(eng_off.stats), stats_on=dict(eng_on.stats))
+
+
+# ----------------------------------------------- engine-level prefix cache
+def test_prefix_cache_greedy_parity(setup):
+    """Resuming prefill from cached pages is numerically the same model:
+    greedy tokens match the uncached engine exactly, logps to tolerance."""
+    assert len(setup.base) == len(setup.cached) == 6
+    for a, b in zip(setup.base, setup.cached):
+        assert a.uid == b.uid
+        assert np.array_equal(a.tokens, b.tokens)
+        np.testing.assert_allclose(a.logp, b.logp, atol=2e-4,
+                                   equal_nan=True)
+
+
+def test_prefix_cache_prefill_is_counter_sublinear(setup):
+    """Six requests over three distinct prompts: the cache prefills each
+    shared chunk once, so prefill_tokens collapses well below the uncached
+    engine's (which prefills every prompt in full)."""
+    off, on = setup.stats_off, setup.stats_on
+    assert off["prompt_tokens"] == on["prompt_tokens"]
+    assert off["prefill_tokens"] == off["prompt_tokens"]
+    assert on["prefix_hit_tokens"] > 0
+    assert on["prefill_tokens"] == (
+        on["prompt_tokens"] - on["prefix_hit_tokens"])
+    # 3 distinct prompts x 28 tokens: a fresh engine prefills >= the three
+    # full prompts; every later arrival pays only its non-shared suffix
+    assert on["prefill_tokens"] < off["prefill_tokens"] * 0.65
+    assert on["prefix_hit_tokens"] / on["prompt_tokens"] >= 0.5
+
+
+def test_prefix_cache_requires_pure_attention_stack():
+    cfg = ModelConfig(name="tiny-local", d_model=64, n_heads=4, n_kv_heads=2,
+                      head_dim=16, d_ff=128, vocab_size=VOCAB_SIZE,
+                      blocks=dense_blocks(2, mixer="local"),
+                      seq_parallel=False, remat_policy="none",
+                      scan_layers=False)
+    rcfg = RolloutConfig(max_new_tokens=8, temperature=0.0, group_size=1)
+    with pytest.raises(CapabilityError, match="radix prefix cache"):
+        make_paged_engine(cfg, rcfg, num_slots=2, max_prompt_len=16,
+                          page_len=8, prefix_cache=True)
+
+
+def test_weight_swap_flushes_cached_prefixes(setup):
+    """set_params bumps the trie epoch: KV cached under the old weights
+    never matches again, and a rerun under new params equals an uncached
+    run under those params."""
+    eng = setup.eng_on
+    params2 = init_params(jax.random.PRNGKey(9), model_decl(setup.cfg))
+    eng.begin(setup.params, setup.key)
+    for g in setup.groups[:2]:
+        eng.submit_group(g)
+    eng.drain()
+    hits_before = eng.stats["prefix_hit_tokens"]
+    eng.set_params(params2)
+    for g in setup.groups[:2]:
+        eng.submit_group(g)
+    out = {c.uid: c for c in eng.drain()}
+    # same prompts again, but the old epoch's pages must NOT have matched;
+    # chunks re-prefilled under params2 MAY match between the two groups
+    assert eng.stats["prefix_hit_tokens"] <= hits_before + 3 * PAGE
+    base2 = setup.mk().run_groups(params2, setup.groups[:2], setup.key)
+    for b in base2:
+        assert np.array_equal(b.tokens, out[b.uid].tokens)
+
+
+def test_streaming_deltas_precede_completion(setup):
+    """on_token deltas for a uid always arrive before its Completion, and
+    their concatenation is exactly the completion's token array."""
+    events = []
+    eng = setup.eng_on
+    eng.begin(setup.params, setup.key,
+              on_finish=lambda c: events.append(("fin", c.uid, c)),
+              on_token=lambda u, t: events.append(("tok", u, t.copy())))
+    for g in setup.groups[:4]:
+        eng.submit_group(g)
+    while not eng.idle:
+        eng.drive()
+    fins = {u: c for k, u, c in events if k == "fin"}
+    assert len(fins) == 4
+    for uid, comp in fins.items():
+        fin_at = next(i for i, e in enumerate(events)
+                      if e[0] == "fin" and e[1] == uid)
+        deltas = [t for i, (k, u, t) in enumerate(events)
+                  if k == "tok" and u == uid]
+        late = [i for i, (k, u, _t) in enumerate(events)
+                if k == "tok" and u == uid and i > fin_at]
+        assert not late, f"uid {uid}: delta after completion"
+        got = (np.concatenate(deltas) if deltas
+               else np.zeros((0,), np.int32))
+        assert np.array_equal(got, comp.tokens)
+
+
+# -------------------------------------------------- DRR fairness (no jax)
+class FakeEngine:
+    """Just enough engine for the scheduler tests: placement order is
+    recorded, drive() hands every live request one token per round and
+    retires it at its budget."""
+
+    def __init__(self, max_new=4):
+        self.rcfg = types.SimpleNamespace(max_new_tokens=max_new)
+        self.order = []
+        self._live = []
+        self.stats = {}
+
+    def begin(self, params, key, *, on_finish=None, on_token=None):
+        self._fin, self._tok = on_finish, on_token
+
+    def submit_group(self, reqs):
+        (r,) = reqs
+        self.order.append(r.uid)
+        self._live.append([r, 0])
+
+    @property
+    def backlog(self):
+        return 0          # placement is immediate; fairness stays upstream
+
+    @property
+    def idle(self):
+        return not self._live
+
+    def drive(self):
+        done = []
+        for ent in self._live:
+            r, n = ent
+            self._tok(r.uid, np.int32([n]))
+            ent[1] = n + 1
+            if ent[1] >= (r.budget or self.rcfg.max_new_tokens):
+                done.append(ent)
+        for ent in done:
+            self._live.remove(ent)
+            r, n = ent
+            self._fin(Completion(uid=r.uid, prompt_len=len(r.tokens),
+                                 tokens=np.arange(n, dtype=np.int32),
+                                 logp=np.zeros(n), entropy=np.zeros(n),
+                                 completed=True))
+        return []
+
+
+def _uid_tenants(server, streams):
+    return {s.uid: s.tenant for s in streams}
+
+
+def test_drr_interleaves_equal_tenants():
+    """Two tenants flooding equally: admissions alternate (any prefix of
+    the admission order is within one request of balanced), so neither
+    tenant's head-of-line latency depends on the other's queue depth."""
+    async def main():
+        eng = FakeEngine()
+        # cost = 8 prompt + 56 budget = 64 = quantum -> one admission per
+        # tenant per DRR sweep
+        srv = AsyncLMServer(eng, None, None,
+                            ServeConfig(max_queue=64, max_backlog=8,
+                                        quantum=64, default_budget=56))
+        streams = [srv.submit(np.arange(8), tenant=t)
+                   for t in ["a"] * 6 for _ in range(1)]
+        streams += [srv.submit(np.arange(8), tenant="b") for _ in range(6)]
+        await srv.start()
+        await srv.drain()
+        await srv.stop()
+        tenants = _uid_tenants(srv, streams)
+        seq = [tenants[u] for u in eng.order]
+        assert sorted(seq) == ["a"] * 6 + ["b"] * 6
+        for i in range(1, len(seq) + 1):
+            na, nb = seq[:i].count("a"), seq[:i].count("b")
+            assert abs(na - nb) <= 1, f"unfair prefix {seq[:i]}"
+    asyncio.run(main())
+
+
+def test_drr_weights_bias_admission():
+    """weight 2.0 drains a tenant about twice as fast: with equal queues,
+    the heavy tenant's last admission lands well before the light one's,
+    but the light tenant is never starved out of the early admissions."""
+    async def main():
+        eng = FakeEngine()
+        srv = AsyncLMServer(eng, None, None,
+                            ServeConfig(max_queue=64, max_backlog=8,
+                                        quantum=32, default_budget=56),
+                            tenant_weights={"heavy": 2.0, "light": 1.0})
+        streams = [srv.submit(np.arange(8), tenant="heavy")
+                   for _ in range(6)]
+        streams += [srv.submit(np.arange(8), tenant="light")
+                    for _ in range(6)]
+        await srv.start()
+        await srv.drain()
+        await srv.stop()
+        tenants = _uid_tenants(srv, streams)
+        seq = [tenants[u] for u in eng.order]
+        last_heavy = max(i for i, t in enumerate(seq) if t == "heavy")
+        last_light = max(i for i, t in enumerate(seq) if t == "light")
+        assert last_heavy < last_light
+        assert "light" in seq[:4], f"light tenant starved: {seq}"
+    asyncio.run(main())
+
+
+def test_shedding_is_graceful_and_recovers():
+    """Past max_queue, submit sheds with ServerSaturated; admitted work
+    still completes, and the queue accepts again once it drains."""
+    async def main():
+        eng = FakeEngine()
+        srv = AsyncLMServer(eng, None, None,
+                            ServeConfig(max_queue=3, max_backlog=2,
+                                        quantum=64, default_budget=4))
+        streams = [srv.submit(np.arange(4)) for _ in range(3)]
+        with pytest.raises(ServerSaturated):
+            srv.submit(np.arange(4))
+        assert srv.stats["shed"] == 1
+        await srv.start()
+        await srv.drain()
+        streams.append(srv.submit(np.arange(4)))   # recovered
+        await srv.drain()
+        await srv.stop()
+        for s in streams:
+            comp = await s.result()
+            assert comp.completed
+        assert srv.stats["completed"] == 4
+    asyncio.run(main())
+
+
+# ------------------------------------------- full-stack serving (real jax)
+@pytest.fixture(scope="module")
+def small_pool(setup):
+    """2-slot engine over a deliberately tight 12-page pool: placement
+    pressure MUST be absorbed by radix eviction (one compile, reused by
+    both saturation tests — engines re-``begin`` cleanly)."""
+    return make_paged_engine(setup.cfg, setup.rcfg, num_slots=2,
+                             max_prompt_len=32, page_len=PAGE, num_pages=12,
+                             prefix_cache=True)
+
+
+def test_server_over_paged_engine_shares_and_evicts(setup, small_pool):
+    """System-prompt-heavy mix through the real engine with a pool sized
+    to force eviction: every admitted request completes and streams its
+    exact completion, the trie serves >= 50% of prompt tokens, and
+    PagePoolExhausted never surfaces."""
+    eng = small_pool
+
+    async def main():
+        srv = AsyncLMServer(
+            eng, setup.params, setup.key,
+            ServeConfig(max_queue=16, max_backlog=2, quantum=64))
+        await srv.start()
+        streams = [srv.submit(prompt(i % 3), tenant=f"t{i % 2}", max_new=6)
+                   for i in range(8)]
+
+        async def consume(st):
+            parts = []
+            async for d in st:
+                parts.append(d)
+            comp = await st.result()
+            got = (np.concatenate(parts) if parts
+                   else np.zeros((0,), np.int32))
+            assert np.array_equal(got, comp.tokens)
+            return comp
+
+        comps = await asyncio.gather(*[consume(s) for s in streams])
+        await srv.stop()
+        return comps, dict(srv.stats)
+
+    comps, stats = asyncio.run(main())
+    assert len(comps) == 8 and stats["completed"] == 8
+    assert stats["shed"] == 0
+    st = eng.stats
+    assert st["prefix_hit_tokens"] / st["prompt_tokens"] >= 0.5
+    assert st["prefill_tokens"] < st["prompt_tokens"]
+    assert srv_ttft_ok(stats)
+
+
+def srv_ttft_ok(stats):
+    # TTFT samples were collected for every completion (monotone sanity —
+    # wall-clock bounds belong to the benchmark gates, not unit tests)
+    return stats["ttft_sum"] > 0.0 and stats["ttft_max"] > 0.0
+
+
+def test_small_pool_evicts_instead_of_raising(setup, small_pool):
+    """Saturating the pool with distinct prompts evicts cold radix
+    branches (stats say so) rather than raising PagePoolExhausted."""
+    eng = small_pool
+    # 8 DISTINCT 28-token prompts: 3 full pages each + partial + decode
+    # pages >> 12-page pool -> the trie must shed cold branches
+    groups = [[Request(uid=i, tokens=np.roll(prompt(i), i), budget=4)]
+              for i in range(8)]
+    try:
+        comps = eng.run_groups(setup.params, groups, setup.key)
+    except PagePoolExhausted as e:   # pragma: no cover - the bug this pins
+        pytest.fail(f"eviction should have absorbed pool pressure: {e}")
+    assert len(comps) == 8
+    assert eng.stats["evicted_pages"] > 0
