@@ -1,0 +1,209 @@
+"""Zero re-prefill teacher forcing: the learner scores straight from the
+rollout engine's paged KV pool (DESIGN.md §11).
+
+The packed learner (bench_packed_learner.py) already stopped scoring dead
+PAD tokens — but it still RE-FORWARDS every prompt token to rebuild KV
+the rollout engine just computed.  This bench closes that loop: the paged
+engine rolls out with ``learner_retain=True``, ``export_learner_pages``
+hands the learner a compacted pool + block tables, and
+``core.layout.PagedLayout`` packs only ``[P-1, hull)`` suffixes — one
+re-forwarded token per response (the segment head, so the response's
+first token gets a true logp) instead of P.
+
+The workload is the GRPO steady state the paged arena is built for:
+P prompts x G siblings with the 80/20 straggler mix; siblings share
+prompt pages, so the exported pool is O(P), not O(B).
+
+Emitted rows (BENCH_* perf trajectory, gated in benchmarks/check_gates.py):
+  paged_learner/step                — paged train-step wall time + speedup
+                                      vs the packed baseline
+  paged_learner/prefill_token_ratio — prompt tokens the learner forwards,
+                                      paged / packed.  Ideal 1/P; CI gates
+                                      <= 0.05 (learner re-prefill ~ 0)
+  paged_learner/tokens_scored_ratio — scored tokens vs the padded grid;
+                                      gates <= 0.65 like the packed lane
+  paged_learner/logp_parity         — max |paged - dense| per-token logp
+                                      (bounded by the pool's bf16 KV
+                                      storage rounding; reported, the
+                                      hard parity pins live in
+                                      tests/test_paged_score.py)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.grpo import GRPOConfig
+from repro.core.layout import make_layout
+from repro.core.repack import bucket_ladder
+from repro.models import init_params, model_decl
+from repro.models.config import ModelConfig, dense_blocks
+from repro.models.model import score_tokens
+from repro.optim import AdamWConfig, init_opt_state
+from repro.rl import VOCAB_SIZE, Request, RolloutConfig
+from repro.rl.engine import make_paged_engine
+from repro.rl.learner import make_train_step
+
+P_PROMPTS = 8        # distinct prompts
+G = 4                # GRPO siblings per prompt -> B = 32 responses
+B = P_PROMPTS * G
+PROMPT = 24          # prompt length (what zero re-prefill eliminates)
+MAX_NEW = 64         # decode budget
+T = PROMPT + MAX_NEW
+PAGE_LEN = 16
+SEED = 0
+
+
+def _model():
+    return ModelConfig(name="bench-paged-learner", d_model=128, n_heads=8,
+                       n_kv_heads=4, head_dim=16, d_ff=256,
+                       vocab_size=VOCAB_SIZE, blocks=dense_blocks(2),
+                       seq_parallel=False, remat_policy="none",
+                       scan_layers=False)
+
+
+def _budgets() -> np.ndarray:
+    """80/20 straggler mix per group: sibling 0 runs the full budget, the
+    rest stop early (deterministic, mirrors the other perf benches)."""
+    out = np.zeros((B,), np.int32)
+    for r in range(B):
+        out[r] = MAX_NEW if r % G == 0 else 16 + (r * 7919) % 17
+    return out
+
+
+def run():
+    cfg = _model()
+    gcfg = GRPOConfig()
+    ocfg = AdamWConfig(lr=1e-4, warmup_steps=5, total_steps=1000)
+    params = init_params(jax.random.PRNGKey(SEED), model_decl(cfg))
+    opt = init_opt_state(params, ocfg)
+    rng = np.random.default_rng(SEED)
+
+    prompts = rng.integers(3, VOCAB_SIZE, size=(P_PROMPTS, PROMPT)).astype(
+        np.int32)
+    budgets = _budgets()
+    rcfg = RolloutConfig(max_new_tokens=MAX_NEW, temperature=1.0,
+                         eos_id=-1, group_size=G)
+    eng = make_paged_engine(cfg, rcfg, num_slots=8, max_prompt_len=PROMPT,
+                            steps_per_sync=8, page_len=PAGE_LEN,
+                            learner_retain=True)
+    groups = [[Request(uid=pi * G + j, tokens=prompts[pi],
+                       budget=int(budgets[pi * G + j]))
+               for j in range(G)] for pi in range(P_PROMPTS)]
+    comps = {c.uid: c for c in eng.run_groups(params, groups,
+                                              jax.random.PRNGKey(SEED + 1))}
+    uids = sorted(comps)
+    export = eng.export_learner_pages(uids)
+    pool_bytes = sum(int(a.nbytes) for a in
+                     jax.tree.leaves(export["pool"]))
+
+    # rollout-shaped dense batch (full-keep teacher forcing)
+    grid = np.zeros((B, T), np.int32)
+    rlens = np.zeros((B,), np.int32)
+    for i, u in enumerate(uids):
+        c = comps[u]
+        grid[i, :PROMPT] = prompts[u // G]
+        grid[i, PROMPT:PROMPT + c.response_len] = c.tokens
+        rlens[i] = c.response_len
+    rmask = np.zeros((B, T), np.float32)
+    for r in range(B):
+        rmask[r, PROMPT:PROMPT + rlens[r]] = 1
+    old_logp = (rng.standard_normal((B, T)) * 0.1 - 2).astype(np.float32)
+    old_logp *= rmask
+    batch = {
+        "tokens": grid,
+        "response_mask": rmask,
+        "old_logp": old_logp,
+        "advantages": rng.standard_normal(B).astype(np.float32),
+        "ht_weights": rmask,          # full keep: every response token
+        "orig_lengths": rlens.astype(np.float32),
+        "behavior_logp": old_logp,
+        "staleness": np.zeros((B,), np.float32),
+    }
+    prompt_lens = np.full((B,), PROMPT, np.int32)
+    ladder = bucket_ladder(T, 4, 128)
+
+    # packed baseline: full hull (prompt + response) per row
+    lb_pk = make_layout("packed").build(
+        batch, prompt_lens=prompt_lens, response_lens=rlens,
+        keep_len=rlens, keep_mask=rmask > 0, prefix_structured=True,
+        ladder=ladder)
+    step_pk = jax.jit(make_train_step(cfg, gcfg, ocfg, vocab_chunks=1,
+                                      packed=True))
+    jpk = {k: jnp.asarray(v) for k, v in lb_pk.data.items()}
+    t_pk = time_call(lambda bb: step_pk(params, opt, bb), jpk)
+
+    # paged: suffix-only rows + the engine's pool
+    lb_pg = make_layout("paged").build(
+        batch, prompt_lens=prompt_lens, response_lens=rlens,
+        keep_len=rlens, keep_mask=rmask > 0, prefix_structured=True,
+        ladder=ladder)
+    step_pg = jax.jit(make_train_step(cfg, gcfg, ocfg, vocab_chunks=1,
+                                      paged=True))
+    jpg = {k: jnp.asarray(v) for k, v in lb_pg.data.items()}
+    jpg["pool"] = export["pool"]
+    jpg["block_tables"] = export["block_tables"]
+    t_pg = time_call(lambda bb: step_pg(params, opt, bb), jpg)
+    eng.release_learner_pages()
+
+    # prompt tokens each learner forwards (positions < prompt_len, live)
+    def prompt_tokens(d):
+        seg = np.asarray(d["segment_ids"])
+        pos = np.asarray(d["positions"])
+        live = seg < B
+        return int((live & (pos < PROMPT)).sum())
+
+    pt_pk = prompt_tokens(lb_pk.data)         # = B * PROMPT
+    pt_pg = prompt_tokens(lb_pg.data)         # = B (segment heads only)
+    prefill_ratio = pt_pg / max(pt_pk, 1)
+    scored_ratio = lb_pg.tokens_scored / (B * T)
+
+    # parity vs the dense grid (bf16 pool rounding bound; hard pins in
+    # tests/test_paged_score.py)
+    logp_dense, _ = score_tokens(params, cfg, jnp.asarray(grid),
+                                 lengths=jnp.asarray(prompt_lens + rlens),
+                                 vocab_chunks=1)
+    logp_paged, _ = score_tokens(
+        params, cfg, jnp.asarray(lb_pg.data["tokens"]),
+        positions=jnp.asarray(lb_pg.data["positions"]),
+        segment_ids=jnp.asarray(lb_pg.data["segment_ids"]),
+        paged_prefix=export["pool"],
+        page_tables={"block_tables": export["block_tables"],
+                     "seg_start": jnp.asarray(lb_pg.data["seg_start"])},
+        vocab_chunks=1)
+    ld, lp = np.asarray(logp_dense), np.asarray(logp_paged)
+    seg = np.asarray(lb_pg.data["segment_ids"])
+    pos = np.asarray(lb_pg.data["positions"])
+    sel = (seg < B) & (pos >= PROMPT)
+    parity = float(np.abs(lp[sel] - ld[seg[sel], pos[sel]]).max())
+
+    print(f"# paged learner: B={B} ({P_PROMPTS}x{G}) T={T} prompt={PROMPT}")
+    print(f"  packed: {lb_pk.tokens_scored} tokens "
+          f"({lb_pk.num_rows}x{lb_pk.row_len}), {pt_pk} prompt tokens "
+          f"re-forwarded, {t_pk * 1e3:.1f} ms")
+    print(f"  paged:  {lb_pg.tokens_scored} tokens "
+          f"({lb_pg.num_rows}x{lb_pg.row_len}), {pt_pg} prompt tokens "
+          f"re-forwarded, {t_pg * 1e3:.1f} ms "
+          f"(pool {pool_bytes / 1e6:.2f} MB, {t_pk / t_pg:.2f}x vs packed)")
+    print(f"  prefill_token_ratio {prefill_ratio:.4f} (gate <= 0.05), "
+          f"tokens_scored_ratio {scored_ratio:.3f} (gate <= 0.65), "
+          f"logp parity {parity:.2e}")
+
+    emit("paged_learner/step", t_pg,
+         f"tokens_scored={lb_pg.tokens_scored};rows={lb_pg.num_rows};"
+         f"pack_len={lb_pg.row_len};speedup_vs_packed={t_pk / t_pg:.3f};"
+         f"pool_bytes={pool_bytes}")
+    emit("paged_learner/packed_step", t_pk,
+         f"tokens_scored={lb_pk.tokens_scored}")
+    emit("paged_learner/prefill_token_ratio", 0.0,
+         f"prefill_token_ratio={prefill_ratio:.4f};"
+         f"prompt_tokens_eliminated={pt_pk - pt_pg}")
+    emit("paged_learner/tokens_scored_ratio", 0.0,
+         f"tokens_scored_ratio={scored_ratio:.4f}")
+    emit("paged_learner/logp_parity", 0.0, f"logp_parity={parity:.6f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,108 @@
+"""Docs citation lint (blocking in the CI lint job).
+
+Two classes of rot this catches:
+
+* **Dead section citations.**  Source docstrings, tests, benchmarks and
+  the README cite design decisions as ``DESIGN.md §N`` (including list
+  forms like ``§3, §6`` and ``§8/§11``).  Every cited §N must resolve to
+  a real ``## §N`` heading in DESIGN.md — a renumbered or deleted
+  section breaks the citation, and a broken citation is worse than
+  none.
+* **Absent path references.**  README.md and ROADMAP.md must only name
+  repo paths that exist (backquoted ``src/...``-style tokens and
+  relative markdown-link targets), and must not reference absolute
+  machine-local paths (``/root/...``) that mean nothing to a reader of
+  the repo.
+
+Run it from the repo root:
+
+    python -m benchmarks.check_docs
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# one citation may carry several sections: "DESIGN.md §8/§11",
+# "DESIGN.md §3, §6, §8" — capture the whole span, then each number
+CITE_RE = re.compile(r"DESIGN\.md\s+(§\d+(?:\s*[,/]\s*§\d+)*)")
+HEADING_RE = re.compile(r"^## §(\d+)\b", re.M)
+
+# repo-relative path tokens inside backticks; a trailing ::Symbol names
+# a member inside the file and is not part of the path
+PATH_TOKEN_RE = re.compile(
+    r"`((?:src|docs|tests|benchmarks|examples|configs)/[\w./-]+)"
+    r"(?:::[\w.]+)?`")
+MD_LINK_RE = re.compile(r"\]\(([^)#]+?)(?:#[^)]*)?\)")
+ABS_PATH_RE = re.compile(r"/root/[\w./-]+")
+
+CITE_GLOBS = ("src/**/*.py", "tests/**/*.py", "benchmarks/**/*.py",
+              "docs/**/*.md", "README.md")
+PATH_FILES = ("README.md", "ROADMAP.md")
+
+
+def design_sections() -> set[int]:
+    return {int(n) for n in
+            HEADING_RE.findall((ROOT / "DESIGN.md").read_text())}
+
+
+def check_citations(errors: list[str]) -> int:
+    known = design_sections()
+    seen = 0
+    for pattern in CITE_GLOBS:
+        for path in sorted(ROOT.glob(pattern)):
+            rel = path.relative_to(ROOT)
+            for i, line in enumerate(path.read_text().splitlines(), 1):
+                for span in CITE_RE.findall(line):
+                    for num in re.findall(r"\d+", span):
+                        seen += 1
+                        if int(num) not in known:
+                            errors.append(
+                                f"{rel}:{i}: cites DESIGN.md §{num} but "
+                                f"DESIGN.md has no '## §{num}' heading")
+    return seen
+
+
+def check_paths(errors: list[str]) -> int:
+    seen = 0
+    for name in PATH_FILES:
+        path = ROOT / name
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            for target in ABS_PATH_RE.findall(line):
+                errors.append(
+                    f"{name}:{i}: references machine-local path "
+                    f"'{target}' — use a repo-relative path or drop it")
+            tokens = PATH_TOKEN_RE.findall(line)
+            if name.endswith(".md"):
+                tokens += [t for t in MD_LINK_RE.findall(line)
+                           if "://" not in t and not t.startswith("/")]
+            for target in tokens:
+                seen += 1
+                if not (ROOT / target).exists():
+                    errors.append(
+                        f"{name}:{i}: references '{target}' which does "
+                        f"not exist in the repo")
+    return seen
+
+
+def main() -> int:
+    errors: list[str] = []
+    n_cites = check_citations(errors)
+    n_paths = check_paths(errors)
+    if errors:
+        for e in errors:
+            print(f"check_docs: {e}", file=sys.stderr)
+        print(f"check_docs: FAIL ({len(errors)} problem(s))",
+              file=sys.stderr)
+        return 1
+    print(f"check_docs: OK — {n_cites} section citations resolve "
+          f"({sorted(design_sections())} known), {n_paths} path "
+          f"references exist")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

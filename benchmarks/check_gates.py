@@ -81,6 +81,13 @@ CEILINGS = {
     "serving/prefill_token_ratio": ("prefill_token_ratio", 0.5),
     # mean time-to-first-token under the load-gen mix, wall clock
     "serving/ttft_ms": ("ttft_ms", 10_000.0),
+    # zero re-prefill teacher forcing (DESIGN.md §11): the paged learner
+    # re-forwards ONE prompt token per response (the segment head), never
+    # the prompt — ideal 1/P, gated well under re-prefilling anything
+    "paged_learner/prefill_token_ratio": ("prefill_token_ratio", 0.05),
+    # and its scored-token budget must keep beating the padded grid at
+    # least as hard as the packed lane does
+    "paged_learner/tokens_scored_ratio": ("tokens_scored_ratio", 0.65),
 }
 REL_REGRESSION = 0.10  # gated metrics may not regress >10% vs the baseline
 # rows gated ONLY by their absolute bound: a ratio of (or a raw) CPU wall

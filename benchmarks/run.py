@@ -27,7 +27,7 @@ def main():
     ap.add_argument("--only", default="",
                     help="comma list: unbiasedness,gradnorm,matrix,ratio,"
                          "efficiency,quality,rollout,async,packed,paged,"
-                         "serving,roofline")
+                         "paged_learner,serving,roofline")
     ap.add_argument("--json", default="",
                     help="write aggregated machine-readable results here")
     args = ap.parse_args()
@@ -72,6 +72,10 @@ def main():
     if on("paged"):
         from benchmarks import bench_paged_decode
         bench_paged_decode.run()
+        print()
+    if on("paged_learner"):
+        from benchmarks import bench_paged_learner
+        bench_paged_learner.run()
         print()
     if on("serving"):
         from benchmarks import bench_serving

@@ -17,6 +17,7 @@ from repro.core.layout import (
     LayoutBatch,
     PackedLayout,
     PaddedLayout,
+    PagedLayout,
     build_microbatches,
     layout_names,
     make_layout,
@@ -48,8 +49,8 @@ __all__ = [
     "group_advantages", "kl_k3", "nat_grpo_loss",
     "token_entropy_from_logits", "token_logprobs_from_logits",
     "BatchLayout", "BucketedLayout", "LayoutBatch", "PackedLayout",
-    "PaddedLayout", "build_microbatches", "layout_names", "make_layout",
-    "plan_pack",
+    "PaddedLayout", "PagedLayout", "build_microbatches", "layout_names",
+    "make_layout", "plan_pack",
     "RepackPlan", "apply_plan", "bucket_ladder", "expected_token_savings",
     "pick_bucket", "plan_microbatches", "repack_batch",
     "DetTruncSelector", "EntropySelector", "FullSelector", "RPCSelector",

@@ -219,6 +219,97 @@ class PackedLayout(BatchLayout):
                            num_rows=rows, row_len=pack_len)
 
 
+@dataclasses.dataclass
+class PagedLayout(BatchLayout):
+    """Suffix-only packing for zero re-prefill scoring (DESIGN.md §11).
+
+    Where ``PackedLayout`` packs each response's FULL hull (prompt +
+    response), this layout packs only the suffix ``[P-1, hull)`` — the last
+    prompt token plus the kept-span hull of the response — because the
+    prompt's K/V already exists in the rollout engine's page pool.  The
+    learner scores these rows with ``score_tokens(paged_prefix=...)``: the
+    paged prefill kernel attends each suffix token to pool positions
+    ``[0, seg_start)`` via the block table plus the in-batch suffix keys.
+    The last prompt token is re-forwarded (one token, not P) so the
+    response's first token gets a true logp; its own logp slot is zeroed by
+    the segment-start rule, same as any packed segment head.
+
+    Kernel contract (pinned by tests/test_paged_score.py):
+      * segment ids ARE response indices ``src`` in [0, B) — the kernel
+        indexes ``block_tables[s]`` / ``seg_start[s]`` by segment id, and
+        the engine's ``export_learner_pages`` emits row ``s`` for response
+        ``s``.  S = B statically, even for responses with no kept tokens
+        (their segments are empty; the kernels skip them).
+      * every segment's row offset and allotted length are multiples of
+        ``qblock`` (= ``models.attention.PAGED_SCORE_BLOCK``), so each
+        kernel query block is single-segment (+ PAD tail).
+      * ids are NOT per-row monotone (unlike PackedLayout): the suffix
+        kernel's min/max block-range skip just sees wider intervals —
+        correctness is by per-token equality either way.
+
+    Emits ``seg_start`` (B,) — the absolute position of each segment's
+    first suffix token (= clamped ``prompt_len - 1``); pool visibility is
+    ``pos < seg_start[s]``, which also hides the pool's duplicate of the
+    last prompt token.  ``positions`` stay absolute, so rope is exact.
+    """
+
+    qblock: int = 16
+    name: str = "paged"
+    packed: bool = True
+
+    def build(self, batch, *, prompt_lens, response_lens, keep_len,
+              keep_mask, prefix_structured, ladder) -> LayoutBatch:
+        b, t = batch["tokens"].shape[:2]
+        keep_mask = np.asarray(keep_mask).astype(bool)
+        kept = int(keep_mask.sum())
+        any_kept = keep_mask.any(axis=1)
+        hull = np.where(any_kept,
+                        t - np.argmax(keep_mask[:, ::-1], axis=1), 0)
+        start = np.minimum(np.maximum(np.asarray(prompt_lens, np.int64) - 1,
+                                      0), t - 1)
+        slen = np.where(any_kept, np.maximum(hull - start, 0), 0)
+        slen = slen.astype(np.int64)
+        alen = -(-slen // self.qblock) * self.qblock
+
+        pack_len = pick_bucket(int(max(alen.max(), 1)), ladder)
+        pack_len = -(-max(pack_len, int(alen.max())) // self.qblock)
+        pack_len *= self.qblock
+        plan = plan_pack(alen, pack_len)
+        rows = max(len(plan), 1)
+
+        data = {}
+        for key, v in batch.items():
+            if key == "lengths":
+                continue  # padded-grid key mask; meaningless once packed
+            if getattr(v, "ndim", 0) >= 2:
+                data[key] = np.zeros((rows, pack_len) + v.shape[2:], v.dtype)
+            else:
+                data[key] = v  # per-response leaves ride through as (B,)
+        positions = np.zeros((rows, pack_len), np.int32)
+        segment_ids = np.full((rows, pack_len), PAD_SEGMENT, np.int32)
+        resp_ids = np.zeros((rows, pack_len), np.int32)
+
+        for r, row in enumerate(plan):
+            off = 0
+            for src in row:
+                s0, n = int(start[src]), int(slen[src])
+                for key, v in batch.items():
+                    if key != "lengths" and getattr(v, "ndim", 0) >= 2:
+                        data[key][r, off:off + n] = v[src, s0:s0 + n]
+                positions[r, off:off + n] = np.arange(s0, s0 + n,
+                                                      dtype=np.int32)
+                segment_ids[r, off:off + n] = src
+                resp_ids[r, off:off + n] = src
+                off += int(alen[src])  # next segment stays qblock-aligned
+        data["positions"] = positions
+        data["segment_ids"] = segment_ids
+        data["resp_ids"] = resp_ids
+        data["seg_start"] = start.astype(np.int32)
+        return LayoutBatch(data=data, packed=True,
+                           tokens_scored=rows * pack_len, kept_tokens=kept,
+                           num_rows=rows, row_len=pack_len)
+
+
 def build_microbatches(
     layout: BatchLayout,
     batch: dict,
@@ -291,6 +382,7 @@ _LAYOUTS = {
     "padded": PaddedLayout,
     "bucketed": BucketedLayout,
     "packed": PackedLayout,
+    "paged": PagedLayout,
 }
 
 

@@ -1,3 +1,14 @@
+"""Fused Horvitz-Thompson GRPO loss kernels (DESIGN.md §2/§4).
+
+Package shape shared with ``kernels/prefix_attn`` and
+``kernels/paged_attn`` (see docs/kernels.md): ``ref.py`` pure-jnp
+oracles, ``kernel.py`` Pallas grids, ``ops.py`` jit-friendly wrappers.
+``fused_token_logprobs`` streams the vocab projection in chunks so the
+full ``(B, T, V)`` logits tensor never materializes;
+``fused_score_grid`` fuses gather + log-softmax + the HT-weighted
+clipped-ratio loss over the score grid, skipping compute past each
+row's prefix cut.
+"""
 from repro.kernels.ht_loss.ops import fused_score_grid, fused_token_logprobs
 from repro.kernels.ht_loss.ref import ht_grpo_loss_ref, logprob_ref
 

@@ -1,9 +1,23 @@
+"""Paged attention kernels over a block-table KV pool (DESIGN.md §8/§11).
+
+Package shape shared with ``kernels/ht_loss`` and ``kernels/prefix_attn``
+(see docs/kernels.md): ``ref.py`` pure-jnp oracles, ``kernel.py`` Pallas
+grids, ``ops.py`` jit-friendly wrappers (the prefill one carries the
+custom_vjp).  Decode scores one token per slot against its block-table
+pages; prefill scores a PagedLayout suffix batch against pool pages plus
+packed suffix KV under one online softmax, with an exact backward that
+scatter-adds pool gradients through the block table.
+"""
 from repro.kernels.paged_attn.kernel import (
-    paged_decode_pallas, paged_mla_decode_pallas,
+    paged_decode_pallas, paged_mla_decode_pallas, paged_prefill_fwd_pallas,
+    paged_prefill_bwd_dq_pallas, paged_prefill_bwd_dkv_pallas,
 )
-from repro.kernels.paged_attn.ops import paged_attention, paged_mla_attention
+from repro.kernels.paged_attn.ops import (
+    paged_attention, paged_mla_attention, paged_prefill_attention,
+    paged_prefill_attention_bthd,
+)
 from repro.kernels.paged_attn.ref import (
-    paged_attention_ref, paged_mla_attention_ref,
+    paged_attention_ref, paged_mla_attention_ref, paged_prefill_attention_ref,
 )
 
 __all__ = [
@@ -13,4 +27,10 @@ __all__ = [
     "paged_mla_attention",
     "paged_mla_attention_ref",
     "paged_mla_decode_pallas",
+    "paged_prefill_attention",
+    "paged_prefill_attention_bthd",
+    "paged_prefill_attention_ref",
+    "paged_prefill_bwd_dkv_pallas",
+    "paged_prefill_bwd_dq_pallas",
+    "paged_prefill_fwd_pallas",
 ]

@@ -1,7 +1,7 @@
-"""Pure-jnp oracle for paged decode attention.
+"""Pure-jnp oracles for paged attention (decode and prefill).
 
-Semantics shared with the kernel (and with ``models/attention.py``'s
-paged decode path):
+Semantics shared with the kernels (and with ``models/attention.py``'s
+paged paths):
   * the KV store is a pool of ``(num_pages, page_len)`` pages per layer;
     a slot's logical KV sequence is the concatenation of the pages named
     by its ``block_tables`` row, in row order,
@@ -85,3 +85,71 @@ def paged_mla_attention_ref(q_abs, q_rope, c_pages, kr_pages, pos_pages,
     o = o / jnp.maximum(l, 1e-30)[..., None]
     o = jnp.where((l > 0)[..., None], o, 0.0)
     return o.astype(q_abs.dtype)
+
+
+def paged_prefill_attention_ref(q, k, v, segment_ids, seg_start,
+                                block_tables, k_pages, v_pages, pos_pages):
+    """Oracle for the fused pool+suffix prefill kernel.
+
+    Mirrors the KERNEL's decomposition (f32 upcast, -inf masking with an
+    isfinite guard, explicit max-subtract) and its masks exactly:
+      * pool keys: same segment AND ``0 <= pos < seg_start[seg]`` (the
+        pool's duplicate of the last prompt token is excluded — the
+        suffix recomputes that position),
+      * suffix keys: causal in the packed row AND equal segment ids
+        (PAD tokens match PAD tokens, as in the packed kernel; their
+        output is garbage-but-deterministic and never read).
+
+    q (R, H, T, D); k/v (R, KV, T, D); segment_ids (R, T); seg_start
+    (S,); block_tables (S, M); k/v_pages (P, page_len, KV, D);
+    pos_pages (P, page_len).  Returns (o (R, H, T, D), lse (R, H, T))."""
+    r, h, t, d = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    s_count, m = block_tables.shape
+    plen = pos_pages.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(F32)
+
+    seg = segment_ids.astype(jnp.int32)
+    segv = (seg >= 0) & (seg < s_count)
+    segc = jnp.where(segv, seg, 0)
+
+    bt = jnp.maximum(block_tables, 0)
+    kpool = k_pages[bt].reshape(s_count, m * plen, kvh, d)   # (S, L, KV, D)
+    vpool = v_pages[bt].reshape(s_count, m * plen, kvh, d)
+    ppool = jnp.where(block_tables[..., None] >= 0,
+                      pos_pages[bt], -1).reshape(s_count, m * plen)
+
+    kp = kpool[segc]                                         # (R, T, L, KV, D)
+    vp = vpool[segc]
+    posp = ppool[segc]                                       # (R, T, L)
+
+    q4 = q.reshape(r, kvh, g, t, d).astype(F32)
+    sc_pool = jnp.einsum("rkgtd,rtlkd->rkgtl", q4,
+                         kp.astype(F32)) * scale
+    sc_sfx = jnp.einsum("rkgtd,rksd->rkgts", q4,
+                        k.astype(F32)) * scale
+
+    m_pool = (segv[:, :, None] & (posp >= 0)
+              & (posp < seg_start[segc][:, :, None]))        # (R, T, L)
+    ti = jnp.arange(t)
+    m_sfx = ((ti[None, :, None] >= ti[None, None, :])
+             & (seg[:, :, None] == seg[:, None, :]))         # (R, T, T)
+
+    sc = jnp.concatenate([sc_pool, sc_sfx], axis=-1)
+    mask = jnp.concatenate([m_pool, m_sfx], axis=-1)[:, None, None]
+    sc = jnp.where(mask, sc, -jnp.inf)
+    mx = jnp.max(sc, axis=-1)
+    mx_safe = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    pr = jnp.exp(sc - mx_safe[..., None])
+    pr = jnp.where(mask, pr, 0.0)
+    l = jnp.sum(pr, axis=-1)
+    o = (jnp.einsum("rkgtl,rtlkd->rkgtd", pr[..., :m * plen],
+                    vp.astype(F32))
+         + jnp.einsum("rkgts,rksd->rkgtd", pr[..., m * plen:],
+                      v.astype(F32)))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    o = jnp.where((l > 0)[..., None], o, 0.0)
+    lse = jnp.where(l > 0, mx_safe + jnp.log(jnp.maximum(l, 1e-30)), 0.0)
+    return (o.reshape(r, h, t, d).astype(q.dtype),
+            lse.reshape(r, h, t).astype(F32))

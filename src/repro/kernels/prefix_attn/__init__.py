@@ -1,3 +1,14 @@
+"""Prefix-aware and packed (segment-id block-sparse) flash attention
+(DESIGN.md §4/§7).
+
+Package shape shared with ``kernels/ht_loss`` and ``kernels/paged_attn``
+(see docs/kernels.md): ``ref.py`` pure-jnp oracles, ``kernel.py`` Pallas
+grids, ``ops.py`` jit-friendly wrappers.  ``prefix_flash_attention``
+skips whole key blocks past each row's prefix cut;
+``packed_flash_attention`` adds segment-id block sparsity so bin-packed
+rows never attend across packed neighbors — per-token logp stays
+bitwise identical to the padded grid.
+"""
 from repro.kernels.prefix_attn.ops import (
     attention_bthd,
     packed_attention_bthd,

@@ -500,3 +500,114 @@ def image_kv_from_embeds(p, image_embeds: Array) -> tuple:
     k = jnp.einsum("bnd,dhk->bnhk", image_embeds, p["wk"])
     v = jnp.einsum("bnd,dhk->bnhk", image_embeds, p["wv"])
     return k, v
+
+
+# --------------------------------------------- paged teacher forcing (§11)
+# Query-block quantum of the paged scoring path: PagedLayout aligns every
+# segment start and length to this, so each kernel query block is
+# single-segment.  core/layout.py's PagedLayout.qblock must equal it
+# (pinned by tests/test_paged_score.py).  16 fits CPU/interpret smoke
+# scale; raise both together to 128 on real TPUs.
+PAGED_SCORE_BLOCK = 16
+
+
+def paged_score_attention(
+    p,
+    x: Array,
+    positions: Array,
+    *,
+    rope_theta: float,
+    segment_ids: Array,
+    pool: dict,
+    block_tables: Array,
+    seg_start: Array,
+    impl: str = "ref",
+) -> tuple:
+    """Packed-suffix teacher forcing against the rollout KV pool
+    (DESIGN.md §11) — zero re-prefill scoring.
+
+    ``x`` holds a PagedLayout batch: packed rows of per-response suffixes
+    (last prompt token + response hull), segment ids doubling as indices
+    into ``seg_start (S,)`` / ``block_tables (S, M)``, ``positions``
+    absolute.  Each suffix token attends to its segment's PROMPT KV
+    (positions ``[0, seg_start)``) read from the pool pages, plus the
+    packed suffix causally.  The pool is wrapped in ``stop_gradient``:
+    it belongs to the rollout policy, so prompt-KV gradient paths are
+    dropped by design — exact at staleness 0 (where rollout and learner
+    params agree the forward is exact too); response-side gradients are
+    always exact.
+
+    ``impl="kernel"`` routes through the Pallas prefill kernel (pages via
+    block-table index maps, custom vjp); ``"ref"`` is the jnp gather
+    path.  As with ``paged_decode_attention``, two references exist on
+    purpose: this ref mirrors the dense packed path's op sequence (same
+    einsum forms, NEG_INF mask, one ``jax.nn.softmax``) for logp parity
+    with ``score_tokens``'s dense layouts, while
+    ``kernels/paged_attn/ref.py`` mirrors the KERNEL's decomposition as
+    its test oracle.  Returns (out (B, T, d_model), (k, v))."""
+    b, t, _ = x.shape
+    h = p["wq"].shape[1]
+    kvh = p["wk"].shape[1]
+    g = h // kvh
+    dh = p["wq"].shape[2]
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    scale = 1.0 / jnp.sqrt(dh).astype(F32)
+
+    kp_pool = jax.lax.stop_gradient(pool["k"])
+    vp_pool = jax.lax.stop_gradient(pool["v"])
+    pos_pool = pool["pos"]
+    s_count = seg_start.shape[0]
+
+    if impl == "kernel":
+        from repro.kernels.paged_attn import paged_prefill_attention_bthd
+
+        o = paged_prefill_attention_bthd(
+            q, k, v, segment_ids, seg_start, block_tables,
+            kp_pool, vp_pool, pos_pool,
+            bq=PAGED_SCORE_BLOCK, bk=PAGED_SCORE_BLOCK)
+        out = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+        return out, (k, v)
+
+    seg = segment_ids.astype(jnp.int32)
+    segv = (seg >= 0) & (seg < s_count)
+    segc = jnp.where(segv, seg, 0)
+
+    bt = jnp.maximum(block_tables, 0)
+    m = block_tables.shape[1]
+    kpool = kp_pool[bt]                     # (S, M, page_len, KV, D)
+    plen = kpool.shape[2]
+    kpool = kpool.reshape(s_count, m * plen, kvh, dh)
+    vpool = vp_pool[bt].reshape(s_count, m * plen, kvh, dh)
+    ppool = jnp.where(block_tables[..., None] >= 0,
+                      pos_pool[bt], -1).reshape(s_count, m * plen)
+
+    kp = kpool[segc]                        # (B, T, L, KV, D) per-token
+    vp = vpool[segc]
+    posp = ppool[segc]                      # (B, T, L)
+
+    # group-indexed einsums: no kv repeat of the (B, T, L, KV, D) gather
+    q4 = q.reshape(b, t, kvh, g, dh)
+    sc_pre = jnp.einsum("btkgd,btlkd->bkgtl", q4, kp.astype(q.dtype),
+                        preferred_element_type=F32) * scale
+    sc_sfx = jnp.einsum("btkgd,bskd->bkgts", q4, k,
+                        preferred_element_type=F32) * scale
+
+    # prompt KV only (pos < seg_start): the pool's duplicate of the last
+    # prompt token is excluded — this forward recomputes it fresh.  No
+    # per-query comparison needed: every suffix position >= seg_start.
+    m_pre = (segv[:, :, None] & (posp >= 0)
+             & (posp < seg_start[segc][:, :, None]))       # (B, T, L)
+    m_sfx = segment_mask(segment_ids, positions)[:, 0]     # (B, T, T)
+
+    sc = jnp.concatenate([sc_pre, sc_sfx], axis=-1)
+    mask = jnp.concatenate([m_pre, m_sfx], axis=-1)[:, None, None]
+    sc = jnp.where(mask, sc, NEG_INF)
+    pa = jax.nn.softmax(sc, axis=-1).astype(v.dtype)
+    o = (jnp.einsum("bkgtl,btlkd->btkgd", pa[..., :m * plen], vp)
+         + jnp.einsum("bkgts,bskd->btkgd", pa[..., m * plen:], v))
+    out = jnp.einsum("bthk,hkd->btd", o.reshape(b, t, h, dh), p["wo"])
+    return out, (k, v)

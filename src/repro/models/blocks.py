@@ -73,6 +73,9 @@ def block_apply(
     shard=None,
     segment_ids: Optional[Array] = None,
     prefix_kv: Optional[dict] = None,
+    paged_prefix: Optional[dict] = None,
+    page_tables: Optional[dict] = None,
+    paged_impl: str = "ref",
 ):
     """Full-sequence application.  Returns (x, cache_entry_or_None, aux).
 
@@ -85,6 +88,14 @@ def block_apply(
     ``prefix_kv`` is this layer's cached-prefix K/V for partial-prefix
     prefill resume (radix prefix cache) — only the global-attention mixer
     supports it; the capability table gates configs before we get here.
+
+    ``paged_prefix`` (this layer's rollout pool {"k"/"v"/"pos"}) +
+    ``page_tables`` ({"block_tables" (S, M), "seg_start" (S,)}) select the
+    zero-re-prefill scoring path (DESIGN.md §11): the row holds response
+    suffixes and prompt KV is read straight from the pool pages.  Also
+    gated to the global-attention mixer by the capability table
+    (``check_paged_score``); ``paged_impl`` picks the jnp gather ref or
+    the Pallas prefill kernel.
     """
     mixer = cfg.mixer_of(kind)
     mlp = cfg.mlp_of(kind)
@@ -94,10 +105,22 @@ def block_apply(
         raise caps.CapabilityError(
             f"partial-prefix prefill resume requires the 'attn' mixer "
             f"(full-KV pool pages); got {mixer!r}")
+    if paged_prefix is not None and mixer != "attn":
+        raise caps.CapabilityError(
+            f"paged scoring requires the 'attn' mixer "
+            f"(full-KV pool pages); got {mixer!r}")
     aux = jnp.zeros((), jnp.float32)
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
     cache_entry = None
-    if mixer in ("attn", "local"):
+    if mixer == "attn" and paged_prefix is not None:
+        out, (k, v) = attn.paged_score_attention(
+            p["mixer"], h, positions, rope_theta=cfg.rope_theta,
+            segment_ids=segment_ids, pool=paged_prefix,
+            block_tables=page_tables["block_tables"],
+            seg_start=page_tables["seg_start"], impl=paged_impl)
+        if collect_cache:
+            cache_entry = {"k": k, "v": v}
+    elif mixer in ("attn", "local"):
         out, (k, v) = attn.self_attention(
             p["mixer"], h, positions, window=_window_of(cfg, mixer),
             rope_theta=cfg.rope_theta, lengths=lengths,

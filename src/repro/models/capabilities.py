@@ -188,6 +188,34 @@ def check_prefix_cache(cfg: ModelConfig) -> None:
         f"{describe_row(bad)}")
 
 
+def paged_score_ok(cfg: ModelConfig) -> bool:
+    """True when the learner can teacher-force directly from the rollout
+    engine's paged KV pool (zero re-prefill scoring, DESIGN.md §11): every
+    mixer must be global attention, whose pool pages hold the complete
+    per-token state (post-rope K/V) the paged prefill kernel consumes.
+    Window rings and ssm/rec states are per-slot (gone once the slot is
+    recycled) and MLA latents would need a latent-score kernel."""
+    return not cfg.num_codebooks and all(
+        m == "attn" for m in config_mixers(cfg))
+
+
+def check_paged_score(cfg: ModelConfig) -> None:
+    """Config-time gate for learner page-backed scoring
+    (``score_tokens(paged_prefix=...)`` / ``make_train_step(paged=True)``)."""
+    if paged_score_ok(cfg):
+        return
+    if cfg.num_codebooks:
+        raise CapabilityError(
+            "paged scoring is illegal for this config — num_codebooks="
+            f"{cfg.num_codebooks}: the paged pool serves single-plane "
+            "token streams")
+    bad = next(m for m in config_mixers(cfg) if m != "attn")
+    raise CapabilityError(
+        "zero re-prefill (paged) scoring requires a pure global-attention "
+        f"stack (full-KV pool pages feed the paged prefill kernel) — "
+        f"{describe_row(bad)}")
+
+
 def pool_resident(kind: str) -> bool:
     """True when this mixer's per-token state lives in the shared page pool
     (so group prefix pages can be refcount-shared / parked siblings can

@@ -83,6 +83,9 @@ def forward_hidden(
     rules: ShardingRules = DEFAULT_RULES,
     collect_cache: bool = False,
     prefix_kv: Optional[dict] = None,
+    paged_prefix: Optional[dict] = None,
+    page_tables: Optional[dict] = None,
+    paged_impl: str = "ref",
 ):
     """tokens: (B, T) int32 (or (B, T, K) codebook grid).
 
@@ -100,9 +103,24 @@ def forward_hidden(
     (the capability table restricts this path to pure global-attention
     stacks).
 
+    ``paged_prefix`` + ``page_tables`` select zero-re-prefill scoring from
+    the rollout KV pool (DESIGN.md §11): a tree of the same shape holding
+    each layer's pool pages ``{"k"/"v": (repeat, P, page_len, KV, D),
+    "pos": (repeat, P, page_len)}``, with ``page_tables`` =
+    ``{"block_tables": (S, M), "seg_start": (S,)}`` shared by all layers.
+    ``tokens`` is then a PagedLayout batch of response suffixes
+    (``segment_ids`` required, ids = segment indices); mutually exclusive
+    with ``prefix_kv``; gated to pure global-attention stacks by
+    ``capabilities.check_paged_score``.
+
     Returns (hidden (B, T, D) after final norm, caches or None, aux scalar).
     Caches (when collected) are per-group dicts of stacked prefill entries.
     """
+    assert prefix_kv is None or paged_prefix is None, \
+        "prefix_kv and paged_prefix are mutually exclusive"
+    if paged_prefix is not None:
+        assert page_tables is not None and segment_ids is not None
+        caps.check_paged_score(cfg)
     shard = _make_shard(cfg, mesh, rules)
     bsz, t = tokens.shape[:2]
     scale = math.sqrt(cfg.d_model) if cfg.emb_scale_by_dim else None
@@ -117,10 +135,17 @@ def forward_hidden(
     for gi, (pattern, repeat) in enumerate(cfg.blocks):
         gp = params[f"group{gi}"]
         pfx_g = None if prefix_kv is None else prefix_kv[f"group{gi}"]
+        pgd_g = None if paged_prefix is None else paged_prefix[f"group{gi}"]
+        # extra per-layer tree scanned alongside the params (at most one of
+        # prefix_kv / paged_prefix is set); page_tables stays a closure —
+        # block tables are shared by every layer, not per-layer state
+        ext_g = pfx_g if pfx_g is not None else pgd_g
 
         def body(carry, xs, _pattern=pattern):
             xx = carry
-            layer_p, pfx_l = xs if prefix_kv is not None else (xs, None)
+            layer_p, ext_l = xs if ext_g is not None else (xs, None)
+            pfx_l = ext_l if prefix_kv is not None else None
+            pgd_l = ext_l if paged_prefix is not None else None
             entries = {}
             aux = jnp.zeros((), jnp.float32)
             for j, kind in enumerate(_pattern):
@@ -130,7 +155,9 @@ def forward_hidden(
                     image_embeds=image_embeds,
                     collect_cache=collect_cache, shard=shard,
                     segment_ids=segment_ids,
-                    prefix_kv=None if pfx_l is None else pfx_l[f"l{j}"])
+                    prefix_kv=None if pfx_l is None else pfx_l[f"l{j}"],
+                    paged_prefix=None if pgd_l is None else pgd_l[f"l{j}"],
+                    page_tables=page_tables, paged_impl=paged_impl)
                 if collect_cache:
                     entries[f"l{j}"] = ce
                 aux = aux + a
@@ -138,15 +165,15 @@ def forward_hidden(
 
         body = _remat(cfg, body)
         if cfg.scan_layers and repeat > 1:
-            xs = gp if prefix_kv is None else (gp, pfx_g)
+            xs = gp if ext_g is None else (gp, ext_g)
             x, (entries, aux) = jax.lax.scan(body, x, xs)
             aux = jnp.sum(aux)
         else:
             entries_list, aux = [], jnp.zeros((), jnp.float32)
             for r in range(repeat):
                 lp = jax.tree.map(lambda a: a[r], gp)
-                xs = lp if prefix_kv is None else (
-                    lp, jax.tree.map(lambda a: a[r], pfx_g))
+                xs = lp if ext_g is None else (
+                    lp, jax.tree.map(lambda a: a[r], ext_g))
                 x, (e, a) = body(x, xs)
                 entries_list.append(e)
                 aux = aux + a
@@ -176,6 +203,9 @@ def score_tokens(
     rules: ShardingRules = DEFAULT_RULES,
     with_entropy: bool = False,
     vocab_chunks: int = 8,
+    paged_prefix: Optional[dict] = None,
+    page_tables: Optional[dict] = None,
+    paged_impl: str = "ref",
 ):
     """Per-token logprobs on the (B, T) grid.
 
@@ -188,11 +218,19 @@ def score_tokens(
     segment START is zeroed — its left neighbor in the packed row belongs
     to a different sequence, exactly as ``logp[:, 0]`` has no predecessor
     on the padded grid.
+
+    Paged layout (``paged_prefix`` + ``page_tables``, DESIGN.md §11): each
+    packed segment is [last prompt token, response...] and the prompt KV
+    comes from the rollout pool — zero re-prefill.  The segment-start rule
+    above zeroes the last prompt token's slot, and the response's first
+    token gets its true logp because its predecessor (the last prompt
+    token) IS in the batch, attending over the pooled prompt.
     """
     hidden, _, aux = forward_hidden(
         params, cfg, tokens, positions=positions, lengths=lengths,
         segment_ids=segment_ids, image_embeds=image_embeds,
-        mesh=mesh, rules=rules)
+        mesh=mesh, rules=rules, paged_prefix=paged_prefix,
+        page_tables=page_tables, paged_impl=paged_impl)
     shard = _make_shard(cfg, mesh, rules)
     w = head_weight(params.get("head", {}), params["embed"], cfg.tie_embeddings)
     h = hidden[:, :-1]

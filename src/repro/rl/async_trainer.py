@@ -265,6 +265,16 @@ class AsyncNATGRPOTrainer:
             # fail at config time, naming the capability-table row, rather
             # than silently falling back or erroring steps later in-jit
             caps.check_packed(model_cfg)
+        if layout_name == "paged":
+            # the paged layout needs the page handoff from a learner-retain
+            # rollout session (export_learner_pages), which this trainer's
+            # replay/checkpoint contract does not carry yet — drive it via
+            # rl.learner.make_train_step(paged=True) directly (DESIGN.md §11)
+            raise NotImplementedError(
+                "NATTrainerConfig(layout='paged') is not wired into the "
+                "async trainer; use core.layout.PagedLayout + "
+                "rl.learner.make_train_step(paged=True) with a "
+                "learner_retain paged engine (DESIGN.md §11)")
         self.layout = make_layout(layout_name, **dict(tcfg.layout_kwargs))
         self._train_step = jax.jit(make_train_step(
             model_cfg, tcfg.grpo, tcfg.adamw, mesh=mesh, rules=rules,

@@ -624,6 +624,13 @@ class PagedEngineConfig:
     # only fixed-params serving benefits (pure-attention configs only —
     # see capabilities.check_prefix_cache).
     prefix_cache: bool = False
+    # zero re-prefill learner handoff (DESIGN.md §11): every harvested
+    # completion's prompt pages take an extra refcount reference so the
+    # learner can score straight from the pool (export_learner_pages);
+    # the reference survives radix eviction and the set_params epoch
+    # flush, and is dropped by release_learner_pages after the grad step.
+    # Pure-attention configs only (capabilities.check_paged_score).
+    learner_retain: bool = False
 
     @property
     def lanes(self) -> int:
@@ -737,6 +744,8 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
         caps.check_paged(cfg)
         if ecfg.prefix_cache:
             caps.check_prefix_cache(cfg)
+        if ecfg.learner_retain:
+            caps.check_paged_score(cfg)
         pl_ = ecfg.page_len
         self._n_pp = -(-ecfg.max_prompt_len // pl_)    # max prompt pages
         self._n_dp = -(-rcfg.max_new_tokens // pl_)    # max decode pages
@@ -768,6 +777,10 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
         # awaiting a free slot; each record holds one extra prompt-page
         # reference until its last sibling places or cancels
         self._pending: list = []
+        # learner-retained prompt pages: uid -> (pages, prompt_len); each
+        # record holds one refcount reference (taken at harvest) until
+        # release_learner_pages drops it
+        self._retained: dict = {}
         self._prefix_cache = (RadixPrefixCache(self._alloc, self.ecfg.page_len)
                               if self.ecfg.prefix_cache else None)
 
@@ -807,8 +820,72 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
 
     def _harvest(self, s: int, host, cancelled: bool) -> Completion:
         comp = super()._harvest(s, host, cancelled)
+        if self.ecfg.learner_retain:
+            # take the learner's reference BEFORE the slot's own refs drop:
+            # the prompt pages stay resident (and read-only — nothing
+            # rewrites a page whose refcount is nonzero) until
+            # release_learner_pages, surviving radix eviction and the
+            # set_params epoch flush
+            ppages = list(self._slot_prompt_pages[s])
+            self._alloc.retain(ppages)
+            self._retained[comp.uid] = (ppages, int(self._slot_plen[s]))
         self._free_slot_pages(s)
         return comp
+
+    # -------------------------------------------------- learner page handoff
+    def export_learner_pages(self, uids: Sequence) -> dict:
+        """Slice the retained prompt pages of ``uids`` out of the pool for
+        zero re-prefill scoring (DESIGN.md §11).
+
+        Returns ``{"pool": tree, "block_tables": (len(uids), M) int32,
+        "prompt_lens": (len(uids),) int32}`` where ``pool`` mirrors the
+        cache layout per attention layer (``{"k"/"v": (repeat, P',
+        page_len, KV, D), "pos": (repeat, P', page_len)}``) over the
+        COMPACTED union of the requested pages, and ``block_tables`` is
+        renumbered into it (-1 padded).  Pages shared by GRPO siblings
+        appear once.  Feed straight into ``score_tokens(paged_prefix=
+        pool, page_tables=...)`` with a ``PagedLayout`` batch whose
+        segment order matches ``uids``.
+
+        Host-side copy (``jnp.take``): must run between ``drive()`` calls
+        — the live state is donated into the next jitted step.  Raises
+        ``KeyError`` for a uid that was never harvested under
+        ``learner_retain=True`` (e.g. cancelled before placement).
+        """
+        caps.check_paged_score(self.cfg)
+        recs = [self._retained[uid] for uid in uids]
+        pages_used: list = []
+        index: dict = {}
+        tables = np.full((len(recs), self._n_pp), -1, np.int32)
+        plens = np.zeros((len(recs),), np.int32)
+        for i, (ppages, plen) in enumerate(recs):
+            plens[i] = plen
+            for k, p in enumerate(ppages):
+                if p not in index:
+                    index[p] = len(pages_used)
+                    pages_used.append(p)
+                tables[i, k] = index[p]
+        sel = jnp.asarray(np.asarray(pages_used or [0], np.int32))
+        pool = {}
+        for gi, (pattern, _repeat) in enumerate(self.cfg.blocks):
+            grp = {}
+            for j, _kind in enumerate(pattern):
+                e = self._state["cache"][f"group{gi}"][f"l{j}"]
+                grp[f"l{j}"] = {key: jnp.take(e[key], sel, axis=1)
+                                for key in ("k", "v", "pos")}
+            pool[f"group{gi}"] = grp
+        return {"pool": pool, "block_tables": jnp.asarray(tables),
+                "prompt_lens": plens}
+
+    def release_learner_pages(self, uids: Optional[Sequence] = None) -> None:
+        """Drop the learner references taken at harvest (all of them when
+        ``uids`` is None) — call after the grad step consumed the export.
+        Pages whose refcount hits zero rejoin the free list and are
+        pos-poisoned before reuse, exactly like any other release."""
+        keys = list(self._retained) if uids is None else list(uids)
+        for uid in keys:
+            pages, _plen = self._retained.pop(uid)
+            self._dirty.update(self._alloc.release(pages))
 
     # ------------------------------------------------------------- submit
     def submit(self, requests: Sequence[Request]) -> None:
@@ -1344,6 +1421,7 @@ def make_paged_engine(cfg: ModelConfig, rcfg, *, num_slots: int,
                       page_len: int = 16, num_pages: int = 0,
                       max_group: int = 0, attn_impl: str = "ref",
                       prefix_cache: bool = False,
+                      learner_retain: bool = False,
                       ) -> PagedRolloutEngine:
     return PagedRolloutEngine(
         cfg, rcfg, PagedEngineConfig(
@@ -1351,4 +1429,5 @@ def make_paged_engine(cfg: ModelConfig, rcfg, *, num_slots: int,
             steps_per_sync=steps_per_sync, page_len=page_len,
             num_pages=num_pages,
             max_group=max_group or min(num_slots, rcfg.group_size),
-            attn_impl=attn_impl, prefix_cache=prefix_cache))
+            attn_impl=attn_impl, prefix_cache=prefix_cache,
+            learner_retain=learner_retain))

@@ -32,24 +32,42 @@ PACKED_BATCH_KEYS = ("tokens", "positions", "segment_ids", "resp_ids",
                      "response_mask", "old_logp", "advantages", "ht_weights",
                      "orig_lengths", "behavior_logp", "staleness")
 
+# the paged layout (zero re-prefill scoring, DESIGN.md §11) adds the page
+# handoff from the rollout engine's export_learner_pages: the per-layer
+# pool pages plus the per-segment block tables and suffix-start positions
+PAGED_BATCH_KEYS = PACKED_BATCH_KEYS + ("pool", "block_tables", "seg_start")
+
 
 def make_loss_fn(model_cfg: ModelConfig, grpo_cfg: GRPOConfig, *,
                  mesh=None, rules=None, vocab_chunks: int = 8,
-                 packed: bool = False):
+                 packed: bool = False, paged: bool = False,
+                 paged_impl: str = "ref"):
     """Build the learner loss.  ``packed=True`` consumes PACKED_BATCH_KEYS
     batches: scoring runs on the dense packed rows (segment-masked
     attention, original positions) and the HT reduction gathers per-token
     terms back to per-response sums via ``resp_ids`` segment scatter —
-    same estimator, fewer scored tokens."""
+    same estimator, fewer scored tokens.
+
+    ``paged=True`` (implies packed rows) consumes PAGED_BATCH_KEYS batches
+    from ``core.layout.PagedLayout`` + the engine's
+    ``export_learner_pages``: only response suffixes are forwarded, prompt
+    KV is read (detached) from the rollout page pool — zero re-prefill
+    (DESIGN.md §11).  ``paged_impl`` picks the attention path ("ref" |
+    "kernel")."""
     rules = rules or DEFAULT_RULES  # a mesh without rules gets the defaults
 
     def loss_fn(params, mb: dict):
-        if packed:
+        if packed or paged:
+            pg = {} if not paged else dict(
+                paged_prefix=mb["pool"],
+                page_tables={"block_tables": mb["block_tables"],
+                             "seg_start": mb["seg_start"]},
+                paged_impl=paged_impl)
             logp, aux = score_tokens(
                 params, model_cfg, mb["tokens"],
                 positions=mb["positions"], segment_ids=mb["segment_ids"],
                 image_embeds=mb.get("image_embeds"), mesh=mesh, rules=rules,
-                vocab_chunks=vocab_chunks)
+                vocab_chunks=vocab_chunks, **pg)
             loss, metrics = nat_grpo_loss(
                 logp, mb["old_logp"], mb["advantages"], mb["ht_weights"],
                 mb["orig_lengths"], grpo_cfg, ref_logp=mb.get("ref_logp"),
@@ -85,6 +103,8 @@ def make_train_step(
     unroll_microbatches: bool = False,
     param_shardings=None,
     packed: bool = False,
+    paged: bool = False,
+    paged_impl: str = "ref",
 ):
     """Returns train_step(params, opt_state, batch) -> (params', opt', metrics).
 
@@ -104,9 +124,12 @@ def make_train_step(
     (``core.layout.build_microbatches``: one pack plan per chunk) and the
     train step consumes a TUPLE of per-microbatch packed dicts.  The
     accumulation loop is unrolled — chunks may pack to different
-    (rows, pack_len) shapes, which lax.scan cannot carry."""
+    (rows, pack_len) shapes, which lax.scan cannot carry.
+    ``paged=True`` swaps in the zero re-prefill loss (PAGED_BATCH_KEYS;
+    see ``make_loss_fn``); the microbatch discipline is the packed one."""
     loss_fn = make_loss_fn(model_cfg, grpo_cfg, mesh=mesh, rules=rules,
-                           vocab_chunks=vocab_chunks, packed=packed)
+                           vocab_chunks=vocab_chunks, packed=packed,
+                           paged=paged, paged_impl=paged_impl)
     vg = jax.value_and_grad(loss_fn, has_aux=True)
 
     def constrain(grads):
@@ -145,7 +168,7 @@ def make_train_step(
         if m == 1:
             (loss, metrics), grads = vg(params, batch)
             grads = constrain(grads)
-        elif packed:
+        elif packed or paged:
             grads, metrics = packed_accum_step(params, opt_state, batch)
         else:
             def split(x):

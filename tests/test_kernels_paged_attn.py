@@ -1,6 +1,7 @@
 """Paged decode-attention kernel vs the jnp oracle: GQA/MQA shapes, shared
 prompt pages, unallocated-page skips, partial-page gaps, inactive slots
-(interpret mode)."""
+(interpret mode) — plus the fused paged *prefill* kernel (pool + packed
+suffix under one softmax) and its custom-vjp backward."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,6 +11,9 @@ from repro.kernels.paged_attn import (
     paged_attention,
     paged_attention_ref,
     paged_decode_pallas,
+    paged_prefill_attention,
+    paged_prefill_attention_ref,
+    paged_prefill_fwd_pallas,
 )
 
 SWEEP = [
@@ -149,3 +153,144 @@ def test_mla_unallocated_pages_do_not_contribute():
     o2 = paged_mla_decode_pallas(qa, qr, jnp.asarray(cp2), jnp.asarray(krp2),
                                  jnp.asarray(pos2), bt, qp, scale=scale)
     np.testing.assert_array_equal(np.asarray(o1)[0], np.asarray(o2)[0])
+
+
+# ----------------------------------------------------- fused prefill kernel
+BQ = 16
+PAD = np.int32(2 ** 30)
+
+PREFILL_SWEEP = [
+    # (H, KVH, D): GQA, MHA, MQA
+    (4, 2, 8),
+    (4, 4, 8),
+    (8, 1, 8),
+]
+
+
+def prefill_data(h, kvh, d, seed=0, dtype=np.float32):
+    """A PagedLayout-shaped problem: 4 segments packed into 2 rows (with
+    qblock-aligned gaps + PAD tails), a pool whose page 0 is poisoned with
+    NaN (the kernel must never read a page its block tables don't name),
+    and per-segment prompt pages written through the duplicate
+    last-prompt token — exactly what the engine's prefill leaves behind."""
+    rng = np.random.default_rng(seed)
+    r, t, plen, npg, m = 2, 64, 16, 9, 3
+    seg_rows = [(0, 0, 32), (0, 32, 20), (1, 0, 48), (1, 48, 10)]
+    seg_start = np.array([15, 7, 31, 3], np.int32)
+    segment_ids = np.full((r, t), PAD, np.int32)
+    positions = np.zeros((r, t), np.int32)
+    for s, (row, off, slen) in enumerate(seg_rows):
+        segment_ids[row, off:off + slen] = s
+        positions[row, off:off + slen] = np.arange(
+            seg_start[s], seg_start[s] + slen)
+    block_tables = np.full((len(seg_rows), m), -1, np.int32)
+    pos_pages = np.full((npg, plen), -1, np.int32)
+    k_pages = rng.standard_normal((npg, plen, kvh, d)).astype(dtype)
+    v_pages = rng.standard_normal((npg, plen, kvh, d)).astype(dtype)
+    k_pages[0] = np.nan
+    v_pages[0] = np.nan
+    nxt = 1
+    for s in range(len(seg_rows)):
+        ntok = int(seg_start[s]) + 1    # prompt incl. duplicate last token
+        for pi in range(-(-ntok // plen)):
+            block_tables[s, pi] = nxt
+            n = min(plen, ntok - pi * plen)
+            pos_pages[nxt, :n] = np.arange(pi * plen, pi * plen + n)
+            nxt += 1
+    q = rng.standard_normal((r, h, t, d)).astype(np.float32)
+    k = rng.standard_normal((r, kvh, t, d)).astype(np.float32)
+    v = rng.standard_normal((r, kvh, t, d)).astype(np.float32)
+    return (tuple(jnp.asarray(a) for a in
+                  (q, k, v, segment_ids, seg_start, block_tables,
+                   k_pages, v_pages, pos_pages)),
+            segment_ids != PAD)
+
+
+@pytest.mark.parametrize("h,kvh,d", PREFILL_SWEEP)
+def test_prefill_kernel_vs_ref(h, kvh, d):
+    args, live = prefill_data(h, kvh, d)
+    # the ref's dense gather clamps unallocated entries to page 0 and hits
+    # 0 * nan — feed it cleaned pages; the kernel runs on the poison and
+    # must stay finite (it must never READ page 0)
+    clean = tuple(jnp.nan_to_num(a) for a in args[6:8])
+    o_ref, lse_ref = paged_prefill_attention_ref(
+        *args[:6], clean[0], clean[1], args[8])
+    o_k, lse_k = paged_prefill_fwd_pallas(*args, bq=BQ, bk=BQ)
+    lv = live[:, None, :]
+    np.testing.assert_allclose(
+        np.asarray(jnp.where(lv[..., None], o_k, 0.0)),
+        np.asarray(jnp.where(lv[..., None], o_ref, 0.0)),
+        rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(
+        np.asarray(jnp.where(lv, lse_k, 0.0)),
+        np.asarray(jnp.where(lv, lse_ref, 0.0)),
+        rtol=2e-5, atol=2e-5)
+    assert np.isfinite(np.asarray(o_k)[
+        np.broadcast_to(lv[..., None], o_k.shape)]).all()
+
+
+def test_prefill_kernel_bf16_pool():
+    """Production pool dtype: bf16 pages under f32 activations — the
+    kernel and oracle upcast identically, so they still agree tightly."""
+    args, live = prefill_data(4, 2, 8, dtype=np.float32)
+    args = args[:6] + (args[6].astype(jnp.bfloat16),
+                       args[7].astype(jnp.bfloat16), args[8])
+    clean = tuple(jnp.nan_to_num(a.astype(jnp.float32)).astype(jnp.bfloat16)
+                  for a in args[6:8])
+    o_ref, _ = paged_prefill_attention_ref(
+        *args[:6], clean[0], clean[1], args[8])
+    o_k, _ = paged_prefill_fwd_pallas(*args, bq=BQ, bk=BQ)
+    lv = live[:, None, :, None]
+    np.testing.assert_allclose(
+        np.asarray(jnp.where(lv, o_k, 0.0)),
+        np.asarray(jnp.where(lv, o_ref, 0.0)), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("h,kvh,d", PREFILL_SWEEP)
+def test_prefill_grad_parity(h, kvh, d):
+    """custom_vjp (dq over pages + dkv scattered through the block table)
+    vs autodiff through the oracle, for all five operands including the
+    pool pages (GRPO siblings sharing a page must SUM their grads)."""
+    args, live = prefill_data(h, kvh, d)
+    kp_c, vp_c = (jnp.nan_to_num(a) for a in args[6:8])
+    rng = np.random.default_rng(1)
+    mask = jnp.asarray(live[:, None, :, None], jnp.float32)
+    dout = jnp.asarray(rng.standard_normal(
+        (2, h, 64, d)).astype(np.float32)) * mask
+
+    def loss_kernel(q_, k_, v_, kp_, vp_):
+        o = paged_prefill_attention(q_, k_, v_, args[3], args[4], args[5],
+                                    kp_, vp_, args[8], BQ, BQ, True)
+        return jnp.sum(o * dout)
+
+    def loss_ref(q_, k_, v_, kp_, vp_):
+        o, _ = paged_prefill_attention_ref(q_, k_, v_, args[3], args[4],
+                                           args[5], kp_, vp_, args[8])
+        return jnp.sum(o * dout)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2, 3, 4))(
+        args[0], args[1], args[2], kp_c, vp_c)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3, 4))(
+        args[0], args[1], args[2], kp_c, vp_c)
+    for name, a, b in zip(("dq", "dk", "dv", "dk_pool", "dv_pool"), gk, gr):
+        diff = float(jnp.max(jnp.abs(a - b)))
+        ref = float(jnp.max(jnp.abs(b)))
+        assert diff < 2e-4 * max(ref, 1.0), (name, diff, ref)
+
+
+def test_prefill_unnamed_pages_do_not_contribute():
+    """Scaling every page NOT named by any block table must not change the
+    output — visibility flows only through the tables."""
+    args, live = prefill_data(4, 2, 8)
+    clean = tuple(jnp.nan_to_num(a) for a in args[6:8])
+    o1, _ = paged_prefill_fwd_pallas(*args[:6], clean[0], clean[1],
+                                     args[8], bq=BQ, bk=BQ)
+    named = set(np.asarray(args[5])[np.asarray(args[5]) >= 0].tolist())
+    kp2, vp2 = np.array(clean[0]), np.array(clean[1])
+    for pg in range(kp2.shape[0]):
+        if pg not in named:
+            kp2[pg], vp2[pg] = 1e3, -1e3
+    o2, _ = paged_prefill_fwd_pallas(*args[:6], jnp.asarray(kp2),
+                                     jnp.asarray(vp2), args[8], bq=BQ, bk=BQ)
+    lv = np.broadcast_to(live[:, None, :, None], o1.shape)
+    np.testing.assert_array_equal(np.asarray(o1)[lv], np.asarray(o2)[lv])

@@ -1,0 +1,195 @@
+"""Zero re-prefill teacher forcing (DESIGN.md §11), end to end: paged
+engine rollout with ``learner_retain`` -> ``export_learner_pages`` ->
+``core.layout.PagedLayout`` -> ``score_tokens(paged_prefix=...)``.
+
+Parity contracts:
+  * both paged impls ("ref" | "kernel") match the DENSE padded-grid logp
+    per response token within the pool's bf16 KV storage rounding — the
+    tolerance is the pool dtype, not kernel error (at staleness 0 the
+    forward is otherwise exact),
+  * kernel matches ref tightly under f32 activations (with bf16 params
+    the ref rounds softmax probabilities to bf16 like the dense path,
+    while the kernel keeps f32 probabilities — a dtype-policy gap, so
+    the tight comparison casts params to f32; the pool stays bf16),
+  * segment-head slots (the re-forwarded last prompt token) score
+    exactly 0 — the response's first token gets the true logp,
+  * parameter grads match between impls (response-side grads are exact;
+    prompt-KV paths are dropped by ``stop_gradient`` in both),
+  * released pages drain the allocator back to empty,
+  * the capability gate rejects non-attn stacks by name, and
+    ``PAGED_SCORE_BLOCK`` stays pinned to ``PagedLayout.qblock``.
+"""
+import functools
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.layout import PagedLayout, make_layout
+from repro.models import attention as attn
+from repro.models import capabilities as caps
+from repro.models import init_params, model_decl
+from repro.models.config import ModelConfig, dense_blocks
+from repro.models.model import score_tokens
+from repro.rl import Request, RolloutConfig, VOCAB_SIZE
+from repro.rl.engine import make_paged_engine
+
+B, TP, N = 6, 10, 12
+T = TP + N
+
+
+def tiny_cfg(**kw):
+    kw.setdefault("blocks", dense_blocks(2))
+    return ModelConfig(name="tiny", d_model=64, n_heads=4, n_kv_heads=2,
+                       head_dim=16, d_ff=128, vocab_size=VOCAB_SIZE,
+                       seq_parallel=False, remat_policy="none",
+                       scan_layers=False, **kw)
+
+
+@functools.lru_cache(maxsize=1)
+def setup():
+    """One rollout shared by the module: 3 GRPO groups x 2 siblings."""
+    cfg = tiny_cfg()
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, model_decl(cfg))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(3, VOCAB_SIZE, size=(3, TP)).astype(np.int32)
+    rcfg = RolloutConfig(max_new_tokens=N, temperature=1.0, eos_id=-1,
+                         group_size=2)
+    eng = make_paged_engine(cfg, rcfg, num_slots=4, max_prompt_len=TP,
+                            steps_per_sync=3, page_len=16,
+                            learner_retain=True)
+    groups = [[Request(uid=pi * 2 + j, tokens=prompts[pi], budget=N)
+               for j in range(2)] for pi in range(3)]
+    comps = {c.uid: c for c in eng.run_groups(params, groups, key)}
+    uids = sorted(comps)
+    export = eng.export_learner_pages(uids)
+
+    grid = np.zeros((B, T), np.int32)
+    rlens = np.zeros((B,), np.int32)
+    for i, u in enumerate(uids):
+        c = comps[u]
+        grid[i, :TP] = prompts[u // 2]
+        grid[i, TP:TP + c.response_len] = c.tokens
+        rlens[i] = c.response_len
+    logp_dense, _ = score_tokens(params, cfg, jnp.asarray(grid),
+                                 lengths=jnp.asarray(TP + rlens),
+                                 vocab_chunks=1)
+    keep = np.zeros((B, T), bool)
+    for i in range(B):
+        keep[i, TP:TP + rlens[i]] = True
+    lb = make_layout("paged").build(
+        {"tokens": grid}, prompt_lens=np.full((B,), TP, np.int32),
+        response_lens=rlens, keep_len=rlens, keep_mask=keep,
+        prefix_structured=True, ladder=[16, 32, 48, 64])
+    return dict(cfg=cfg, params=params, eng=eng, export=export,
+                logp_dense=np.asarray(logp_dense), lb=lb)
+
+
+def paged_logp(params, impl):
+    s = setup()
+    d = s["lb"].data
+    logp, _ = score_tokens(
+        params, s["cfg"], jnp.asarray(d["tokens"]),
+        positions=jnp.asarray(d["positions"]),
+        segment_ids=jnp.asarray(d["segment_ids"]),
+        paged_prefix=s["export"]["pool"],
+        page_tables={"block_tables": s["export"]["block_tables"],
+                     "seg_start": jnp.asarray(d["seg_start"])},
+        paged_impl=impl, vocab_chunks=1)
+    return np.asarray(logp)
+
+
+def f32_params():
+    return jax.tree.map(
+        lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+        setup()["params"])
+
+
+def test_qblock_pinned_to_layout():
+    assert attn.PAGED_SCORE_BLOCK == PagedLayout().qblock
+
+
+def test_export_compacts_shared_prompt_pages():
+    ex = setup()["export"]
+    # 6 siblings, 3 shared prompts of <= 1 page each -> 3 compacted pages
+    assert ex["pool"]["group0"]["l0"]["k"].shape[1] == 3
+    assert ex["block_tables"].shape[0] == B
+    assert np.array_equal(np.asarray(ex["prompt_lens"]), np.full((B,), TP))
+
+
+@pytest.mark.parametrize("impl", ["ref", "kernel"])
+def test_paged_logp_matches_dense(impl):
+    s = setup()
+    d = s["lb"].data
+    lp = paged_logp(s["params"], impl)
+    seg = np.asarray(d["segment_ids"])
+    pos = np.asarray(d["positions"])
+    worst = 0.0
+    for r in range(s["lb"].num_rows):
+        for t in range(s["lb"].row_len):
+            if seg[r, t] >= B:
+                continue
+            if pos[r, t] <= TP - 1:      # segment head slot: exactly 0
+                assert lp[r, t] == 0.0
+                continue
+            worst = max(worst, abs(lp[r, t] - s["logp_dense"][seg[r, t],
+                                                              pos[r, t]]))
+    # bound = the pool's bf16 KV storage rounding, NOT kernel error
+    assert worst < 2e-2, worst
+
+
+def test_kernel_matches_ref_tightly_in_f32():
+    p32 = f32_params()
+    a = paged_logp(p32, "ref")
+    b = paged_logp(p32, "kernel")
+    live = np.asarray(setup()["lb"].data["segment_ids"]) < B
+    assert float(np.abs(np.where(live, a - b, 0.0)).max()) < 2e-4
+
+
+def test_param_grad_parity():
+    s = setup()
+    d = s["lb"].data
+    mask = jnp.asarray(np.asarray(d["segment_ids"]) < B)
+
+    def loss(p, impl):
+        lp, _ = score_tokens(
+            p, s["cfg"], jnp.asarray(d["tokens"]),
+            positions=jnp.asarray(d["positions"]),
+            segment_ids=jnp.asarray(d["segment_ids"]),
+            paged_prefix=s["export"]["pool"],
+            page_tables={"block_tables": s["export"]["block_tables"],
+                         "seg_start": jnp.asarray(d["seg_start"])},
+            paged_impl=impl, vocab_chunks=1)
+        return jnp.sum(jnp.where(mask, lp, 0.0) ** 2)
+
+    p32 = f32_params()
+    gr, _ = jax.flatten_util.ravel_pytree(
+        jax.grad(lambda p: loss(p, "ref"))(p32))
+    gk, _ = jax.flatten_util.ravel_pytree(
+        jax.grad(lambda p: loss(p, "kernel"))(p32))
+    diff = float(jnp.max(jnp.abs(gr - gk)))
+    scale = float(jnp.max(jnp.abs(gr)))
+    assert diff < 2e-4 * max(scale, 1.0), (diff, scale)
+
+
+def test_capability_gate_names_offender():
+    ok = tiny_cfg()
+    caps.check_paged_score(ok)
+    bad = tiny_cfg(blocks=((("attn", "ssm"), 1),))
+    assert not caps.paged_score_ok(bad)
+    with pytest.raises(caps.CapabilityError, match="ssm"):
+        caps.check_paged_score(bad)
+
+
+def test_release_drains_allocator():
+    """Runs last by name-independent design: release is idempotent on the
+    shared engine, and a full release drains every retained ref."""
+    s = setup()
+    s["eng"].release_learner_pages()
+    assert s["eng"]._alloc.in_use == 0
+    # releasing again is a no-op, not a double free
+    s["eng"].release_learner_pages()
+    assert s["eng"]._alloc.in_use == 0

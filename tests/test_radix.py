@@ -214,3 +214,93 @@ def test_radix_random_interleavings_never_leak_or_double_free(
     _check_cache_partition(a, cache, [])
     assert cache.num_resident == 0
     assert a.num_free == num_pages, "drained pool did not return whole"
+
+
+# ---------------------------------------- learner retention (DESIGN.md §11)
+def test_learner_retention_survives_eviction_and_flush():
+    """The zero re-prefill handoff: the learner takes its own ref on a
+    harvested response's prompt pages.  Neither pool-pressure eviction nor
+    the set_params epoch flush may reclaim them while that ref lives —
+    only the learner's release makes them evictable."""
+    a, cache = make()
+    pages, _ = prefill_insert(a, cache, toks(1, 2))
+    cache.step()
+    a.retain(pages)                     # learner retains at harvest
+    a.release(pages)                    # the rollout group retires
+    assert cache.evict(8) == []         # pressure: retained pages survive
+    assert cache.flush() == []          # weight swap: ditto
+    assert all(int(a.refcount[p]) >= 1 for p in pages)
+    a.release(pages)                    # learner releases after the step
+    assert sorted(cache.reap() + cache.evict(8)) == sorted(pages)
+    assert a.in_use == 0
+
+
+@settings(max_examples=25)
+@given(st.integers(min_value=6, max_value=24),
+       st.lists(st.integers(min_value=0, max_value=11),
+                min_size=20, max_size=60),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_retention_interleavings_never_leak_or_reclaim(
+        num_pages, script, seed):
+    """The ownership property test with the learner in the loop: groups
+    place/retire as before, and harvests hand the group's pages to a
+    learner handle (extra ref) that outlives eviction and flush.  After
+    every op the pool still partitions exactly, and no retained page is
+    ever on the free list.  Draining groups AND learner handles returns
+    the whole pool."""
+    rng = np.random.default_rng(seed)
+    a = PageAllocator(num_pages)
+    cache = RadixPrefixCache(a, PL)
+    handles = []     # live rollout groups
+    retained = []    # learner-retained page sets (one ref each)
+
+    def new_prompt():
+        n = int(rng.integers(1, 4))
+        return np.asarray(rng.integers(0, 3, size=n * PL), np.int32)
+
+    for op in script:
+        if op <= 3:                       # place a group (engine commit)
+            t = new_prompt()
+            nodes = cache.lookup(t)
+            m_pages = [nd.page for nd in nodes]
+            n_fresh = len(t) // PL - len(m_pages)
+            if n_fresh > a.num_free:
+                cache.evict(n_fresh - a.num_free)
+            if n_fresh > a.num_free:
+                continue                  # saturated: shed, nothing leaked
+            if m_pages:
+                a.retain(m_pages)
+                cache.touch(nodes)
+            fresh = a.alloc(n_fresh)
+            cache.insert(nodes[-1] if nodes else None, t,
+                         len(m_pages) * PL, fresh)
+            handles.append(m_pages + fresh)
+        elif op <= 5 and handles:         # harvest: learner retains, group
+            pages = handles.pop(int(rng.integers(len(handles))))
+            a.retain(pages)               # retires in the same breath
+            retained.append(pages)
+            a.release(pages)
+        elif op == 6 and handles:         # a group retires unharvested
+            a.release(handles.pop(int(rng.integers(len(handles)))))
+        elif op == 7 and retained:        # learner grad step done
+            a.release(retained.pop(int(rng.integers(len(retained)))))
+        elif op == 8:                     # pool pressure
+            cache.evict(int(rng.integers(1, 4)))
+        elif op == 9:                     # weight swap
+            cache.flush()
+        else:                             # drive round boundary
+            cache.step()
+            cache.reap()
+        _check_cache_partition(a, cache, handles + retained)
+        free = set(a._free)
+        for pages in retained:
+            assert free.isdisjoint(pages), "retained page was reclaimed"
+
+    for pages in retained + handles:
+        a.release(pages)
+    cache.step()
+    cache.flush()
+    cache.reap()
+    cache.evict(num_pages)
+    _check_cache_partition(a, cache, [])
+    assert a.num_free == num_pages, "drained pool did not return whole"
