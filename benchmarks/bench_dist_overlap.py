@@ -1,0 +1,164 @@
+"""Disaggregated fleet overlap: one async engine vs a replicated fleet.
+
+PR 3's async trainer already hides the learner behind one rollout engine;
+what it cannot hide is the *rollout* bound itself — one arena means the
+80/20 straggler mix drains at one engine's pace.  The disaggregated
+trainer (DESIGN.md §12) replicates the engine across fleet slices, racing
+N actor threads over the shared prompt index while the learner drains the
+reassembled queue, and publishes weights device-to-device.
+
+Both sides run the same model, geometry, staleness bound, and straggler
+mix, post-compile.  Emits the ``dist/*`` rows of the BENCH_* trajectory:
+
+* ``dist/fleet_speedup`` — steady-state step-rate ratio, floor 1.2x on a
+  multi-core runner (thread-parallelism floor: skipped loudly on 1-CPU
+  runners, where two engines cannot overlap by construction);
+* ``dist/publish_host_bytes`` — the publisher's host-transfer counter,
+  ceiling **0.0, counter-exact**: d2d publication must never stage
+  through the host;
+* ``dist/train_cell`` — FLOPs / bytes-accessed of the compiled learner
+  cell (``launch/hlo_stats.py``), a machine-independent cost axis next to
+  the wall-clock rows.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, emit_compiled_stats
+from repro.models.config import ModelConfig, dense_blocks
+from repro.optim import AdamWConfig
+from repro.rl import (
+    AsyncNATGRPOTrainer, DistNATGRPOTrainer, NATTrainerConfig,
+    RolloutConfig, VOCAB_SIZE,
+)
+
+P = 4               # prompts per step
+G = 4               # rollouts kept per prompt
+SLOTS = 8           # arena width per engine: recycling live mid-group
+MAX_NEW = 128       # decode budget (the straggler tail length)
+SHORT_EVERY = 5     # rows with r % 5 == 0 run the full budget (20% long)
+MAX_STALENESS = 2
+FLEET = 2
+WARMUP = 3          # compile + pipeline fill
+STEPS = 5           # timed steps per window
+WINDOWS = 3         # best-of windows (CI runners flip contention modes)
+
+
+def _model():
+    return ModelConfig(name="bench-dist", d_model=128, n_heads=8,
+                       n_kv_heads=4, head_dim=16, d_ff=256,
+                       vocab_size=VOCAB_SIZE, blocks=dense_blocks(2),
+                       seq_parallel=False, remat_policy="none",
+                       scan_layers=False)
+
+
+def _budget_fn(step: int, r: int) -> int:
+    """Deterministic 80/20 mix, identical every step (stable buckets)."""
+    if r % SHORT_EVERY == 0:
+        return MAX_NEW
+    return 4 + (r * 7919) % 13  # shorts: 4..16 tokens
+
+
+def _trainer_cfg(max_new: int, fleet: int = 0) -> NATTrainerConfig:
+    return NATTrainerConfig(
+        selector="det_trunc", selector_kwargs=(("frac", 0.5),),
+        prompts_per_step=P, max_prompt_len=24,
+        rollout=RolloutConfig(max_new_tokens=max_new, temperature=1.0,
+                              group_size=G, eos_id=-1),
+        num_slots=SLOTS, steps_per_sync=4,
+        adamw=AdamWConfig(lr=1e-4, warmup_steps=5, total_steps=1000),
+        num_buckets=1,  # single executable: no bucket recompiles mid-bench
+        max_staleness=MAX_STALENESS, fleet=fleet, seed=0)
+
+
+def _time_steps(trainer, warmup: int, steps: int, windows: int) -> float:
+    """Best seconds-per-effective-step (queue-drain-corrected, like
+    bench_async_overlap: a net drain of the pre-rolled buffer means the
+    fleet produced fewer fresh groups than we popped)."""
+    for _ in range(warmup):
+        trainer.train_step()
+    best = float("inf")
+    for _ in range(windows):
+        d0 = trainer.queue.qsize()
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            trainer.train_step()
+        elapsed = time.perf_counter() - t0
+        drained = max(0, d0 - trainer.queue.qsize())
+        best = min(best, elapsed / max(1, steps - drained))
+    return best
+
+
+def _train_cell_stats():
+    """Compile the learner cell abstractly and read the XLA cost counters
+    — no device work, deterministic across runners."""
+    import jax
+
+    from repro.configs.shapes import ShapeSpec
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.step_specs import make_train_cell
+
+    cfg = _model()
+    shape = ShapeSpec(name="bench-dist", kind="train",
+                      seq_len=24 + MAX_NEW, global_batch=P * G)
+    cell = make_train_cell(cfg, shape, make_host_mesh(), vocab_chunks=1)
+    compiled = (jax.jit(cell.fn, donate_argnums=cell.donate)
+                .lower(*cell.args).compile())
+    emit_compiled_stats("dist/train_cell", compiled,
+                        f"batch={P * G};seq={24 + MAX_NEW}")
+
+
+def run(smoke: bool = False) -> dict:
+    cfg = _model()
+    max_new = 16 if smoke else MAX_NEW
+    warmup, steps, windows = (1, 2, 1) if smoke else (WARMUP, STEPS, WINDOWS)
+
+    single = AsyncNATGRPOTrainer(cfg, _trainer_cfg(max_new),
+                                 budget_fn=_budget_fn)
+    s_step = _time_steps(single, warmup, steps, windows)
+    single.close()
+
+    fleet = DistNATGRPOTrainer(cfg, _trainer_cfg(max_new, fleet=FLEET),
+                               budget_fn=_budget_fn)
+    f_step = _time_steps(fleet, warmup, steps, windows)
+    stale = [m["staleness"] for m in fleet.history[warmup:]]
+    pub = fleet.publication_stats()
+    fleet.close()
+
+    speedup = s_step / f_step
+    budget = sum(_budget_fn(0, r) for r in range(P * G))
+
+    print(f"# bench_dist_overlap: fleet of {FLEET} vs single engine "
+          f"(P={P} G={G}, {SLOTS} slots each, budget {max_new}, "
+          f"staleness {MAX_STALENESS})")
+    print(f"{'trainer':12s} {'s/step':>8s} {'tok/s':>8s}")
+    print(f"{'single':12s} {s_step:8.2f} {budget / s_step:8.1f}")
+    print(f"{'fleet':12s} {f_step:8.2f} {budget / f_step:8.1f}")
+    print(f"speedup {speedup:.2f}x  (mean staleness {np.mean(stale):.2f}, "
+          f"watermarks {pub['watermarks']}, "
+          f"published {pub['bytes_published']} B d2d, "
+          f"{pub['host_bytes']} B via host)")
+
+    emit("dist/single_step", s_step, f"tok_s={budget / s_step:.1f}")
+    emit("dist/fleet_step", f_step,
+         f"tok_s={budget / f_step:.1f};staleness={np.mean(stale):.2f}")
+    emit("dist/fleet_speedup", s_step - f_step, f"speedup={speedup:.3f}")
+    # counter-exact: d2d publication must move NOTHING through the host
+    emit("dist/publish_host_bytes", 0.0,
+         f"host_bytes={pub['host_bytes']};"
+         f"bytes_published={pub['bytes_published']};"
+         f"publishes={pub['publishes']}")
+    _train_cell_stats()
+    return {"speedup": speedup, "s_per_step_single": s_step,
+            "s_per_step_fleet": f_step, "host_bytes": pub["host_bytes"]}
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny budgets: CI lane sanity run, not a benchmark")
+    run(smoke=ap.parse_args().smoke)

@@ -69,6 +69,10 @@ GATES = {
     # serving throughput floor: pure wall clock, bounded far below the
     # measured value so only a collapse (not runner noise) trips it
     "serving/tps": ("tps", 25.0),
+    # replicated rollout fleets (DESIGN.md §12): a fleet of 2 must beat
+    # the single-engine async trainer's steady-state step rate — a
+    # thread-parallelism floor, skipped loudly on single-CPU runners
+    "dist/fleet_speedup": ("speedup", 1.2),
 }
 # row name -> (metric key, absolute ceiling): lower is better
 CEILINGS = {
@@ -88,6 +92,10 @@ CEILINGS = {
     # and its scored-token budget must keep beating the padded grid at
     # least as hard as the packed lane does
     "paged_learner/tokens_scored_ratio": ("tokens_scored_ratio", 0.65),
+    # device-to-device weight publication (DESIGN.md §12): the publisher's
+    # host-transfer counter is deterministic and must be EXACTLY zero —
+    # one staged byte means the d2d path silently fell back to the host
+    "dist/publish_host_bytes": ("host_bytes", 0.0),
 }
 REL_REGRESSION = 0.10  # gated metrics may not regress >10% vs the baseline
 # rows gated ONLY by their absolute bound: a ratio of (or a raw) CPU wall
@@ -96,11 +104,11 @@ REL_REGRESSION = 0.10  # gated metrics may not regress >10% vs the baseline
 # floor/ceiling above already encodes the whole requirement
 ABSOLUTE_ONLY = {"rollout/speedup", "async/overlap_speedup",
                  "paged/decode_tps_ratio", "serving/tps",
-                 "serving/ttft_ms"}
+                 "serving/ttft_ms", "dist/fleet_speedup"}
 # floors that measure thread-level parallelism: undefined on a runner with
 # one CPU (actor and learner cannot overlap by construction), so they are
 # skipped — loudly — when the fresh artifact records cpu_count == 1
-PARALLEL_FLOORS = {"async/overlap_speedup"}
+PARALLEL_FLOORS = {"async/overlap_speedup", "dist/fleet_speedup"}
 
 
 def committed_benches(root: str) -> list:

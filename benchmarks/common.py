@@ -60,3 +60,17 @@ def emit(name: str, seconds: float, derived: str = "") -> None:
         "derived": derived,
         "metrics": _parse_derived(derived),
     })
+
+
+def emit_compiled_stats(name: str, compiled, extra: str = "") -> None:
+    """Static-analysis row for a compiled XLA executable: FLOPs and bytes
+    accessed from ``launch/hlo_stats.py::cost_stats`` — deterministic
+    compiler counters, so BENCH_* artifacts carry a machine-independent
+    cost axis next to the noisy wall-clock rows."""
+    from repro.launch.hlo_stats import cost_stats
+
+    cs = cost_stats(compiled)
+    derived = f"flops={cs['flops']:.6g};bytes_accessed={cs['bytes']:.6g}"
+    if extra:
+        derived += ";" + extra
+    emit(name, 0.0, derived)

@@ -27,7 +27,7 @@ def main():
     ap.add_argument("--only", default="",
                     help="comma list: unbiasedness,gradnorm,matrix,ratio,"
                          "efficiency,quality,rollout,async,packed,paged,"
-                         "paged_learner,serving,roofline")
+                         "paged_learner,serving,dist,roofline")
     ap.add_argument("--json", default="",
                     help="write aggregated machine-readable results here")
     args = ap.parse_args()
@@ -80,6 +80,10 @@ def main():
     if on("serving"):
         from benchmarks import bench_serving
         bench_serving.run()
+        print()
+    if on("dist"):
+        from benchmarks import bench_dist_overlap
+        bench_dist_overlap.run()
         print()
     if on("quality"):
         from benchmarks import bench_quality

@@ -1,8 +1,12 @@
-"""repro.dist — distributed layout: logical-axis sharding rules and
-best-effort PartitionSpec resolution (FSDP / TP / EP / SP profiles).
+"""repro.dist — distributed layout: logical-axis sharding rules,
+best-effort PartitionSpec resolution (FSDP / TP / EP / SP profiles),
+slice placement for disaggregated actor/learner topologies, and
+device-to-device weight publication.
 
-See DESIGN.md §5 for the design and repro.dist.sharding for the API.
+See DESIGN.md §5 (sharding) and §12 (placement + publication).
 """
+from repro.dist.placement import FleetSlice, SliceTopology, carve
+from repro.dist.publish import WeightPublisher, tree_bytes
 from repro.dist.sharding import (
     DEFAULT_RULES,
     RULE_PROFILES,
@@ -17,10 +21,15 @@ from repro.dist.sharding import (
 __all__ = [
     "DEFAULT_RULES",
     "RULE_PROFILES",
+    "FleetSlice",
     "ShardingRules",
+    "SliceTopology",
+    "WeightPublisher",
     "best_effort_spec",
+    "carve",
     "is_axes_tuple",
     "logical_to_sharding",
     "shard_constraint",
+    "tree_bytes",
     "tree_shardings",
 ]

@@ -1,0 +1,115 @@
+"""Slice carving: split one device set into a learner slice and N rollout
+fleet slices (DESIGN.md §12).
+
+``repro.dist`` so far answered "how is an array laid out on a mesh"
+(``sharding.py``); this module answers the question above it: *which
+devices does each role own*.  The disaggregated trainer
+(``rl/dist_trainer.py``) carves the ambient devices once at construction:
+
+* the **learner slice** keeps the sharded training step (params + optimizer
+  live there, laid out by the usual ``ShardingRules``),
+* each **fleet slice** hosts one data-parallel rollout engine replica whose
+  params are a replicated snapshot published device-to-device
+  (``dist/publish.py``),
+* with prefill/decode disaggregation a fleet slice is itself split: prefill
+  cells on one sub-slice, the paged decode arena on another, groups handed
+  off by block table through the page pool (``rl/engine.py::
+  DisaggPagedRolloutEngine``).
+
+Carving is **best-effort**, mirroring ``best_effort_spec``: on a machine
+with fewer devices than roles the slices overlap (round-robin over the
+rollout pool, learner keeps at least one device), degenerating to
+"everything on device 0" on a single-device host — so the CPU test suite
+runs the exact production topology code with the placement collapsed, and
+the 8-virtual-device CI lane runs it with real slice separation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSlice:
+    """One rollout replica's devices.  ``prefill`` is empty unless the
+    fleet is prefill/decode-disaggregated, in which case prefill cells run
+    there and hand raw KV off to the decode sub-slice by block table."""
+
+    index: int
+    decode: Tuple
+    prefill: Tuple = ()
+
+    @property
+    def name(self) -> str:
+        return f"fleet{self.index}"
+
+    @property
+    def devices(self) -> Tuple:
+        return tuple(dict.fromkeys(self.decode + self.prefill))
+
+
+@dataclasses.dataclass(frozen=True)
+class SliceTopology:
+    """The carved placement: who owns which devices."""
+
+    learner: Tuple
+    fleets: Tuple[FleetSlice, ...]
+    disagg: bool = False
+
+    @property
+    def num_fleets(self) -> int:
+        return len(self.fleets)
+
+    def describe(self) -> str:
+        parts = [f"learner={[d.id for d in self.learner]}"]
+        for f in self.fleets:
+            s = f"{f.name}: decode={[d.id for d in f.decode]}"
+            if f.prefill:
+                s += f" prefill={[d.id for d in f.prefill]}"
+            parts.append(s)
+        return "; ".join(parts)
+
+
+def carve(devices: Optional[Sequence] = None, *, fleet: int = 1,
+          disagg: bool = False, learner_devices: int = 0) -> SliceTopology:
+    """Carve ``devices`` (default: ``jax.devices()``) into a learner slice
+    plus ``fleet`` rollout slices.
+
+    Policy: rollout roles claim one device each from the tail of the device
+    list (decode, plus a prefill cell per fleet under ``disagg``); the
+    learner keeps the head — at least one device, or exactly
+    ``learner_devices`` when given.  When there are more roles than
+    devices, rollout roles wrap round-robin over the non-learner pool (and
+    over the whole list on a single device), so the topology is always
+    constructible — placement quality degrades, correctness does not.
+    """
+    if fleet < 1:
+        raise ValueError(f"fleet must be >= 1, got {fleet}")
+    devices = list(devices if devices is not None else jax.devices())
+    d = len(devices)
+    need = fleet * (2 if disagg else 1)
+    if learner_devices:
+        if learner_devices > d:
+            raise ValueError(
+                f"learner_devices={learner_devices} exceeds the "
+                f"{d} available device(s)")
+        n_learner = learner_devices
+    else:
+        n_learner = max(1, d - need)
+    learner = tuple(devices[:n_learner])
+    pool = devices[n_learner:] or devices  # overlap when nothing is left
+
+    fleets = []
+    k = 0
+    for f in range(fleet):
+        decode = (pool[k % len(pool)],)
+        k += 1
+        prefill: Tuple = ()
+        if disagg:
+            prefill = (pool[k % len(pool)],)
+            k += 1
+        fleets.append(FleetSlice(index=f, decode=decode, prefill=prefill))
+    return SliceTopology(learner=learner, fleets=tuple(fleets),
+                         disagg=disagg)

@@ -37,6 +37,16 @@ def make_host_mesh():
     return _make_mesh((1,), ("data",))
 
 
+def slice_mesh(devices, axis: str = "data"):
+    """1-D mesh over an explicit device list — the per-fleet-slice mesh the
+    disaggregated trainer (DESIGN.md §12) publishes onto.  Unlike
+    ``make_production_mesh`` this takes the devices verbatim (a slice from
+    ``repro.dist.placement.carve``), so it composes with any carving."""
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(devices), (axis,))
+
+
 def set_ambient_mesh(mesh):
     """jax.set_mesh where available (jax >= 0.6).  On older jax the explicit
     NamedShardings passed to jit carry the mesh, so this is optional."""

@@ -231,6 +231,23 @@ def make_decode_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
     )
 
 
+# -------------------------------------------------------------- publication
+def publication_shardings(cfg: ModelConfig, fleet_mesh):
+    """Replicated NamedShardings for publishing learner params onto one
+    fleet slice (DESIGN.md §12).
+
+    A fleet replica runs the whole model, so every param leaf is fully
+    replicated over the slice's (usually 1-D) mesh — this is the target
+    tree a multi-device slice would hand to ``WeightPublisher`` instead of
+    a single device.  Returns ``(abstract_params, shardings)`` so the
+    dry-run can validate the resharding transfer without allocating."""
+    decl = model_decl(cfg)
+    abs_p = abstract_params(decl)
+    replicated = jax.sharding.NamedSharding(
+        fleet_mesh, jax.sharding.PartitionSpec())
+    return abs_p, jax.tree_util.tree_map(lambda _: replicated, abs_p)
+
+
 def make_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
               rules: ShardingRules = DEFAULT_RULES, **kw) -> CellSpec:
     if shape.kind == "train":

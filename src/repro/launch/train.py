@@ -22,6 +22,7 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_smoke
 from repro.optim import AdamWConfig
 from repro.rl import NATGRPOTrainer, NATTrainerConfig, RolloutConfig
+from repro.rl.dist_trainer import make_dist_trainer
 from repro.rl.env import VOCAB_SIZE as ENV_VOCAB
 
 
@@ -61,6 +62,19 @@ def main(argv=None):
                     help="rollout arena: dense slot rows, paged KV pool "
                          "with group prefix sharing (DESIGN.md §8), or "
                          "the legacy fixed-shape scan")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="replicated rollout fleet size (DESIGN.md §12): "
+                         "carve the device set into a learner slice plus N "
+                         "engine replicas with device-to-device weight "
+                         "publication; 0 = single in-process engine")
+    ap.add_argument("--disagg", default="", choices=["", "prefill,decode"],
+                    help="split each fleet slice into a prefill cell and a "
+                         "paged decode arena (requires --rollout-engine "
+                         "paged; checked against models/capabilities.py at "
+                         "config time)")
+    ap.add_argument("--max-staleness", type=int, default=0,
+                    help="bounded staleness for the overlapped pipeline "
+                         "(0 = serial; required 0 for bit-exact parity)")
     ap.add_argument("--eval-prompts", type=int, default=32)
     args = ap.parse_args(argv)
 
@@ -81,9 +95,18 @@ def main(argv=None):
         adamw=AdamWConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps),
         layout=args.layout,
         rollout_engine=args.rollout_engine,
+        max_staleness=args.max_staleness,
+        fleet=args.fleet,
+        disagg=args.disagg,
         seed=args.seed,
     )
-    trainer = NATGRPOTrainer(model_cfg, tcfg)
+    # config-time capability check happens inside the dist constructor
+    # (models/capabilities.py::check_slice_handoff) — a mixer whose state
+    # can't hand off across slices fails HERE, not 50 steps in
+    if args.fleet or args.disagg or args.max_staleness:
+        trainer = make_dist_trainer(model_cfg, tcfg)
+    else:
+        trainer = NATGRPOTrainer(model_cfg, tcfg)
 
     # the trainer's own quiesce-checkpoint (DESIGN.md §6) persists params,
     # optimizer, AND the async cursors (learner version, actor key chain,

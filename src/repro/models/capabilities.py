@@ -216,6 +216,34 @@ def check_paged_score(cfg: ModelConfig) -> None:
         f"{describe_row(bad)}")
 
 
+def slice_handoff_ok(cfg: ModelConfig) -> bool:
+    """True when a group's prefill state can hand off across mesh slices
+    (prefill cells on one slice, paged decode on another — DESIGN.md §12):
+    the prefill output shipped device-to-device must be the COMPLETE prompt
+    state, i.e. every mixer pool-resident (attn full KV, mla latents) so
+    the handoff is (prompt logits, page payloads) and nothing else.
+    Per-slot sequence state (local rings, ssm/rec) lives outside the page
+    pool and would be stranded on the prefill slice."""
+    return not cfg.num_codebooks and pure_pool_prefix(cfg)
+
+
+def check_slice_handoff(cfg: ModelConfig) -> None:
+    """Config-time gate for prefill/decode disaggregation
+    (``--disagg prefill,decode`` / ``DisaggPagedRolloutEngine``)."""
+    if slice_handoff_ok(cfg):
+        return
+    if cfg.num_codebooks:
+        raise CapabilityError(
+            "prefill/decode disaggregation is illegal for this config — "
+            f"num_codebooks={cfg.num_codebooks}: the paged pool serves "
+            "single-plane token streams")
+    bad = next(m for m in config_mixers(cfg) if not pool_resident(m))
+    raise CapabilityError(
+        "prefill/decode disaggregation requires every mixer's prompt state "
+        "to be pool-resident (the cross-slice handoff ships page payloads "
+        f"+ prompt logits, nothing per-slot) — {describe_row(bad)}")
+
+
 def pool_resident(kind: str) -> bool:
     """True when this mixer's per-token state lives in the shared page pool
     (so group prefix pages can be refcount-shared / parked siblings can

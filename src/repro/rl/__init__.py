@@ -11,12 +11,15 @@ from repro.rl.env import (
 )
 from repro.rl.async_trainer import (
     AsyncNATGRPOTrainer,
+    KeyChain,
     SampleQueue,
     TaggedGroup,
 )
+from repro.rl.dist_trainer import DistNATGRPOTrainer, make_dist_trainer
 from repro.rl.engine import (
     Completion,
     ContinuousRolloutEngine,
+    DisaggPagedRolloutEngine,
     EngineConfig,
     PageAllocator,
     PagedEngineConfig,
@@ -46,5 +49,6 @@ __all__ = [
     "RadixNode", "RadixPrefixCache",
     "RolloutBatch", "RolloutConfig", "generate", "rollout_group",
     "rollout_group_continuous", "NATGRPOTrainer", "NATTrainerConfig",
-    "AsyncNATGRPOTrainer", "SampleQueue", "TaggedGroup",
+    "AsyncNATGRPOTrainer", "SampleQueue", "TaggedGroup", "KeyChain",
+    "DistNATGRPOTrainer", "DisaggPagedRolloutEngine", "make_dist_trainer",
 ]

@@ -37,11 +37,11 @@ trainers own a daemon actor thread: call ``close()`` when done with one.
 """
 from __future__ import annotations
 
-import collections
+import bisect
 import dataclasses
 import threading
 import time
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -97,6 +97,9 @@ class NATTrainerConfig:
     # -- actor/learner overlap (DESIGN.md §6) --
     max_staleness: int = 0           # 0 reproduces the serial trainer exactly
     queue_groups: int = 0            # sample-queue capacity; 0 -> staleness+1
+    # -- disaggregated fleets (DESIGN.md §12, rl/dist_trainer.py) --
+    fleet: int = 0                   # N>0: N replicated rollout fleet slices
+    disagg: str = ""                 # "" | "prefill,decode": split each slice
 
 
 @dataclasses.dataclass
@@ -119,23 +122,45 @@ class StaleSampleError(RuntimeError):
 
 
 class SampleQueue:
-    """Bounded FIFO between actor and learner with a staleness contract:
-    ``pop(current_version)`` never returns a group whose behaviour version
-    lags by more than ``max_staleness`` — over-stale groups are dropped and
-    counted, not served.  Errors from the producing thread surface on the
-    consumer via ``fail``."""
+    """Bounded, index-ordered queue between actor(s) and learner with a
+    staleness contract: ``pop(current_version)`` never returns a group whose
+    behaviour version lags by more than ``max_staleness`` — over-stale groups
+    are dropped and counted, not served.  Errors from a producing thread
+    surface on the consumer via ``fail`` (first error wins: a later ``fail``
+    — e.g. the poison pill from ``close()`` — never masks the root cause).
+
+    **Multi-producer ordering (DESIGN.md §12).**  With one actor, groups
+    arrive already index-ordered and this is the PR 3 FIFO.  With a fleet of
+    N actors racing, groups finish out of order; the learner still consumes
+    the serial index sequence, so the queue reassembles: ``put`` inserts
+    sorted by ``TaggedGroup.index``, and a producer **reserves** its index
+    before rolling so ``pop`` can tell "index 4 is absent" from "index 4 is
+    still in flight" and hold younger groups until the gap fills.  A
+    reservation counts toward capacity (the slot is pre-admitted), which is
+    what makes reassembly deadlock-free: the deposit of a reserved group
+    never blocks on a full queue, so the oldest in-flight group can always
+    land and unblock the head.  ``watermarks`` tracks, per producer, the
+    newest behaviour version deposited — the fleet's publication-lag
+    telemetry."""
 
     def __init__(self, capacity: int, max_staleness: int):
         self.capacity = max(1, capacity)
         self.max_staleness = max_staleness
         self.dropped_stale = 0
-        self._items: collections.deque = collections.deque()
+        self.watermarks: Dict[str, int] = {}
+        self._items: list = []           # sorted by .index (stable)
+        self._keys: list = []            # parallel list of .index
+        self._inflight: set = set()      # reserved, not yet deposited
         self._cv = threading.Condition()
         self._error: Optional[BaseException] = None
 
     def qsize(self) -> int:
         with self._cv:
             return len(self._items)
+
+    def inflight(self) -> int:
+        with self._cv:
+            return len(self._inflight)
 
     def peek(self) -> Optional[TaggedGroup]:
         """The oldest queued group without consuming it (None when empty)."""
@@ -144,20 +169,60 @@ class SampleQueue:
 
     def fail(self, err: BaseException) -> None:
         with self._cv:
-            self._error = err
+            if self._error is None:  # first error wins
+                self._error = err
             self._cv.notify_all()
 
-    def put(self, group: TaggedGroup, timeout: Optional[float] = None) -> None:
+    def reserve(self, index: int, timeout: Optional[float] = None) -> None:
+        """Claim ``index`` before rolling it.  Blocks while the queue plus
+        in-flight reservations are at capacity, so total admitted work is
+        bounded; the matching ``put`` is then exempt from the capacity
+        wait.  Pair with ``cancel`` on abandonment."""
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cv:
-            while len(self._items) >= self.capacity and self._error is None:
+            while (len(self._items) + len(self._inflight) >= self.capacity
+                   and self._error is None):
+                if deadline is not None and time.monotonic() > deadline:
+                    raise TimeoutError("SampleQueue.reserve timed out")
+                self._cv.wait(0.05)
+            if self._error is not None:
+                raise self._error
+            self._inflight.add(index)
+
+    def cancel(self, index: int) -> None:
+        """Drop a reservation without depositing (producer abandoned the
+        group); ``pop`` stops waiting for the gap."""
+        with self._cv:
+            self._inflight.discard(index)
+            self._cv.notify_all()
+
+    def put(self, group: TaggedGroup, timeout: Optional[float] = None,
+            producer: Optional[str] = None) -> None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while (group.index not in self._inflight
+                   and len(self._items) >= self.capacity
+                   and self._error is None):
                 if deadline is not None and time.monotonic() > deadline:
                     raise TimeoutError("SampleQueue.put timed out")
                 self._cv.wait(0.05)
             if self._error is not None:
                 raise self._error
-            self._items.append(group)
+            self._inflight.discard(group.index)
+            if producer is not None:
+                self.watermarks[producer] = max(
+                    self.watermarks.get(producer, -1), group.behavior_version)
+            k = bisect.bisect_right(self._keys, group.index)
+            self._keys.insert(k, group.index)
+            self._items.insert(k, group)
             self._cv.notify_all()
+
+    def _head_ready(self) -> bool:
+        """Serve the head only when no smaller index is still in flight —
+        the learner consumes the serial index order."""
+        if not self._items:
+            return False
+        return not self._inflight or self._keys[0] < min(self._inflight)
 
     def pop(self, current_version: int,
             timeout: Optional[float] = None) -> TaggedGroup:
@@ -166,8 +231,9 @@ class SampleQueue:
             while True:
                 if self._error is not None:
                     raise self._error
-                while self._items:
-                    g = self._items.popleft()
+                while self._head_ready():
+                    g = self._items.pop(0)
+                    self._keys.pop(0)
                     self._cv.notify_all()  # wake a producer blocked on full
                     if (current_version - g.behavior_version
                             <= self.max_staleness):
@@ -177,6 +243,43 @@ class SampleQueue:
                 if deadline is not None and time.monotonic() > deadline:
                     raise TimeoutError("SampleQueue.pop timed out")
                 self._cv.wait(0.05)
+
+
+class KeyChain:
+    """Thread-safe view of the actor's serial key chain (DESIGN.md §12).
+
+    The serial trainer derives group ``i``'s keys by walking
+    ``state, k_roll, k_sel = split(state, 3)`` from the seed.  A fleet of
+    actors claims indices out of order, so the chain is materialized lazily
+    and cached: ``keys_for(i)`` returns the exact ``(key0, k_roll, k_sel)``
+    the serial walk would produce for group ``i``, whichever replica asks
+    first.  This is what makes fleet rollouts per-group token-exact against
+    the single-engine oracle — same index, same keys, same tokens."""
+
+    def __init__(self, key0: jax.Array, base_index: int = 0):
+        self._lock = threading.Lock()
+        self._base = base_index
+        self._states = [key0]    # _states[k] = chain state before base+k
+
+    def _state(self, k: int) -> jax.Array:
+        if k < 0:
+            raise IndexError(f"group index below chain base {self._base}")
+        while len(self._states) <= k:
+            self._states.append(jax.random.split(self._states[-1], 3)[0])
+        return self._states[k]
+
+    def state_before(self, i: int) -> jax.Array:
+        """Chain state before group ``i``'s splits (checkpoint rewind)."""
+        with self._lock:
+            return self._state(i - self._base)
+
+    def keys_for(self, i: int):
+        """``(key0, k_roll, k_sel)`` for group ``i`` — the serial walk's
+        exact splits, regardless of claim order."""
+        with self._lock:
+            key0 = self._state(i - self._base)
+            _, k_roll, k_sel = jax.random.split(key0, 3)
+            return key0, k_roll, k_sel
 
 
 class _GroupState:
@@ -230,35 +333,7 @@ class AsyncNATGRPOTrainer:
         self.selector = make_selector(tcfg.selector, **dict(tcfg.selector_kwargs))
         if tcfg.rollout_engine not in ("continuous", "paged", "legacy"):
             raise ValueError(f"unknown rollout_engine {tcfg.rollout_engine!r}")
-        if tcfg.rollout_engine == "paged" and not model_cfg.num_codebooks:
-            from repro.rl.engine import PagedEngineConfig, PagedRolloutEngine
-
-            gp = int(np.ceil(tcfg.rollout.group_size
-                             * tcfg.rollout.overprovision))
-            # default slot count must cover one full G' group: configs
-            # with per-slot sequence state place groups atomically
-            self.engine = PagedRolloutEngine(
-                model_cfg, tcfg.rollout, PagedEngineConfig(
-                    num_slots=tcfg.num_slots
-                    or max(tcfg.prompts_per_step * tcfg.rollout.group_size,
-                           gp),
-                    max_prompt_len=tcfg.max_prompt_len,
-                    steps_per_sync=tcfg.steps_per_sync,
-                    page_len=tcfg.page_len, num_pages=tcfg.num_pages,
-                    max_group=gp))
-        elif tcfg.rollout_engine == "continuous" and not model_cfg.num_codebooks:
-            from repro.rl.engine import ContinuousRolloutEngine, EngineConfig
-
-            self.engine = ContinuousRolloutEngine(
-                model_cfg, tcfg.rollout, EngineConfig(
-                    num_slots=tcfg.num_slots
-                    or tcfg.prompts_per_step * tcfg.rollout.group_size,
-                    max_prompt_len=tcfg.max_prompt_len,
-                    steps_per_sync=tcfg.steps_per_sync))
-        else:
-            # legacy scan — explicit opt-out, or codebook models (audio),
-            # which the slot arena does not serve yet
-            self.engine = None
+        self.engine = self._build_engine()
         self.step_count = 0
         layout_name = tcfg.layout or ("bucketed" if tcfg.repack else "padded")
         if layout_name == "packed":
@@ -303,6 +378,51 @@ class AsyncNATGRPOTrainer:
         self._actor_idle = threading.Event()
         self._actor: Optional[threading.Thread] = None
         self._stream_groups: dict = {}
+
+    def _build_engine(self, *, device=None, prefill_device=None):
+        """Construct one rollout engine per the config — the seam the
+        disaggregated trainer reuses to build slice-pinned fleet replicas
+        (``device`` commits the arena; ``prefill_device`` additionally
+        splits prompt prefill onto its own cell, DESIGN.md §12).  Returns
+        None for the legacy scan / codebook models (no arena)."""
+        tcfg, model_cfg = self.tcfg, self.model_cfg
+        if tcfg.rollout_engine == "paged" and not model_cfg.num_codebooks:
+            from repro.rl.engine import (
+                DisaggPagedRolloutEngine, PagedEngineConfig,
+                PagedRolloutEngine,
+            )
+
+            gp = int(np.ceil(tcfg.rollout.group_size
+                             * tcfg.rollout.overprovision))
+            # default slot count must cover one full G' group: configs
+            # with per-slot sequence state place groups atomically
+            pecfg = PagedEngineConfig(
+                num_slots=tcfg.num_slots
+                or max(tcfg.prompts_per_step * tcfg.rollout.group_size, gp),
+                max_prompt_len=tcfg.max_prompt_len,
+                steps_per_sync=tcfg.steps_per_sync,
+                page_len=tcfg.page_len, num_pages=tcfg.num_pages,
+                max_group=gp)
+            if prefill_device is not None:
+                return DisaggPagedRolloutEngine(
+                    model_cfg, tcfg.rollout, pecfg,
+                    prefill_device=prefill_device, decode_device=device)
+            return PagedRolloutEngine(model_cfg, tcfg.rollout, pecfg,
+                                      device=device)
+        elif (tcfg.rollout_engine == "continuous"
+              and not model_cfg.num_codebooks):
+            from repro.rl.engine import ContinuousRolloutEngine, EngineConfig
+
+            return ContinuousRolloutEngine(
+                model_cfg, tcfg.rollout, EngineConfig(
+                    num_slots=tcfg.num_slots
+                    or tcfg.prompts_per_step * tcfg.rollout.group_size,
+                    max_prompt_len=tcfg.max_prompt_len,
+                    steps_per_sync=tcfg.steps_per_sync),
+                device=device)
+        # legacy scan — explicit opt-out, or codebook models (audio),
+        # which the slot arena does not serve yet
+        return None
 
     # ------------------------------------------------------------- actor side
     def _ensure_actor(self) -> None:

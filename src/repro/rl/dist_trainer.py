@@ -1,0 +1,266 @@
+"""Disaggregated actor/learner: replicated rollout fleets over mesh
+slices, device-to-device weight publication (DESIGN.md §12).
+
+``AsyncNATGRPOTrainer`` (PR 3) overlaps one rollout engine with one
+learner in a single process; the weight "publication" is an in-process
+reference swap and every flop shares one device set.  This trainer scales
+the same bounded-staleness design out across a carved topology
+(``dist/placement.py``):
+
+* the **learner** keeps the sharded train step on its own slice,
+* **N fleet replicas** each own a slice-pinned rollout engine and an actor
+  thread, all pulling prompts from the shared deterministic pipeline by
+  index and depositing into one multi-producer ``SampleQueue`` that
+  reassembles the serial index order (reservations mark in-flight gaps),
+* **publication** reshards the learner params straight onto every fleet
+  slice with ``jax.device_put`` (``dist/publish.py``) — zero bytes through
+  the host, one epoch per learner version, so the staleness contract is
+  unchanged: a group rolled from epoch ``e`` params has
+  ``behavior_version == e``,
+* with ``disagg="prefill,decode"`` each fleet slice further splits into a
+  prefill cell and a paged decode arena
+  (``rl/engine.py::DisaggPagedRolloutEngine``), handing groups off by
+  block table through the page pool.
+
+Determinism contract: group ``i``'s rollout keys come from the shared
+``KeyChain`` — the exact splits the serial walk produces — and the queue
+serves groups in index order, so a fleet of 1 at staleness 0 is
+**bit-exact** against ``NATGRPOTrainer``, and any fleet's group ``i`` is
+token-exact against a single-engine oracle rolling the same index under
+the same params (``tests/test_dist_trainer.py``).  What a fleet of N
+changes is only *which version's params* a group sees within the
+staleness bound — the same freedom PR 3's single actor already had.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+import jax
+
+from repro.dist import SliceTopology, WeightPublisher, carve
+from repro.models import capabilities as caps
+from repro.models.config import ModelConfig
+from repro.rl.async_trainer import (
+    AsyncNATGRPOTrainer, KeyChain, NATTrainerConfig, TaggedGroup,
+)
+from repro.rl.learner import with_publication
+from repro.rl.rollout import rollout_group_continuous
+
+
+def _parse_disagg(spec: str) -> bool:
+    if not spec:
+        return False
+    roles = {r.strip() for r in spec.split(",") if r.strip()}
+    if roles != {"prefill", "decode"}:
+        raise ValueError(
+            f"disagg must be '' or 'prefill,decode', got {spec!r}")
+    return True
+
+
+class DistNATGRPOTrainer(AsyncNATGRPOTrainer):
+    """Fleet-replicated, slice-placed NAT-GRPO trainer.
+
+    ``devices`` (default ``jax.devices()``) is carved into a learner slice
+    plus ``tcfg.fleet`` rollout slices; on a single-device host every
+    slice degenerates to that device and only the placement collapses —
+    the orchestration (fleet threads, ordered reassembly, publication
+    epochs) runs identically, which is what the parity tests pin.
+    """
+
+    def __init__(self, model_cfg: ModelConfig, tcfg: NATTrainerConfig,
+                 params=None, mesh=None, rules=None, budget_fn=None,
+                 devices=None):
+        fleet = max(1, int(tcfg.fleet))
+        disagg = _parse_disagg(tcfg.disagg)
+        if disagg:
+            if tcfg.rollout_engine != "paged":
+                raise ValueError(
+                    "disagg='prefill,decode' requires rollout_engine="
+                    f"'paged' (got {tcfg.rollout_engine!r}): the handoff "
+                    "contract is the paged pool's block tables")
+            caps.check_slice_handoff(model_cfg)
+        super().__init__(model_cfg, tcfg, params=params, mesh=mesh,
+                         rules=rules, budget_fn=budget_fn)
+        if self.engine is None:
+            raise ValueError(
+                "the disaggregated trainer needs a rollout engine "
+                f"(rollout_engine={tcfg.rollout_engine!r} resolved to the "
+                "legacy scan — no arena to pin to a slice)")
+
+        self.topology: SliceTopology = carve(devices, fleet=fleet,
+                                             disagg=disagg)
+        # one slice-pinned replica per fleet; replica 0 doubles as
+        # self.engine so the parent's inline staleness-0 path (and its
+        # introspection) runs on a fleet slice, not a detached engine
+        self.fleet_engines = [
+            self._build_engine(
+                device=fs.decode[0],
+                prefill_device=fs.prefill[0] if disagg else None)
+            for fs in self.topology.fleets
+        ]
+        self.engine = self.fleet_engines[0]
+
+        # device-to-device publication: one replicated target per fleet
+        # slice, epochs mapped 1:1 onto learner versions (epoch 0 = init).
+        # The train step itself carries the publication hook, so the
+        # snapshot dispatch overlaps the metrics fetch that follows it;
+        # _publish() then just swaps the version-tagged references.
+        self.publisher = WeightPublisher(
+            {fs.name: fs.decode[0] for fs in self.topology.fleets})
+        self._train_step = with_publication(self._train_step, self.publisher)
+        pub = self.publisher.publish(self.params, epoch=0)
+        self._published_f = {name: (tree, 0) for name, tree in pub.items()}
+        self._published = (pub[self.topology.fleets[0].name], 0)
+
+        # shared serial key chain: whichever replica claims group i gets
+        # the exact keys the serial walk would have produced for it
+        self._key_chain = KeyChain(self._actor_key, self._next_group)
+        self._fleet_threads: list = []
+        self._fleet_idle = [threading.Event()
+                            for _ in range(self.topology.num_fleets)]
+
+    # ------------------------------------------------------------- actor side
+    def _ensure_actor(self) -> None:
+        if self.tcfg.max_staleness == 0:
+            return  # inline production on fleet slice 0, no threads
+        if self._fleet_threads and all(t.is_alive()
+                                       for t in self._fleet_threads):
+            return
+        self._stop_evt.clear()
+        self._fleet_threads = []
+        for f, fs in enumerate(self.topology.fleets):
+            t = threading.Thread(
+                target=self._actor_main,
+                args=((lambda f=f: self._actor_fleet(f)),),
+                daemon=True, name=f"nat-actor-{fs.name}")
+            t.start()
+            self._fleet_threads.append(t)
+        self._actor = self._fleet_threads[0]  # parent lifecycle hooks
+
+    def _actor_fleet(self, f: int) -> None:
+        """One fleet replica's loop: claim the next group index under the
+        staleness gate, roll it on this replica's slice under the newest
+        published snapshot, deposit in index order (per-group sessions —
+        the chain keys make every group independently reproducible)."""
+        fs = self.topology.fleets[f]
+        engine = self.fleet_engines[f]
+        idle = self._fleet_idle[f]
+        while not self._stop_evt.is_set():
+            with self._cv:
+                while (not self._stop_evt.is_set()
+                       and (self._paused
+                            or not self._gate_open(self._next_group))):
+                    idle.set()
+                    self._cv.wait(0.05)
+                if self._stop_evt.is_set():
+                    return
+                idle.clear()
+                i = self._next_group
+                pb = self.pipeline.batch_at(i)
+                self.pipeline.step = max(self.pipeline.step, i + 1)
+                key0, k_roll, k_sel = self._key_chain.keys_for(i)
+                self._next_group = i + 1
+                # keep the parent's checkpoint cursor honest: _actor_key
+                # is always the chain state before the next unclaimed group
+                self._actor_key = self._key_chain.state_before(i + 1)
+                params, version = self._published_f[fs.name]
+                # claim the queue slot inside the lock: pop must know this
+                # index is in flight before any younger deposit can land.
+                # The gate bounds outstanding groups to <= capacity, so
+                # this never blocks; the timeout surfaces contract bugs.
+                self.queue.reserve(i, timeout=600.0)
+            t0 = time.perf_counter()
+            try:
+                rb = rollout_group_continuous(
+                    params, self.model_cfg, self.tcfg.rollout,
+                    pb.tokens, pb.prompt_lens, k_roll, engine=engine,
+                    budgets=self._budgets_for(i))
+            except BaseException:
+                self.queue.cancel(i)  # unblock pop before fail() lands
+                raise
+            self.queue.put(
+                TaggedGroup(index=i, behavior_version=version, batch=rb,
+                            prompt_batch=pb, key_sel=k_sel,
+                            t_rollout=time.perf_counter() - t0, key0=key0),
+                producer=fs.name)
+
+    # ----------------------------------------------------------- learner side
+    def _publish(self) -> None:
+        with self._cv:
+            self._learner_version += 1
+            pub = {}
+            for fs in self.topology.fleets:
+                tree, epoch = self.publisher.latest(fs.name)
+                if epoch != self._learner_version:
+                    raise RuntimeError(
+                        f"publication epoch {epoch} != learner version "
+                        f"{self._learner_version}: the train step's "
+                        "with_publication hook is out of sync")
+                pub[fs.name] = tree
+            self._published_f = {name: (tree, self._learner_version)
+                                 for name, tree in pub.items()}
+            self._published = (pub[self.topology.fleets[0].name],
+                               self._learner_version)
+            self._cv.notify_all()
+
+    # --------------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        super().close()  # joins thread 0 via self._actor
+        for t in self._fleet_threads:
+            t.join(timeout=10.0)
+        self._fleet_threads = []
+
+    def _quiesce(self, timeout: float = 300.0) -> None:
+        with self._cv:
+            self._paused = True
+            self._cv.notify_all()
+        alive = [t for t in self._fleet_threads if t.is_alive()]
+        if not alive:
+            return
+        deadline = time.monotonic() + timeout
+        while True:
+            settled = all(ev.is_set() or not t.is_alive()
+                          for t, ev in zip(self._fleet_threads,
+                                           self._fleet_idle))
+            if settled and self.queue.inflight() == 0:
+                return
+            if time.monotonic() > deadline:
+                raise TimeoutError("fleet actors failed to quiesce")
+            time.sleep(0.005)
+
+    # -------------------------------------------------------------- checkpoint
+    def restore_checkpoint(self, mgr, step: Optional[int] = None) -> dict:
+        extra = super().restore_checkpoint(mgr, step)
+        # re-seed the chain at the restored cursor and re-publish the
+        # restored params as the current epoch on every fleet slice
+        self._key_chain = KeyChain(self._actor_key, self._next_group)
+        pub = self.publisher.publish(self.params,
+                                     epoch=self._learner_version)
+        self._published_f = {name: (tree, self._learner_version)
+                             for name, tree in pub.items()}
+        self._published = (pub[self.topology.fleets[0].name],
+                           self._learner_version)
+        return extra
+
+    # ------------------------------------------------------------------ stats
+    def publication_stats(self) -> dict:
+        """Publisher counters + per-replica version watermarks — the
+        zero-host-bytes gate reads ``host_bytes`` from here."""
+        stats = dict(self.publisher.stats)
+        stats["watermarks"] = dict(self.queue.watermarks)
+        if hasattr(self.engine, "stats"):
+            stats["handoffs"] = int(self.engine.stats.get("handoffs", 0))
+            stats["handoff_bytes"] = int(
+                self.engine.stats.get("handoff_bytes", 0))
+        return stats
+
+
+def make_dist_trainer(model_cfg: ModelConfig, tcfg: NATTrainerConfig,
+                      **kw) -> AsyncNATGRPOTrainer:
+    """Config-dispatched constructor: fleet/disagg set -> the dist trainer,
+    otherwise the plain async trainer (what ``launch/train.py`` calls)."""
+    if tcfg.fleet or tcfg.disagg:
+        return DistNATGRPOTrainer(model_cfg, tcfg, **kw)
+    return AsyncNATGRPOTrainer(model_cfg, tcfg, **kw)

@@ -62,6 +62,7 @@ from repro.models.model import (
     paged_prefill,
     prefill,
 )
+from repro.dist.publish import tree_bytes as _tree_bytes
 from repro.rl.radix import RadixPrefixCache
 
 Array = jax.Array
@@ -179,7 +180,8 @@ class ContinuousRolloutEngine:
     (tests assert the retire/refill invariants on it).
     """
 
-    def __init__(self, cfg: ModelConfig, rcfg, ecfg: EngineConfig):
+    def __init__(self, cfg: ModelConfig, rcfg, ecfg: EngineConfig,
+                 *, device=None):
         if cfg.num_codebooks:
             raise NotImplementedError("engine serves text LMs (no codebooks)")
         caps.check_engine(cfg, "continuous")
@@ -188,6 +190,11 @@ class ContinuousRolloutEngine:
         self.cfg = cfg
         self.rcfg = rcfg
         self.ecfg = ecfg
+        # slice pinning (DESIGN.md §12): with a device, params and arena
+        # state are committed there, so every donated step — and the whole
+        # session — runs on that slice regardless of where the caller's
+        # arrays live.  None keeps the pre-fleet behaviour (default device).
+        self._device = device
         self.cache_len = ecfg.max_prompt_len + rcfg.max_new_tokens
         # donate the state: the arena (the big buffer) is updated in place
         # instead of copied every round
@@ -346,6 +353,8 @@ class ContinuousRolloutEngine:
         substeps), and a request's deltas always arrive before its
         Completion.  Streaming syncs two extra planes per round, so leave
         it off for pure-throughput rollout."""
+        if self._device is not None:
+            params = jax.device_put(params, self._device)
         self._params = params
         self._on_finish = on_finish
         self._on_token = on_token
@@ -353,7 +362,10 @@ class ContinuousRolloutEngine:
         self._queue: collections.deque = collections.deque()
         self._slot_uid: list = [None] * self.ecfg.num_slots
         self._to_cancel: set = set()
-        self._state = self._init_state(params, key)
+        state = self._init_state(params, key)
+        if self._device is not None:
+            state = jax.device_put(state, self._device)
+        self._state = state
         self.stats = {"rounds": 0, "decode_steps": 0, "refills": 0,
                       "tokens_generated": 0, "cancelled": 0,
                       "slot_substeps": 0}
@@ -382,7 +394,11 @@ class ContinuousRolloutEngine:
     def set_params(self, params) -> None:
         """Versioned snapshot swap: the *next* dispatched step decodes under
         ``params``.  The step already in flight keeps the reference it was
-        called with (jax arrays are immutable), so no copy and no race."""
+        called with (jax arrays are immutable), so no copy and no race.
+        On a slice-pinned engine the snapshot is committed to the slice
+        (a no-op when the publisher already delivered it there)."""
+        if self._device is not None:
+            params = jax.device_put(params, self._device)
         self._params = params
 
     def cancel(self, uids: Iterable[int]) -> None:
@@ -740,7 +756,8 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
       ``PagePoolExhausted`` instead of corrupting the arena.
     """
 
-    def __init__(self, cfg: ModelConfig, rcfg, ecfg: PagedEngineConfig):
+    def __init__(self, cfg: ModelConfig, rcfg, ecfg: PagedEngineConfig,
+                 *, device=None):
         caps.check_paged(cfg)
         if ecfg.prefix_cache:
             caps.check_prefix_cache(cfg)
@@ -760,7 +777,7 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
             raise ValueError(
                 "max_group cannot exceed num_slots: per-slot-state mixers "
                 "(local/ssm/rec) place groups atomically")
-        super().__init__(cfg, rcfg, ecfg)
+        super().__init__(cfg, rcfg, ecfg, device=device)
         self._reset_pool()
 
     # ------------------------------------------------------------ host pool
@@ -1008,7 +1025,7 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
             "out_ent": jnp.zeros((s, n), F32),
         }
 
-    def _make_step(self):
+    def _make_step(self, external_prefill: bool = False):
         cfg, rcfg, ecfg = self.cfg, self.rcfg, self.ecfg
         s_slots = ecfg.num_slots
         n = rcfg.max_new_tokens
@@ -1021,12 +1038,20 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
         cache_len = self.cache_len
         attn_impl = ecfg.attn_impl
         use_prefix = ecfg.prefix_cache
+        # external prefill (DESIGN.md §12): the prompt prefill ran on the
+        # prefill slice; this step receives its (logits0, fresh KV) as
+        # trailing operands and only scatters — state stays operand 1, so
+        # donate_argnums is unchanged.  Incompatible with the radix prefix
+        # cache (the match would need pool pages from the decode slice
+        # inside the prefill computation).
+        assert not (external_prefill and use_prefix), \
+            "prefix_cache cannot span the prefill/decode split"
 
         def step(params, state, block_tables, free_page_mask, refill_toks,
                  refill_lens, refill_prefix_len, refill_prefix_bt,
                  refill_page_ids, refill_slots, refill_budgets,
                  refill_mask, resume_slots, resume_logits, resume_lens,
-                 resume_budgets, resume_mask, cancel_mask):
+                 resume_budgets, resume_mask, cancel_mask, *handoff):
             st = dict(state)
             # 1. cancelled slots become free (harvest happened on host)
             st["active"] = st["active"] & ~cancel_mask
@@ -1053,7 +1078,12 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
                 # positions offset past the cached prefix.  With the cache
                 # off, refill_prefix_len is all-zero and this is exactly
                 # the old full-prompt prefill.
-                if use_prefix:
+                if external_prefill:
+                    # computed on the prefill slice, shipped device-to-
+                    # device by _dispatch; zero-filled buffers on
+                    # pure-decode rounds (branch result unused)
+                    logits0, fresh = handoff
+                elif use_prefix:
                     pfx = {}
                     for gi, (pattern, _repeat) in enumerate(cfg.blocks):
                         grp_p = {}
@@ -1065,13 +1095,15 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
                                      "pos": e["pos"]}, refill_prefix_bt)
                             grp_p[f"l{j}"] = {"k": kg, "v": vg, "pos": posg}
                         pfx[f"group{gi}"] = grp_p
+                    logits0, fresh = paged_prefill(
+                        params, cfg, refill_toks, cache_len=cache_len,
+                        prefill_len=jnp.maximum(refill_lens, 1),
+                        prefix_kv=pfx, prefix_len=refill_prefix_len)
                 else:
-                    pfx = None
-                logits0, fresh = paged_prefill(
-                    params, cfg, refill_toks, cache_len=cache_len,
-                    prefill_len=jnp.maximum(refill_lens, 1),
-                    prefix_kv=pfx,
-                    prefix_len=refill_prefix_len if use_prefix else None)
+                    logits0, fresh = paged_prefill(
+                        params, cfg, refill_toks, cache_len=cache_len,
+                        prefill_len=jnp.maximum(refill_lens, 1),
+                        prefix_kv=None, prefix_len=None)
                 qpos = jnp.arange(pad_t)[None, :]
                 page_vals = jnp.where(
                     qpos < refill_lens[:, None],
@@ -1172,6 +1204,24 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
         return step
 
     # ------------------------------------------------------------- drive
+    def _dispatch(self, state, bt, free_mask, refill_toks, refill_lens,
+                  refill_prefix_len, refill_prefix_bt, refill_page_ids,
+                  refill_slots, refill_budgets, refill_mask, resume_slots,
+                  resume_logits, resume_lens, resume_budgets, resume_mask,
+                  cancel_mask):
+        """Run the round's jitted step over host-built operands and return
+        the new device state — the seam the disaggregated engine overrides
+        to interpose the cross-slice prefill handoff (DESIGN.md §12)."""
+        return self._step(
+            self._params, state, jnp.asarray(bt), jnp.asarray(free_mask),
+            jnp.asarray(refill_toks), jnp.asarray(refill_lens),
+            jnp.asarray(refill_prefix_len), jnp.asarray(refill_prefix_bt),
+            jnp.asarray(refill_page_ids), jnp.asarray(refill_slots),
+            jnp.asarray(refill_budgets), jnp.asarray(refill_mask),
+            jnp.asarray(resume_slots), jnp.asarray(resume_logits),
+            jnp.asarray(resume_lens), jnp.asarray(resume_budgets),
+            jnp.asarray(resume_mask), jnp.asarray(cancel_mask))
+
     @property
     def idle(self) -> bool:
         return super().idle and not self._pending
@@ -1393,15 +1443,12 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
         if self._dirty:
             free_mask[sorted(self._dirty)] = True
 
-        self._state = self._step(
-            self._params, state, jnp.asarray(bt), jnp.asarray(free_mask),
-            jnp.asarray(refill_toks), jnp.asarray(refill_lens),
-            jnp.asarray(refill_prefix_len), jnp.asarray(refill_prefix_bt),
-            jnp.asarray(refill_page_ids), jnp.asarray(refill_slots),
-            jnp.asarray(refill_budgets), jnp.asarray(refill_mask),
-            jnp.asarray(resume_slots), jnp.asarray(resume_logits),
-            jnp.asarray(resume_lens), jnp.asarray(resume_budgets),
-            jnp.asarray(resume_mask), jnp.asarray(cancel_mask))
+        self._state = self._dispatch(
+            state, bt, free_mask, refill_toks, refill_lens,
+            refill_prefix_len, refill_prefix_bt, refill_page_ids,
+            refill_slots, refill_budgets, refill_mask, resume_slots,
+            resume_logits, resume_lens, resume_budgets, resume_mask,
+            cancel_mask)
         self._dirty.clear()
         for s in occupied:
             self._n_gen_ub[s] = min(self._n_gen_ub[s] + sps,
@@ -1414,6 +1461,111 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
         self.stats["pages_in_use"] = self._alloc.in_use
         self.stats["peak_pages_in_use"] = self._alloc.peak_in_use
         return harvested
+
+
+class DisaggPagedRolloutEngine(PagedRolloutEngine):
+    """Prefill/decode-disaggregated paged engine (DESIGN.md §12).
+
+    The paged round's one fused step does both prompt prefill and decode
+    substeps on one device; this engine splits them across a fleet slice's
+    two cells: prompt prefill runs as its own jitted cell on the
+    **prefill device**, and its output — the prompt logits plus the fresh
+    per-layer page payloads — is shipped device-to-device to the **decode
+    device**, where the (external-prefill) step scatters it into the
+    shared pool exactly as the fused step would have.  The handoff is the
+    group's block-table contract: pages are allocated on the decode slice
+    by the same host allocator, prefill writes arrive via the existing
+    scatter path, and nothing else (counters, planes, block tables)
+    changes — so token streams are bit-identical to the fused engine.
+
+    Requires every mixer pool-resident (``capabilities.check_slice_handoff``):
+    per-slot sequence state (local rings, ssm/rec) would be stranded on
+    the prefill slice.  The radix prefix cache is incompatible — a match
+    would need decode-slice pool pages inside the prefill computation.
+    """
+
+    def __init__(self, cfg: ModelConfig, rcfg, ecfg: PagedEngineConfig,
+                 *, prefill_device=None, decode_device=None):
+        caps.check_slice_handoff(cfg)
+        if ecfg.prefix_cache:
+            raise ValueError(
+                "prefix_cache cannot span the prefill/decode split: the "
+                "radix match needs decode-slice pool pages inside the "
+                "prefill computation")
+        self._prefill_device = prefill_device or jax.devices()[0]
+        super().__init__(cfg, rcfg, ecfg,
+                         device=decode_device or jax.devices()[0])
+        self._prefill_fn = jax.jit(self._make_prefill())
+        self._params_prefill = None
+        self._zero_handoff = None
+
+    def _make_step(self, external_prefill: bool = True):
+        return super()._make_step(external_prefill=True)
+
+    def _make_prefill(self):
+        cfg, cache_len = self.cfg, self.cache_len
+
+        def prefill_cell(params, toks, lens):
+            # the exact computation the fused step's do_refill runs (prefix
+            # cache off), so the handoff changes placement, never values
+            return paged_prefill(params, cfg, toks, cache_len=cache_len,
+                                 prefill_len=jnp.maximum(lens, 1),
+                                 prefix_kv=None, prefix_len=None)
+
+        return prefill_cell
+
+    def begin(self, params, key: Array, *, on_finish=None,
+              on_token=None) -> None:
+        # handoff counters are cumulative across group sessions (the
+        # trainer's publication_stats reads them as lifetime telemetry);
+        # the parent resets self.stats per session, so carry them over
+        carry = {k: getattr(self, "stats", {}).get(k, 0)
+                 for k in ("handoffs", "handoff_bytes")}
+        super().begin(params, key, on_finish=on_finish, on_token=on_token)
+        self.stats.update(carry)
+        self._params_prefill = jax.device_put(params, self._prefill_device)
+        if self._zero_handoff is None:
+            lanes, tp = self.ecfg.group_lanes, self.ecfg.max_prompt_len
+            shapes = jax.eval_shape(
+                self._prefill_fn, self._params_prefill,
+                jnp.zeros((lanes, tp), jnp.int32),
+                jnp.ones((lanes,), jnp.int32))
+            # pure-decode rounds still pass handoff operands (static jit
+            # signature); zero-filled once, resident on the decode slice
+            self._zero_handoff = jax.device_put(
+                jax.tree.map(lambda d: jnp.zeros(d.shape, d.dtype), shapes),
+                self._device)
+
+    def set_params(self, params) -> None:
+        super().set_params(params)
+        self._params_prefill = jax.device_put(params, self._prefill_device)
+
+    def _dispatch(self, state, bt, free_mask, refill_toks, refill_lens,
+                  refill_prefix_len, refill_prefix_bt, refill_page_ids,
+                  refill_slots, refill_budgets, refill_mask, resume_slots,
+                  resume_logits, resume_lens, resume_budgets, resume_mask,
+                  cancel_mask):
+        if refill_mask.any():
+            toks = jax.device_put(jnp.asarray(refill_toks),
+                                  self._prefill_device)
+            lens = jax.device_put(jnp.asarray(refill_lens),
+                                  self._prefill_device)
+            logits0, fresh = self._prefill_fn(
+                self._params_prefill, toks, lens)
+            handoff = jax.device_put((logits0, fresh), self._device)
+            self.stats["handoffs"] += 1
+            self.stats["handoff_bytes"] += _tree_bytes(handoff)
+        else:
+            handoff = self._zero_handoff
+        return self._step(
+            self._params, state, jnp.asarray(bt), jnp.asarray(free_mask),
+            jnp.asarray(refill_toks), jnp.asarray(refill_lens),
+            jnp.asarray(refill_prefix_len), jnp.asarray(refill_prefix_bt),
+            jnp.asarray(refill_page_ids), jnp.asarray(refill_slots),
+            jnp.asarray(refill_budgets), jnp.asarray(refill_mask),
+            jnp.asarray(resume_slots), jnp.asarray(resume_logits),
+            jnp.asarray(resume_lens), jnp.asarray(resume_budgets),
+            jnp.asarray(resume_mask), jnp.asarray(cancel_mask), *handoff)
 
 
 def make_paged_engine(cfg: ModelConfig, rcfg, *, num_slots: int,

@@ -205,3 +205,25 @@ def make_train_step(
         return new_params, new_opt, metrics
 
     return train_step
+
+
+def with_publication(train_step, publisher):
+    """Compose a train step with device-to-device weight publication
+    (DESIGN.md §12): after each update the new params are snapshotted onto
+    every rollout slice via ``dist.publish.WeightPublisher`` — a pure
+    ``jax.device_put`` resharding, zero bytes through the host — before
+    the step returns.  Publication is async-dispatched device work, so it
+    overlaps the host-side metrics fetch that follows in the trainer.
+
+    Epochs auto-increment from the publisher's last epoch; the
+    disaggregated trainer maps them 1:1 onto learner versions
+    (``rl/dist_trainer.py::DistNATGRPOTrainer._publish``).
+    """
+
+    def published_step(params, opt_state, batch, *args, **kwargs):
+        new_params, new_opt, metrics = train_step(
+            params, opt_state, batch, *args, **kwargs)
+        publisher.publish(new_params)
+        return new_params, new_opt, metrics
+
+    return published_step

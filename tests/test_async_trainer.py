@@ -1,6 +1,9 @@
 """Stream-overlapped trainer (DESIGN.md §6): token-exact serial parity at
 max_staleness=0, the sample queue's staleness contract, importance-correction
-metrics under forced staleness, and quiesce-checkpoint resume."""
+metrics under forced staleness, and quiesce-checkpoint resume.  Plus the
+multi-producer reassembly contract (DESIGN.md §12): N racing producers,
+ordered delivery, first-error-wins failure, deadlock-free reservations."""
+import threading
 import time
 
 import jax
@@ -188,6 +191,155 @@ def test_sample_queue_propagates_actor_errors():
     q.fail(RuntimeError("actor died"))
     with pytest.raises(RuntimeError, match="actor died"):
         q.pop(current_version=0, timeout=1.0)
+
+
+def test_sample_queue_fail_first_error_wins():
+    """A second fail() (e.g. close()'s poison pill racing a real actor
+    crash) must not mask the original exception — regression for the
+    fail/put race that used to surface the *last* error."""
+    q = SampleQueue(capacity=1, max_staleness=0)
+    q.put(_dummy_group(version=0, index=0))  # full: next put blocks
+
+    raised = []
+
+    def blocked_put():
+        try:
+            q.put(_dummy_group(version=0, index=1), timeout=30.0)
+        except BaseException as e:  # noqa: BLE001 - recording for assert
+            raised.append(e)
+
+    t = threading.Thread(target=blocked_put, daemon=True)
+    t.start()
+    time.sleep(0.2)  # let the put block on the full queue
+    q.fail(RuntimeError("root cause"))
+    q.fail(RuntimeError("poison pill"))
+    t.join(timeout=10.0)
+    assert not t.is_alive()
+    assert len(raised) == 1 and str(raised[0]) == "root cause"
+    with pytest.raises(RuntimeError, match="root cause"):
+        q.pop(current_version=0, timeout=1.0)  # consumer sees it too
+
+
+def test_sample_queue_reassembles_index_order():
+    """Out-of-order deposits from racing producers are served in serial
+    index order, and a reserved gap holds younger groups back."""
+    q = SampleQueue(capacity=4, max_staleness=3)
+    q.reserve(0)
+    q.put(_dummy_group(version=0, index=2), producer="f1")
+    q.put(_dummy_group(version=1, index=1), producer="f1")
+    with pytest.raises(TimeoutError):
+        q.pop(current_version=1, timeout=0.05)  # index 0 still in flight
+    q.put(_dummy_group(version=1, index=0), producer="f0")
+    got = [q.pop(current_version=1).index for _ in range(3)]
+    assert got == [0, 1, 2]
+    assert q.watermarks == {"f0": 1, "f1": 1}
+
+
+def test_sample_queue_cancel_unblocks_gap():
+    """A producer abandoning its reservation (rollout raised) must not
+    wedge the consumer waiting on the gap."""
+    q = SampleQueue(capacity=4, max_staleness=0)
+    q.reserve(0)
+    q.put(_dummy_group(version=0, index=1))
+    q.cancel(0)
+    assert q.pop(current_version=0, timeout=5.0).index == 1
+    assert q.inflight() == 0
+
+
+# --- multi-producer property (hypothesis when installed; seeded fallback) ---
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    from hypothesis_fallback import given, settings, st
+
+
+@settings(max_examples=15, deadline=None)
+@given(num_producers=st.integers(1, 4), max_staleness=st.integers(0, 3),
+       num_groups=st.integers(4, 14), drop_mod=st.integers(0, 5),
+       seed=st.integers(0, 999))
+def test_sample_queue_multi_producer_property(num_producers, max_staleness,
+                                              num_groups, drop_mod, seed):
+    """N producers race the trainer's claim/reserve/roll/put protocol while
+    a learner pops and bumps its version; some claims are abandoned
+    (cancel).  Invariants: delivery is the serial index order minus the
+    abandoned indices, nothing served is staler than ``max_staleness``,
+    and the system quiesces — no deadlock, no leaked reservations."""
+    import random
+
+    rng = random.Random(seed)
+    q = SampleQueue(capacity=max_staleness + 1, max_staleness=max_staleness)
+    lock = threading.Lock()
+    state = {"next": 0, "version": 0}
+    dropped, errors = set(), []
+
+    def producer(name):
+        try:
+            while True:
+                with lock:
+                    i = state["next"]
+                    if i >= num_groups:
+                        return
+                    # the trainer's staleness gate: claim only when the
+                    # learner is close enough, reserve INSIDE the claim
+                    # lock so the queue knows the gap before anyone
+                    # younger deposits.  Cancelled indices never reach the
+                    # learner, so the gate counts them as consumed —
+                    # otherwise a drop wedges it permanently.
+                    gated = (i - state["version"] - len(dropped)
+                             > max_staleness)
+                    if not gated:
+                        state["next"] = i + 1
+                        version = state["version"]
+                        q.reserve(i, timeout=30.0)
+                if gated:
+                    time.sleep(0.001)
+                    continue
+                time.sleep(rng.random() * 0.003)  # racy rollout
+                if drop_mod and i % drop_mod == drop_mod - 1:
+                    with lock:
+                        dropped.add(i)
+                    q.cancel(i)
+                    continue
+                q.put(_dummy_group(version=version, index=i),
+                      timeout=30.0, producer=name)
+        except BaseException as e:  # noqa: BLE001 - surface in main thread
+            errors.append(e)
+            q.fail(e)
+
+    threads = [threading.Thread(target=producer, args=(f"p{k}",),
+                                daemon=True)
+               for k in range(num_producers)]
+    for t in threads:
+        t.start()
+
+    served = []
+    while True:
+        with lock:
+            done = (state["next"] >= num_groups and q.inflight() == 0
+                    and q.qsize() == 0)
+        if done:
+            break
+        try:
+            g = q.pop(state["version"], timeout=0.2)
+        except TimeoutError:
+            continue
+        served.append(g)
+        with lock:
+            state["version"] += 1
+    for t in threads:
+        t.join(timeout=10.0)
+        assert not t.is_alive(), "producer deadlocked"
+    assert not errors, errors
+
+    expect = [i for i in range(num_groups) if i not in dropped]
+    assert [g.index for g in served] == expect, "serial order violated"
+    # the gate bounds staleness at claim time and drops known then are a
+    # subset of drops below the index, so nothing ever goes over-stale:
+    # the queue must have served everything within the bound, dropped none
+    for pos, g in enumerate(served):
+        assert pos - g.behavior_version <= max_staleness
+    assert q.dropped_stale == 0
+    assert q.inflight() == 0 and q.qsize() == 0
 
 
 @pytest.mark.parametrize("overprovision", [1.0, 1.5])

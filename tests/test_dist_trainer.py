@@ -1,0 +1,359 @@
+"""Disaggregated actor/learner (DESIGN.md §12): slice carving, d2d weight
+publication, fleet parity, and prefill/decode disaggregation.
+
+The load-bearing gates:
+
+* fleet-of-1 at staleness 0 is **bit-exact** against the serial
+  ``NATGRPOTrainer`` — same tokens, same metrics, same params — for both
+  the continuous and the disaggregated paged engine;
+* a fleet of N produces per-group **token-exact** rollouts against a
+  single-engine oracle walking the same indices (the shared KeyChain);
+* publication moves **zero bytes through the host** — asserted on the
+  publisher's counter (``jax.transfer_guard`` is belt-and-braces on real
+  backends but inert on the CPU backend, so the counter is the gate).
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+dist lane) the same suite exercises real cross-device placement; on a
+1-device host the carving degenerates and only the placement collapses.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.dist import WeightPublisher, carve, tree_bytes
+from repro.launch.mesh import slice_mesh
+from repro.launch.step_specs import publication_shardings
+from repro.models.capabilities import CapabilityError, check_slice_handoff
+from repro.models.config import ModelConfig, dense_blocks
+from repro.optim import AdamWConfig
+from repro.rl import (
+    AsyncNATGRPOTrainer,
+    DisaggPagedRolloutEngine,
+    DistNATGRPOTrainer,
+    KeyChain,
+    NATGRPOTrainer,
+    NATTrainerConfig,
+    RolloutConfig,
+    VOCAB_SIZE,
+    make_dist_trainer,
+)
+
+
+def tiny_cfg(**kw):
+    base = dict(name="tiny", d_model=64, n_heads=4, n_kv_heads=2,
+                head_dim=16, d_ff=128, vocab_size=VOCAB_SIZE,
+                blocks=dense_blocks(2), seq_parallel=False,
+                remat_policy="none", scan_layers=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def trainer_cfg(**kw):
+    base = dict(
+        selector="rpc", selector_kwargs=(("min_cut", 4),),
+        prompts_per_step=2, max_prompt_len=16,
+        rollout=RolloutConfig(max_new_tokens=8, group_size=4,
+                              overprovision=1.5, temperature=1.0),
+        steps_per_sync=2,
+        adamw=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50),
+        bucket_align=8, num_buckets=1, seed=0)
+    base.update(kw)
+    return NATTrainerConfig(**base)
+
+
+# ------------------------------------------------------------- placement
+def test_carve_topology_math():
+    """Pure placement arithmetic (device identity is irrelevant): learner
+    keeps the head, fleet roles round-robin the tail."""
+    devs = list(range(8))
+    topo = carve(devs, fleet=2, disagg=True)
+    assert topo.learner == (0, 1, 2, 3)
+    assert [fs.decode for fs in topo.fleets] == [(4,), (6,)]
+    assert [fs.prefill for fs in topo.fleets] == [(5,), (7,)]
+    assert [fs.name for fs in topo.fleets] == ["fleet0", "fleet1"]
+    assert topo.num_fleets == 2 and topo.disagg
+
+    topo = carve(devs, fleet=3, disagg=False)
+    assert topo.learner == tuple(devs[:5])
+    assert [fs.decode for fs in topo.fleets] == [(5,), (6,), (7,)]
+    assert all(fs.prefill == () for fs in topo.fleets)
+
+
+def test_carve_degenerate_single_device():
+    """On a 1-device host every role lands on that device — the
+    orchestration still runs, only the placement collapses."""
+    topo = carve([0], fleet=2, disagg=True)
+    assert topo.learner == (0,)
+    for fs in topo.fleets:
+        assert fs.decode == (0,) and fs.prefill == (0,)
+        assert fs.devices == (0,)
+
+
+def test_carve_errors():
+    with pytest.raises(ValueError, match="fleet"):
+        carve([0, 1], fleet=0)
+    with pytest.raises(ValueError, match="learner_devices"):
+        carve([0, 1], fleet=1, learner_devices=3)
+
+
+def test_carve_real_devices_distinct():
+    """With >= 4 real devices (the CI dist lane forces 8 virtual ones)
+    the learner slice and fleet slices are disjoint."""
+    devs = jax.devices()
+    if len(devs) < 4:
+        pytest.skip("needs >= 4 devices (CI dist lane)")
+    topo = carve(devs, fleet=2)
+    roles = [d for fs in topo.fleets for d in fs.devices]
+    assert len(set(roles)) == len(roles)
+    assert not (set(topo.learner) & set(roles))
+
+
+# ------------------------------------------------------------ publication
+def test_weight_publisher_counters_and_epochs():
+    params = {"w": np.ones((4, 4), np.float32),
+              "b": np.zeros((4,), np.float32)}
+    dev = jax.devices()[0]
+    pub = WeightPublisher({"fleet0": dev, "fleet1": dev})
+    out = pub.publish(params, epoch=0)
+    assert set(out) == {"fleet0", "fleet1"}
+    per_copy = tree_bytes(params)
+    assert per_copy == 4 * 4 * 4 + 4 * 4
+    assert pub.stats == {"publishes": 1, "bytes_published": 2 * per_copy,
+                         "host_bytes": 0, "epoch": 0}
+    out = pub.publish(params)  # epoch auto-increments
+    assert pub.stats["epoch"] == 1 and pub.stats["publishes"] == 2
+    tree, epoch = pub.latest("fleet1")
+    assert epoch == 1
+    np.testing.assert_array_equal(np.asarray(tree["w"]), params["w"])
+    with pytest.raises(KeyError):
+        pub.latest("fleet9")
+
+
+def test_publication_shardings_replicated():
+    """The dry-run-facing helper: every param leaf replicates over the
+    fleet slice mesh (a replica runs the whole model)."""
+    mesh = slice_mesh(jax.devices())
+    abs_p, sh = publication_shardings(tiny_cfg(), mesh)
+    leaves = jax.tree_util.tree_leaves(sh)
+    assert leaves and all(
+        s.spec == jax.sharding.PartitionSpec() for s in leaves)
+    assert (jax.tree_util.tree_structure(sh)
+            == jax.tree_util.tree_structure(abs_p))
+
+
+# --------------------------------------------------------------- keychain
+def test_keychain_matches_serial_walk():
+    """keys_for(i) reproduces the serial split walk even when indices are
+    claimed out of order (the fleet race)."""
+    key0 = jax.random.PRNGKey(7)
+    serial, state = [], key0
+    for _ in range(5):
+        state, k_roll, k_sel = jax.random.split(state, 3)
+        serial.append((k_roll, k_sel))
+    chain = KeyChain(key0)
+    for i in (3, 0, 4, 2, 1):
+        base, k_roll, k_sel = chain.keys_for(i)
+        np.testing.assert_array_equal(np.asarray(k_roll),
+                                      np.asarray(serial[i][0]))
+        np.testing.assert_array_equal(np.asarray(k_sel),
+                                      np.asarray(serial[i][1]))
+    np.testing.assert_array_equal(np.asarray(chain.state_before(0)),
+                                  np.asarray(key0))
+
+
+# ------------------------------------------------------- capability gates
+def test_disagg_capability_gate_config_time():
+    """Configs whose prompt state can't hand off across slices fail at
+    construction (models/capabilities.py), never mid-run."""
+    local = tiny_cfg(name="loc", blocks=((("attn", "local"), 2),), window=8)
+    with pytest.raises(CapabilityError, match="pool-resident"):
+        check_slice_handoff(local)
+    audio = tiny_cfg(name="audio", num_codebooks=2)
+    with pytest.raises(CapabilityError, match="num_codebooks"):
+        check_slice_handoff(audio)
+    # the trainer surfaces the same gate from its constructor
+    with pytest.raises(CapabilityError, match="pool-resident"):
+        DistNATGRPOTrainer(local, trainer_cfg(
+            fleet=1, disagg="prefill,decode", rollout_engine="paged"))
+    with pytest.raises(ValueError, match="rollout_engine"):
+        DistNATGRPOTrainer(tiny_cfg(), trainer_cfg(
+            fleet=1, disagg="prefill,decode"))  # continuous can't disagg
+    with pytest.raises(ValueError, match="disagg"):
+        DistNATGRPOTrainer(tiny_cfg(), trainer_cfg(
+            fleet=1, disagg="prefill", rollout_engine="paged"))
+
+
+def test_make_dist_trainer_dispatch():
+    tr = make_dist_trainer(tiny_cfg(), trainer_cfg())
+    try:
+        assert type(tr) is AsyncNATGRPOTrainer
+    finally:
+        tr.close()
+    tr = make_dist_trainer(tiny_cfg(), trainer_cfg(fleet=1))
+    try:
+        assert isinstance(tr, DistNATGRPOTrainer)
+    finally:
+        tr.close()
+
+
+# ---------------------------------------------------------------- parity
+@pytest.mark.slow
+def test_fleet1_staleness0_bitexact_continuous():
+    """THE parity gate: a fleet of 1 at staleness 0 reproduces the serial
+    trainer bit-for-bit — metrics each step, params after N steps — and
+    publication moved zero bytes through the host."""
+    cfg, n = tiny_cfg(), 3
+    serial = NATGRPOTrainer(cfg, trainer_cfg())
+    ref = [serial.train_step() for _ in range(n)]
+    serial.close()
+
+    dist = DistNATGRPOTrainer(cfg, trainer_cfg(fleet=1))
+    got = [dist.train_step() for _ in range(n)]
+    for a, b in zip(ref, got):
+        assert a["loss"] == b["loss"]
+        assert a["reward_mean"] == b["reward_mean"]
+        assert a["resp_len_mean"] == b["resp_len_mean"]
+    jax.tree.map(
+        lambda x, y: np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y)),
+        serial.params, dist.params)
+
+    stats = dist.publication_stats()
+    assert stats["host_bytes"] == 0          # the zero-host-bytes gate
+    assert stats["publishes"] == n + 1       # init + one per train step
+    assert stats["epoch"] == n
+    assert stats["bytes_published"] > 0
+    dist.close()
+
+
+@pytest.mark.slow
+def test_fleet1_disagg_bitexact_paged():
+    """Prefill/decode disaggregation is a pure placement change: the
+    disaggregated paged trainer is bit-exact against the fused serial
+    paged trainer, and the handoff counters show cross-slice traffic."""
+    cfg, n = tiny_cfg(), 3
+    serial = NATGRPOTrainer(cfg, trainer_cfg(rollout_engine="paged"))
+    ref = [serial.train_step() for _ in range(n)]
+    serial.close()
+
+    dist = DistNATGRPOTrainer(cfg, trainer_cfg(
+        rollout_engine="paged", fleet=1, disagg="prefill,decode"))
+    assert isinstance(dist.engine, DisaggPagedRolloutEngine)
+    got = [dist.train_step() for _ in range(n)]
+    for a, b in zip(ref, got):
+        assert a["loss"] == b["loss"]
+        assert a["reward_mean"] == b["reward_mean"]
+    jax.tree.map(
+        lambda x, y: np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y)),
+        serial.params, dist.params)
+
+    stats = dist.publication_stats()
+    assert stats["host_bytes"] == 0
+    assert stats["handoffs"] >= n            # one prefill handoff per group
+    assert stats["handoff_bytes"] > 0
+    dist.close()
+
+
+@pytest.mark.slow
+def test_fleet2_groups_token_exact_vs_oracle():
+    """Under a frozen learner, a racing fleet of 2 produces the exact
+    rollouts a single-engine oracle produces for the same indices — the
+    shared KeyChain pins group i's keys regardless of which replica
+    claims it."""
+    cfg, k = tiny_cfg(), 4
+
+    def collect(tc):
+        tr = DistNATGRPOTrainer(cfg, tc)
+        groups = {}
+        try:
+            tr._ensure_actor()
+            while len(groups) < k:
+                g = tr.queue.pop(0, timeout=120.0)
+                groups[g.index] = g
+        finally:
+            tr.close()
+        return groups
+
+    oracle = collect(trainer_cfg(fleet=1, max_staleness=k))
+    fleet = collect(trainer_cfg(fleet=2, max_staleness=k))
+    assert set(oracle) == set(fleet) == set(range(k))
+    for i in range(k):
+        np.testing.assert_array_equal(fleet[i].batch.tokens,
+                                      oracle[i].batch.tokens)
+        np.testing.assert_array_equal(fleet[i].batch.response_lens,
+                                      oracle[i].batch.response_lens)
+        np.testing.assert_array_equal(np.asarray(fleet[i].key_sel),
+                                      np.asarray(oracle[i].key_sel))
+        assert fleet[i].behavior_version == 0
+
+
+@pytest.mark.slow
+def test_fleet2_staleness_pipeline_runs():
+    """The full overlapped fleet pipeline: threads race, the queue
+    reassembles, the learner steps, watermarks advance, no host bytes."""
+    dist = DistNATGRPOTrainer(
+        tiny_cfg(), trainer_cfg(fleet=2, max_staleness=2))
+    try:
+        ms = [dist.train_step() for _ in range(4)]
+    finally:
+        dist.close()
+    for m in ms:
+        assert m["staleness"] <= 2
+        assert np.isfinite(m["loss"])
+    stats = dist.publication_stats()
+    assert stats["host_bytes"] == 0
+    assert set(stats["watermarks"]) <= {"fleet0", "fleet1"}
+    assert stats["watermarks"], "no fleet ever deposited"
+
+
+@pytest.mark.slow
+def test_dist_checkpoint_resume_exact(tmp_path):
+    """quiesce-checkpoint + restore continues the exact parameter stream
+    (the restored trainer re-publishes onto its fleet slices)."""
+    from repro.checkpoint import CheckpointManager
+
+    cfg, tc = tiny_cfg(), trainer_cfg(fleet=1)
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+
+    a = DistNATGRPOTrainer(cfg, tc)
+    a.train_step()
+    a.train_step()
+    saved = a.save_checkpoint(mgr)
+    while a.step_count < saved + 2:
+        a.train_step()
+    a.close()
+
+    b = DistNATGRPOTrainer(cfg, tc)
+    b.restore_checkpoint(mgr)
+    assert b.step_count == saved
+    b.train_step()
+    b.train_step()
+    b.close()
+
+    jax.tree.map(
+        lambda x, y: np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y)),
+        a.params, b.params)
+
+
+@pytest.mark.slow
+def test_eight_device_fleet_placement():
+    """The CI dist lane's 8-virtual-device run: replicas actually land on
+    distinct devices, rollouts execute there, and parity still holds."""
+    devs = jax.devices()
+    if len(devs) < 8:
+        pytest.skip("needs 8 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    cfg = tiny_cfg()
+    dist = DistNATGRPOTrainer(
+        cfg, trainer_cfg(rollout_engine="paged", fleet=2,
+                         disagg="prefill,decode"), devices=devs)
+    placed = {d for fs in dist.topology.fleets for d in fs.devices}
+    assert len(placed) == 4 and not (set(dist.topology.learner) & placed)
+    try:
+        m = dist.train_step()
+    finally:
+        dist.close()
+    assert np.isfinite(m["loss"])
+    assert dist.publication_stats()["host_bytes"] == 0
