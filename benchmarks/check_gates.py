@@ -21,7 +21,13 @@ Gating policy:
     tokens at a 50% keep budget; paged/prompt_kv_bytes_ratio <= 1/G +
     slack: prompt KV per group must stay O(1) in the group size;
     serving/prefill_token_ratio <= 0.5: prompt prefill work sublinear in
-    the request count; serving/ttft_ms under a generous wall bound),
+    the request count; serving/ttft_ms under a generous wall bound;
+    chaos/recovery_overhead_ratio <= 1.5: one killed replica costs at
+    most half a clean window),
+  * counter-EXACT equalities on the fault-recovery counters
+    (chaos/recovery_counters: groups_reclaimed == 1, publish_retries ==
+    1) — the injected fault schedule implies those counts
+    deterministically, so any drift is a recovery bug, not noise,
   * >10% regression vs the newest committed artifact on those same rows
     (drop for floors, rise for ceilings); pure wall-clock rows AND
     within-run wall-time ratios (rollout/speedup, async/overlap_speedup,
@@ -96,6 +102,18 @@ CEILINGS = {
     # host-transfer counter is deterministic and must be EXACTLY zero —
     # one staged byte means the d2d path silently fell back to the host
     "dist/publish_host_bytes": ("host_bytes", 0.0),
+    # losing a fleet replica mid-window (DESIGN.md §13) may cost at most
+    # 50% wall time over the clean window: one group's re-roll plus the
+    # elastic join, never a stall until a timeout expires
+    "chaos/recovery_overhead_ratio": ("recovery_overhead_ratio", 1.5),
+}
+# row name -> {metric key: exact value}: deterministic recovery counters.
+# The injected fault schedule (one replica death, one transient publish
+# fault — benchmarks/bench_fault_recovery.py) implies EXACTLY these
+# counts; any drift is lost or duplicated recovery work, not runner noise
+EXACT = {
+    "chaos/recovery_counters": {"groups_reclaimed": 1.0,
+                                "publish_retries": 1.0},
 }
 REL_REGRESSION = 0.10  # gated metrics may not regress >10% vs the baseline
 # rows gated ONLY by their absolute bound: a ratio of (or a raw) CPU wall
@@ -104,7 +122,8 @@ REL_REGRESSION = 0.10  # gated metrics may not regress >10% vs the baseline
 # floor/ceiling above already encodes the whole requirement
 ABSOLUTE_ONLY = {"rollout/speedup", "async/overlap_speedup",
                  "paged/decode_tps_ratio", "serving/tps",
-                 "serving/ttft_ms", "dist/fleet_speedup"}
+                 "serving/ttft_ms", "dist/fleet_speedup",
+                 "chaos/recovery_overhead_ratio"}
 # floors that measure thread-level parallelism: undefined on a runner with
 # one CPU (actor and learner cannot overlap by construction), so they are
 # skipped — loudly — when the fresh artifact records cpu_count == 1
@@ -192,6 +211,9 @@ def check(fresh_path: str, root: str) -> int:
                 deltas.append((f"{name}:{mk}", bv, fv, pct))
                 print(f"  {name}:{mk}: {bv:.4g} -> {fv:.4g} "
                       f"({pct:+.1f}%)")
+        for name in EXACT:
+            if name in base and name not in fresh:
+                failures.append(f"gated row {name} missing from fresh run")
         for gated, lower_is_better in ((GATES, False), (CEILINGS, True)):
             for name, (mk, _bound) in gated.items():
                 if name not in base or mk not in base[name]:
@@ -234,6 +256,21 @@ def check(fresh_path: str, root: str) -> int:
             gate_rows.append((f"{name}:{mk}", fv, "ceiling", ceil, status))
             if fv > ceil:
                 failures.append(f"{name}:{mk} above ceiling {ceil}: {fv:.3f}")
+    for name, exacts in EXACT.items():
+        if name not in fresh:
+            continue
+        for mk, want_v in sorted(exacts.items()):
+            if mk not in fresh[name]:
+                failures.append(f"{name}:{mk} counter missing from fresh run")
+                continue
+            fv = fresh[name][mk]
+            status = "ok" if fv == want_v else "FAIL"
+            print(f"  gate {name}:{mk} = {fv:g} (exact {want_v:g}) {status}")
+            gate_rows.append((f"{name}:{mk}", fv, "exact", want_v, status))
+            if fv != want_v:
+                failures.append(
+                    f"{name}:{mk} != exact {want_v:g}: {fv:g} "
+                    "(deterministic recovery counter — not noise)")
 
     _append_step_summary(title, deltas, gate_rows, failures)
     if failures:

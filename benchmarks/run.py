@@ -27,7 +27,7 @@ def main():
     ap.add_argument("--only", default="",
                     help="comma list: unbiasedness,gradnorm,matrix,ratio,"
                          "efficiency,quality,rollout,async,packed,paged,"
-                         "paged_learner,serving,dist,roofline")
+                         "paged_learner,serving,dist,chaos,roofline")
     ap.add_argument("--json", default="",
                     help="write aggregated machine-readable results here")
     args = ap.parse_args()
@@ -84,6 +84,10 @@ def main():
     if on("dist"):
         from benchmarks import bench_dist_overlap
         bench_dist_overlap.run()
+        print()
+    if on("chaos"):
+        from benchmarks import bench_fault_recovery
+        bench_fault_recovery.run(smoke=not args.full)
         print()
     if on("quality"):
         from benchmarks import bench_quality

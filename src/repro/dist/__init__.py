@@ -6,7 +6,7 @@ device-to-device weight publication.
 See DESIGN.md §5 (sharding) and §12 (placement + publication).
 """
 from repro.dist.placement import FleetSlice, SliceTopology, carve
-from repro.dist.publish import WeightPublisher, tree_bytes
+from repro.dist.publish import PublicationError, WeightPublisher, tree_bytes
 from repro.dist.sharding import (
     DEFAULT_RULES,
     RULE_PROFILES,
@@ -22,6 +22,7 @@ __all__ = [
     "DEFAULT_RULES",
     "RULE_PROFILES",
     "FleetSlice",
+    "PublicationError",
     "ShardingRules",
     "SliceTopology",
     "WeightPublisher",

@@ -30,9 +30,14 @@ actor that picks up ``latest`` at admission produces a group whose
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+
+
+class PublicationError(RuntimeError):
+    """Publication failed after exhausting its bounded retry budget."""
 
 
 def tree_bytes(tree: Any) -> int:
@@ -53,18 +58,31 @@ class WeightPublisher:
     (the common fully-replicated engine layout) or a ``Sharding``.  The
     publisher is thread-safe — the learner publishes from the train loop
     while fleet actor threads read ``latest`` at group admission.
+
+    ``max_attempts``/``backoff_s`` bound the retry loop around the
+    device_put sweep (DESIGN.md §13): a transient failure (an injected
+    fault, a flaky interconnect on real backends) is retried with doubling
+    backoff and counted in ``publish_retries``; exhausting the budget
+    escalates as ``PublicationError`` — never a silent spin.
     """
 
-    def __init__(self, targets: Dict[str, Any]):
+    def __init__(self, targets: Dict[str, Any], *, max_attempts: int = 1,
+                 backoff_s: float = 0.05):
         if not targets:
             raise ValueError("WeightPublisher needs at least one target")
         self._targets = dict(targets)
         self._lock = threading.Lock()
         self._latest: Dict[str, Tuple[Any, int]] = {}
+        self._max_attempts = max(1, int(max_attempts))
+        self._backoff_s = float(backoff_s)
+        # fault-injection hook (testing/chaos.py, DESIGN.md §13): fired
+        # inside the retry loop so injected failures exercise it
+        self.chaos = None
         self.stats: Dict[str, int] = {
             "publishes": 0,
             "bytes_published": 0,
             "host_bytes": 0,
+            "publish_retries": 0,
             "epoch": 0,
         }
 
@@ -81,17 +99,57 @@ class WeightPublisher:
         with self._lock:
             if epoch is None:
                 epoch = self.stats["epoch"] + 1
-            out: Dict[str, Any] = {}
             nbytes = tree_bytes(params)
-            with jax.transfer_guard_device_to_host("disallow"):
-                for name, placement in self._targets.items():
-                    out[name] = jax.device_put(params, placement)
+            for attempt in range(1, self._max_attempts + 1):
+                try:
+                    if self.chaos is not None:
+                        self.chaos.fire("publish", index=int(epoch))
+                    out: Dict[str, Any] = {}
+                    with jax.transfer_guard_device_to_host("disallow"):
+                        for name, placement in self._targets.items():
+                            out[name] = jax.device_put(params, placement)
+                    break
+                except Exception as e:
+                    if attempt >= self._max_attempts:
+                        raise PublicationError(
+                            f"publication of epoch {epoch} failed after "
+                            f"{self._max_attempts} attempts") from e
+                    self.stats["publish_retries"] += 1
+                    time.sleep(self._backoff_s * 2 ** (attempt - 1))
             for name, tree in out.items():
                 self._latest[name] = (tree, epoch)
             self.stats["publishes"] += 1
             self.stats["bytes_published"] += nbytes * len(self._targets)
             self.stats["epoch"] = int(epoch)
             return out
+
+    def add_target(self, name: str, placement: Any, params: Any = None,
+                   *, epoch: Optional[int] = None) -> Any:
+        """Register a publication target mid-run (fleet elasticity,
+        DESIGN.md §13).  With ``params``, the current snapshot is pushed
+        to the newcomer immediately, stamped with ``epoch`` (default: the
+        publisher's current epoch) — the joiner starts at the fleet's
+        publication epoch instead of waiting a step.  Returns the
+        resharded tree (or None without ``params``)."""
+        with self._lock:
+            if name in self._targets:
+                raise ValueError(f"target {name!r} already registered")
+            self._targets[name] = placement
+            if params is None:
+                return None
+            e = self.stats["epoch"] if epoch is None else int(epoch)
+            with jax.transfer_guard_device_to_host("disallow"):
+                tree = jax.device_put(params, placement)
+            self._latest[name] = (tree, e)
+            self.stats["bytes_published"] += tree_bytes(params)
+            return tree
+
+    def remove_target(self, name: str) -> None:
+        """Stop publishing to a departed replica (its last snapshot is
+        dropped too — a rejoin under the same name starts fresh)."""
+        with self._lock:
+            self._targets.pop(name, None)
+            self._latest.pop(name, None)
 
     def latest(self, name: str) -> Tuple[Any, int]:
         """Newest ``(params, epoch)`` snapshot for target ``name``."""

@@ -75,6 +75,25 @@ def main(argv=None):
     ap.add_argument("--max-staleness", type=int, default=0,
                     help="bounded staleness for the overlapped pipeline "
                          "(0 = serial; required 0 for bit-exact parity)")
+    ap.add_argument("--fleet-elastic", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="supervise the fleet (DESIGN.md §13): heartbeat "
+                         "each actor, reclaim a dead/hung replica's claimed "
+                         "group for a token-exact re-roll by a survivor, "
+                         "and allow add_replica joins mid-run; "
+                         "--no-fleet-elastic dies on first replica failure")
+    ap.add_argument("--hang-timeout", type=float, default=300.0,
+                    help="seconds a claimed group may sit with no heartbeat "
+                         "and no engine progress before the supervisor "
+                         "condemns the replica and reclaims its group")
+    ap.add_argument("--supervise-interval", type=float, default=0.2,
+                    help="supervisor monitor poll period in seconds")
+    ap.add_argument("--publish-retries", type=int, default=3,
+                    help="bounded attempts for weight publication before "
+                         "escalating PublicationError (DESIGN.md §13)")
+    ap.add_argument("--placement-retries", type=int, default=3,
+                    help="bounded rollout attempts under transient "
+                         "PagePoolExhausted before escalating")
     ap.add_argument("--eval-prompts", type=int, default=32)
     args = ap.parse_args(argv)
 
@@ -98,6 +117,11 @@ def main(argv=None):
         max_staleness=args.max_staleness,
         fleet=args.fleet,
         disagg=args.disagg,
+        supervise=args.fleet_elastic,
+        hang_timeout=args.hang_timeout,
+        supervise_interval=args.supervise_interval,
+        publish_retries=args.publish_retries,
+        placement_retries=args.placement_retries,
         seed=args.seed,
     )
     # config-time capability check happens inside the dist constructor

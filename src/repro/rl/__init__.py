@@ -15,7 +15,18 @@ from repro.rl.async_trainer import (
     SampleQueue,
     TaggedGroup,
 )
-from repro.rl.dist_trainer import DistNATGRPOTrainer, make_dist_trainer
+from repro.rl.dist_trainer import (
+    DistNATGRPOTrainer,
+    FleetReplica,
+    make_dist_trainer,
+)
+from repro.rl.supervision import (
+    QuiesceTimeout,
+    ReplicaSupervisor,
+    RetryPolicy,
+    SupervisorError,
+    retry_call,
+)
 from repro.rl.engine import (
     Completion,
     ContinuousRolloutEngine,
@@ -51,4 +62,6 @@ __all__ = [
     "rollout_group_continuous", "NATGRPOTrainer", "NATTrainerConfig",
     "AsyncNATGRPOTrainer", "SampleQueue", "TaggedGroup", "KeyChain",
     "DistNATGRPOTrainer", "DisaggPagedRolloutEngine", "make_dist_trainer",
+    "FleetReplica", "ReplicaSupervisor", "RetryPolicy", "SupervisorError",
+    "QuiesceTimeout", "retry_call",
 ]

@@ -100,6 +100,14 @@ class NATTrainerConfig:
     # -- disaggregated fleets (DESIGN.md §12, rl/dist_trainer.py) --
     fleet: int = 0                   # N>0: N replicated rollout fleet slices
     disagg: str = ""                 # "" | "prefill,decode": split each slice
+    # -- supervision / elasticity (DESIGN.md §13, rl/supervision.py) --
+    supervise: bool = True           # heartbeat + reclaim supervisor (fleets)
+    hang_timeout: float = 300.0      # claimed group + no heartbeat/progress
+    supervise_interval: float = 0.2  # monitor poll period
+    publish_retries: int = 3         # bounded WeightPublisher attempts
+    publish_backoff: float = 0.05    # base publish backoff (doubles/attempt)
+    placement_retries: int = 3       # bounded attempts under PagePoolExhausted
+    placement_backoff: float = 0.05  # base placement backoff (doubles/attempt)
 
 
 @dataclasses.dataclass
@@ -147,10 +155,15 @@ class SampleQueue:
         self.capacity = max(1, capacity)
         self.max_staleness = max_staleness
         self.dropped_stale = 0
+        self.dropped_dup = 0             # late re-deposits of a served index
         self.watermarks: Dict[str, int] = {}
+        # fault-injection hook (testing/chaos.py, DESIGN.md §13): when set,
+        # fired at put() entry with the producer name and group index
+        self.chaos = None
         self._items: list = []           # sorted by .index (stable)
         self._keys: list = []            # parallel list of .index
         self._inflight: set = set()      # reserved, not yet deposited
+        self._max_served = -1            # newest index pop() has returned
         self._cv = threading.Condition()
         self._error: Optional[BaseException] = None
 
@@ -196,10 +209,37 @@ class SampleQueue:
             self._inflight.discard(index)
             self._cv.notify_all()
 
+    def remove_producer(self, name: str, *, cancel: tuple = ()) -> None:
+        """Forget a dead producer (supervision, DESIGN.md §13): its
+        watermark is deleted so publication-lag telemetry never reports a
+        ghost, and any reservation indices in ``cancel`` that nobody will
+        reclaim are dropped so ``pop`` stops holding younger groups for
+        them.  (The supervisor's reclaim path instead *keeps* the dead
+        replica's reservation — a survivor adopts it and deposits under
+        the same index.)"""
+        with self._cv:
+            self.watermarks.pop(name, None)
+            for i in cancel:
+                self._inflight.discard(i)
+            self._cv.notify_all()
+
     def put(self, group: TaggedGroup, timeout: Optional[float] = None,
             producer: Optional[str] = None) -> None:
+        if self.chaos is not None:
+            self.chaos.fire("queue_put", replica=producer,
+                            index=group.index)
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cv:
+            if (group.index <= self._max_served
+                    or group.index in self._keys):
+                # late duplicate: a condemned replica woke up after its
+                # claimed group was reclaimed and re-deposited (or even
+                # already consumed).  At-most-once per index: drop it,
+                # release any stale reservation, count it.
+                self._inflight.discard(group.index)
+                self.dropped_dup += 1
+                self._cv.notify_all()
+                return
             while (group.index not in self._inflight
                    and len(self._items) >= self.capacity
                    and self._error is None):
@@ -234,6 +274,7 @@ class SampleQueue:
                 while self._head_ready():
                     g = self._items.pop(0)
                     self._keys.pop(0)
+                    self._max_served = max(self._max_served, g.index)
                     self._cv.notify_all()  # wake a producer blocked on full
                     if (current_version - g.behavior_version
                             <= self.max_staleness):
@@ -310,10 +351,14 @@ class AsyncNATGRPOTrainer:
 
     def __init__(self, model_cfg: ModelConfig, tcfg: NATTrainerConfig,
                  params=None, mesh=None, rules=None,
-                 budget_fn: Optional[Callable[[int, int], int]] = None):
+                 budget_fn: Optional[Callable[[int, int], int]] = None,
+                 chaos=None):
         self.model_cfg = model_cfg
         self.tcfg = tcfg
         self.budget_fn = budget_fn
+        # fault-injection plan (testing/chaos.py, DESIGN.md §13) threaded
+        # into the queue/engine hook points; None in production
+        self.chaos = chaos
         self.env = make_env(tcfg.env, **dict(tcfg.env_kwargs))
         from repro.data.pipeline import PromptPipeline
 
@@ -369,6 +414,9 @@ class AsyncNATGRPOTrainer:
         self.queue = SampleQueue(
             max(tcfg.queue_groups or 0, tcfg.max_staleness + 1),
             tcfg.max_staleness)
+        self.queue.chaos = chaos
+        if chaos is not None and self.engine is not None:
+            self.engine.chaos = chaos
         self._cv = threading.Condition()
         self._learner_version = 0
         self._next_group = 0

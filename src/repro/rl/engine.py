@@ -202,6 +202,12 @@ class ContinuousRolloutEngine:
         self._cache_tmpl = None  # abstract cache template, memoized per run
         self.last_state: Optional[dict] = None
         self.stats: dict = {}
+        # fault-injection seam (testing/chaos.py, DESIGN.md §13): when a
+        # FaultPlan is installed, drive() fires once per round with this
+        # engine's replica tag — injected PagePoolExhausted here fakes
+        # transient pool pressure for the trainer's bounded retry
+        self.chaos = None
+        self.chaos_replica: Optional[str] = None
         # session fields (installed by begin(); benign defaults so `idle`
         # and introspection work on a never-begun engine)
         self._params = None
@@ -508,6 +514,9 @@ class ContinuousRolloutEngine:
         free slots from the queue, dispatch the jitted step.  Returns the
         Completions retired this round (possibly empty).  When the session
         is idle the call is a no-op."""
+        if self.chaos is not None:
+            self.chaos.fire("drive", replica=self.chaos_replica,
+                            index=self.stats.get("rounds", 0))
         ecfg, rcfg = self.ecfg, self.rcfg
         s_slots, tp = ecfg.num_slots, ecfg.max_prompt_len
         state, slot_uid, queue = self._state, self._slot_uid, self._queue
@@ -1236,6 +1245,12 @@ class PagedRolloutEngine(ContinuousRolloutEngine):
         siblings into freed slots, place queued groups with one shared
         prompt prefill each, allocate-ahead decode pages, dispatch the
         jitted step with fresh block tables."""
+        if self.chaos is not None:
+            # pool-pressure injection point: a PagePoolExhausted raised
+            # here is indistinguishable from a real transient exhaustion
+            # at placement/allocate-ahead (testing/chaos.py)
+            self.chaos.fire("placement", replica=self.chaos_replica,
+                            index=self.stats.get("rounds", 0))
         ecfg, rcfg = self.ecfg, self.rcfg
         s_slots, tp = ecfg.num_slots, ecfg.max_prompt_len
         pl_, sps = ecfg.page_len, ecfg.steps_per_sync

@@ -1,0 +1,337 @@
+"""Replica supervision for disaggregated fleets (DESIGN.md §13).
+
+A fleet actor can fail three ways: its thread **dies** (a rollout raised),
+it **hangs** (alive but making no progress — a wedged device call, an
+injected stall), or its work is **transiently refused** (publication
+failure, page-pool pressure).  Before this layer any of them killed the
+whole run: a dead producer left a reserved index in the ``SampleQueue``
+that ``pop`` waits on forever, and a failed publication escalated
+instantly.
+
+The ``ReplicaSupervisor`` turns replica failure into bounded, *token-exact*
+recovery:
+
+* every actor heartbeats (``heartbeat``) around its claim/roll/deposit
+  loop, and registers an engine **progress watermark** (completed drive
+  rounds) so a long-but-advancing rollout is never mistaken for a hang;
+* a monitor thread detects death (thread no longer alive) and hangs
+  (claimed group + heartbeat/progress stale past ``hang_timeout``) and
+  responds identically: the victim's claimed-but-undelivered group index
+  is pushed onto a **reclaim heap**, its queue watermark is removed, and
+  surviving actors are woken.  A survivor takes the reclaimed index
+  *before* claiming fresh work and re-derives its exact keys from the
+  shared ``KeyChain`` — same index, same keys, same tokens, so recovery
+  is invisible in the sample stream (the kill-one-replica test pins
+  per-group token equality against the no-fault oracle);
+* the reclaimed index keeps its original queue **reservation** — the
+  learner keeps holding younger groups for the gap, and the survivor's
+  deposit is exempt from the capacity wait, exactly as if the first
+  claimer had delivered.  A condemned-but-alive replica that later wakes
+  and deposits the same index is dropped as a duplicate by the queue
+  (at-most-once per group, ``dropped_dup``);
+* when the last replica is gone the supervisor fails the queue with a
+  structured ``SupervisorError`` naming every replica's fate — the
+  learner's next ``pop`` raises it instead of timing out.
+
+``RetryPolicy``/``retry_call`` implement the bounded-backoff contract the
+tentpole demands for transient faults: never a silent spin, never an
+unbounded wait — attempts are counted and the final failure escalates
+with the original exception chained.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class SupervisorError(RuntimeError):
+    """A clean, structured supervision failure: the run cannot continue
+    (e.g. every replica is dead) and this names who failed and how."""
+
+    def __init__(self, msg: str, statuses: Optional[List["ReplicaStatus"]]
+                 = None):
+        super().__init__(msg)
+        self.statuses = statuses or []
+
+
+class QuiesceTimeout(TimeoutError):
+    """A quiesce/join deadline expired; the message names each replica,
+    its claimed group, its watermark, and its last heartbeat age."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry with exponential backoff (never a silent spin)."""
+
+    max_attempts: int = 3
+    backoff_s: float = 0.05
+    backoff_mult: float = 2.0
+
+
+def retry_call(fn: Callable, policy: RetryPolicy,
+               retryable: Tuple[type, ...],
+               on_retry: Optional[Callable[[int, BaseException], None]]
+               = None):
+    """Call ``fn`` with up to ``policy.max_attempts`` attempts; only
+    ``retryable`` exceptions are retried, anything else escalates
+    immediately.  ``on_retry(attempt, exc)`` fires before each backoff
+    sleep (counters, logging).  The final failure re-raises the last
+    exception — bounded attempts, then escalate."""
+    attempts = max(1, int(policy.max_attempts))
+    for attempt in range(1, attempts + 1):
+        try:
+            return fn()
+        except retryable as e:
+            if attempt >= attempts:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, e)
+            time.sleep(policy.backoff_s * policy.backoff_mult
+                       ** (attempt - 1))
+
+
+@dataclasses.dataclass
+class ReplicaStatus:
+    """Point-in-time snapshot of one replica, for structured errors."""
+
+    name: str
+    alive: bool
+    dead: bool
+    condemned: bool
+    claimed: Optional[int]
+    watermark: Optional[int]
+    heartbeat_age: float
+    error: Optional[BaseException] = None
+
+    def describe(self) -> str:
+        state = ("dead" if self.dead else
+                 "condemned" if self.condemned else
+                 "alive" if self.alive else "not-started")
+        s = (f"{self.name}: state={state} claimed={self.claimed} "
+             f"watermark={self.watermark} "
+             f"heartbeat_age={self.heartbeat_age:.1f}s")
+        if self.error is not None:
+            s += f" error={type(self.error).__name__}: {self.error}"
+        return s
+
+
+class _Replica:
+    __slots__ = ("name", "thread", "progress_fn", "hb", "last_activity",
+                 "last_progress", "claimed", "dead", "condemned", "error")
+
+    def __init__(self, name, thread, progress_fn, now):
+        self.name = name
+        self.thread = thread
+        self.progress_fn = progress_fn
+        self.hb = now               # last explicit heartbeat
+        self.last_activity = now    # hb or progress-watermark advance
+        self.last_progress = None
+        self.claimed: Optional[int] = None
+        self.dead = False
+        self.condemned = False
+        self.error: Optional[BaseException] = None
+
+
+class ReplicaSupervisor:
+    """Heartbeat monitor + token-exact group reclaim for a replica fleet.
+
+    The supervisor's lock is a *leaf*: actors may call every method here
+    while holding the trainer's condition variable, and the monitor thread
+    only ever takes the trainer lock through ``wake`` (invoked outside the
+    supervisor lock), so no cycle exists.
+    """
+
+    def __init__(self, queue, *, hang_timeout: float = 300.0,
+                 interval: float = 0.2,
+                 wake: Optional[Callable[[], None]] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self._queue = queue
+        self.hang_timeout = float(hang_timeout)
+        self.interval = float(interval)
+        self._wake = wake or (lambda: None)
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._replicas: Dict[str, _Replica] = {}
+        self._reclaim: List[int] = []      # min-heap of orphaned indices
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.stats: Dict[str, int] = {
+            "replicas_failed": 0,       # threads that died
+            "replicas_condemned": 0,    # hangs detected (thread still alive)
+            "groups_reclaimed": 0,      # orphaned indices handed to survivors
+            "joins": 0,                 # replicas added mid-run
+        }
+
+    # --------------------------------------------------------- registration
+    def register(self, name: str, thread=None, progress=None,
+                 joined: bool = False) -> None:
+        """Track a replica.  ``progress`` is a nullary callable returning a
+        monotonically increasing work counter (engine drive rounds);
+        ``joined=True`` counts it as a mid-run elastic join."""
+        with self._lock:
+            self._replicas[name] = _Replica(name, thread, progress,
+                                            self._clock())
+            if joined:
+                self.stats["joins"] += 1
+
+    # --------------------------------------- actor-side protocol (leaf-safe)
+    def heartbeat(self, name: str) -> None:
+        r = self._replicas.get(name)
+        if r is not None:
+            r.hb = self._clock()
+
+    def claim(self, name: str, index: int) -> None:
+        with self._lock:
+            r = self._replicas[name]
+            r.claimed = index
+            r.hb = self._clock()
+
+    def delivered(self, name: str, index: int) -> None:
+        with self._lock:
+            r = self._replicas.get(name)
+            if r is not None and r.claimed == index:
+                r.claimed = None
+
+    def should_stop(self, name: str) -> bool:
+        """A condemned/dead replica's loop must exit instead of claiming
+        more work (its late in-flight deposit is still accepted-or-deduped
+        by the queue)."""
+        r = self._replicas.get(name)
+        return r is None or r.dead or r.condemned
+
+    def report_failure(self, name: str, exc: BaseException) -> None:
+        """An actor thread died with ``exc``: reclaim its claimed group,
+        drop its ghost watermark, wake survivors — or fail the queue with
+        a structured error if it was the last one standing."""
+        self._retire(name, exc, dead=True)
+
+    # ----------------------------------------------------- reclaim protocol
+    def take_reclaim(self, name: str) -> Optional[int]:
+        """Pop the oldest orphaned group index and atomically assign it to
+        ``name`` (so a crash while re-rolling re-reclaims it).  ``None``
+        when nothing is orphaned."""
+        with self._lock:
+            if not self._reclaim:
+                return None
+            i = heapq.heappop(self._reclaim)
+            r = self._replicas.get(name)
+            if r is not None:
+                r.claimed = i
+                r.hb = self._clock()
+            return i
+
+    def reclaim_pending(self) -> bool:
+        return bool(self._reclaim)
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            return
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._monitor, daemon=True,
+                                        name="nat-supervisor")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    # ------------------------------------------------------------- monitor
+    def _monitor(self) -> None:
+        while not self._stop.wait(self.interval):
+            dead, hung = [], []
+            now = self._clock()
+            with self._lock:
+                for r in self._replicas.values():
+                    if r.dead or r.condemned:
+                        continue
+                    # ident is None until the thread actually starts:
+                    # replicas are registered before start() (so their
+                    # first heartbeat/claim always finds them), and a
+                    # not-yet-started thread is not a dead one
+                    if (r.thread is not None and r.thread.ident is not None
+                            and not r.thread.is_alive()):
+                        dead.append(r.name)
+                        continue
+                    if r.progress_fn is not None:
+                        try:
+                            p = r.progress_fn()
+                        except Exception:
+                            p = r.last_progress
+                        if p != r.last_progress:
+                            r.last_progress = p
+                            r.last_activity = now
+                    last = max(r.hb, r.last_activity)
+                    if (r.claimed is not None
+                            and now - last > self.hang_timeout):
+                        hung.append(r.name)
+            for name in dead:
+                self._retire(name, SupervisorError(
+                    f"replica {name!r} thread exited without reporting"),
+                    dead=True)
+            for name in hung:
+                self._retire(name, SupervisorError(
+                    f"replica {name!r} hung: claimed a group but neither "
+                    f"heartbeat nor engine progress advanced within "
+                    f"{self.hang_timeout:.1f}s"), dead=False)
+
+    def _retire(self, name: str, exc: BaseException, *, dead: bool) -> None:
+        """Common death/condemnation path: reclaim, de-watermark, wake."""
+        fail_all: Optional[SupervisorError] = None
+        with self._lock:
+            r = self._replicas.get(name)
+            if r is None or r.dead or r.condemned:
+                return  # already handled (e.g. condemned, then died)
+            if dead:
+                r.dead = True
+                self.stats["replicas_failed"] += 1
+            else:
+                r.condemned = True
+                self.stats["replicas_condemned"] += 1
+            r.error = exc
+            if r.claimed is not None:
+                heapq.heappush(self._reclaim, r.claimed)
+                self.stats["groups_reclaimed"] += 1
+                r.claimed = None
+            if all(x.dead or x.condemned for x in self._replicas.values()):
+                fail_all = SupervisorError(
+                    "all fleet replicas are dead or condemned:\n  "
+                    + "\n  ".join(s.describe() for s in self._status()),
+                    self._status())
+        # callbacks outside the leaf lock
+        self._queue.remove_producer(name)
+        if fail_all is not None:
+            self._queue.fail(fail_all)
+        self._wake()
+
+    # --------------------------------------------------------------- status
+    def _status(self) -> List[ReplicaStatus]:
+        """Caller holds the lock."""
+        now = self._clock()
+        out = []
+        for r in self._replicas.values():
+            out.append(ReplicaStatus(
+                name=r.name,
+                alive=bool(r.thread is not None and r.thread.is_alive()),
+                dead=r.dead, condemned=r.condemned, claimed=r.claimed,
+                watermark=self._queue.watermarks.get(r.name),
+                heartbeat_age=now - max(r.hb, r.last_activity),
+                error=r.error))
+        return out
+
+    def status(self) -> List[ReplicaStatus]:
+        with self._lock:
+            return self._status()
+
+    def describe(self) -> str:
+        return "; ".join(s.describe() for s in self.status())
+
+    def all_dead(self) -> bool:
+        with self._lock:
+            return bool(self._replicas) and all(
+                r.dead or r.condemned for r in self._replicas.values())

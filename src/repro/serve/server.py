@@ -47,7 +47,17 @@ from repro.rl.engine import Completion, Request
 
 
 class ServerSaturated(RuntimeError):
-    """Both queues are full — the request was shed, try again later."""
+    """Both queues are full — the request was shed, try again later.
+
+    ``retry_after_s`` is the server's own estimate of when a slot will
+    free up, derived from the recent completion drain rate (see
+    ``AsyncLMServer._retry_after``): a saturated caller can sleep that
+    long instead of hammering ``submit`` in a tight loop.  Falls back to
+    0.1 s when the server has not completed anything recently."""
+
+    def __init__(self, msg: str, retry_after_s: float = 0.1):
+        super().__init__(msg)
+        self.retry_after_s = float(retry_after_s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,6 +163,9 @@ class AsyncLMServer:
         self._pump_task: Optional[asyncio.Task] = None
         self._wake: Optional[asyncio.Event] = None
         self._stopping = False
+        # recent completion timestamps -> drain-rate estimate for the
+        # retry_after_s hint carried by ServerSaturated (DESIGN.md §13)
+        self._finish_times: List[float] = []
         self.stats = {"submitted": 0, "admitted": 0, "completed": 0,
                       "shed": 0, "tokens_out": 0, "ttft_sum": 0.0,
                       "ttft_max": 0.0, "drive_rounds": 0}
@@ -190,9 +203,11 @@ class AsyncLMServer:
         queued = sum(len(q) for q in self._queues.values())
         if queued >= self.scfg.max_queue:
             self.stats["shed"] += 1
+            hint = self._retry_after()
             raise ServerSaturated(
                 f"queue full ({queued}/{self.scfg.max_queue} requests); "
-                "retry after in-flight work drains")
+                f"retry in ~{hint:.2f}s (completion drain-rate estimate)",
+                retry_after_s=hint)
         budget = int(max_new) or self.scfg.default_budget
         uid = next(self._uid)
         req = Request(uid=uid,
@@ -210,6 +225,43 @@ class AsyncLMServer:
         if self._wake is not None:
             self._wake.set()
         return stream
+
+    async def submit_with_retry(self, tokens, *, tenant: str = "default",
+                                max_new: int = 0, attempts: int = 3,
+                                max_sleep_s: float = 1.0) -> TokenStream:
+        """``submit`` with bounded backoff on ``ServerSaturated``.
+
+        Sleeps ``min(retry_after_s, max_sleep_s)`` between attempts — the
+        server's own drain-rate estimate paces the retry instead of a
+        blind fixed interval — and re-raises the last ``ServerSaturated``
+        once ``attempts`` are exhausted (never an unbounded spin)."""
+        if attempts < 1:
+            raise ValueError("attempts must be >= 1")
+        for attempt in range(attempts):
+            try:
+                return self.submit(tokens, tenant=tenant, max_new=max_new)
+            except ServerSaturated as e:
+                if attempt + 1 >= attempts:
+                    raise
+                await asyncio.sleep(min(e.retry_after_s, max_sleep_s))
+        raise AssertionError("unreachable")  # pragma: no cover
+
+    def _retry_after(self) -> float:
+        """Seconds until a queue slot likely frees: the mean gap between
+        the last few completions.  With fewer than two recent completions
+        there is no rate to measure — fall back to 0.1 s."""
+        now = time.perf_counter()
+        # only completions from the last few seconds say anything about
+        # the *current* drain rate
+        recent = [t for t in self._finish_times if now - t < 5.0]
+        self._finish_times = recent
+        if len(recent) < 2:
+            return 0.1
+        span = recent[-1] - recent[0]
+        if span <= 0.0:
+            return 0.1
+        gap = span / (len(recent) - 1)
+        return max(gap, 1e-3)
 
     # ----------------------------------------------------------- scheduler
     def _admit(self) -> int:
@@ -255,6 +307,9 @@ class AsyncLMServer:
                 self.stats["ttft_max"] = max(self.stats["ttft_max"],
                                              stream.ttft)
         self.stats["completed"] += 1
+        self._finish_times.append(time.perf_counter())
+        if len(self._finish_times) > 64:
+            del self._finish_times[:-64]
         return None
 
     # ---------------------------------------------------------------- pump

@@ -1,0 +1,6 @@
+"""Deterministic fault injection for robustness tests (DESIGN.md §13)."""
+from repro.testing.chaos import (  # noqa: F401
+    FaultPlan, FaultSpec, InjectedActorDeath, InjectedFault,
+)
+
+__all__ = ["FaultPlan", "FaultSpec", "InjectedActorDeath", "InjectedFault"]

@@ -1,0 +1,160 @@
+"""Deterministic fault-injection harness (DESIGN.md §13).
+
+Every failure mode the supervision layer claims to survive — actor-thread
+death, slow-replica stalls, publication failures, queue-put exceptions,
+page-pool pressure — becomes a reproducible test through one seeded
+``FaultPlan``.  Production classes expose explicit hook points (a ``chaos``
+attribute, ``None`` by default and dead-cheap to check) and call
+``plan.fire(site, ...)`` at the instant the corresponding real failure
+would strike; the plan decides, deterministically, whether that occurrence
+stalls, raises, or passes through.  Nothing is monkeypatched: the hooks
+are part of the production surface, the *plans* live only in tests.
+
+Hook map (where each site fires):
+
+==============  ======================================================
+site            hook point
+==============  ======================================================
+``actor``       ``rl/dist_trainer.py::DistNATGRPOTrainer._actor_fleet``
+                after a replica claims group ``index`` (death/stall
+                here exercises reclaim: the reservation is live)
+``queue_put``   ``rl/async_trainer.py::SampleQueue.put`` entry, with
+                ``replica=producer`` and the group ``index``
+``publish``     ``dist/publish.py::WeightPublisher.publish`` inside the
+                retry loop, ``index=epoch`` (a transient raise here is
+                retried; a persistent one escalates)
+``placement``   ``rl/engine.py::PagedRolloutEngine.drive`` entry,
+                ``index`` = completed round count (raise
+                ``PagePoolExhausted`` to fake pool pressure)
+``drive``       ``rl/engine.py::ContinuousRolloutEngine.drive`` entry
+                (dense-arena twin of ``placement``)
+==============  ======================================================
+
+Matching is positional and exact: a spec fires when its ``site`` matches,
+its ``replica`` is ``None`` or equal to the hook's, and its ``at`` is
+``None`` or equal to the hook's ``index``; ``after`` skips that many
+matching occurrences first and ``times`` bounds how often it fires.  A
+plan with the same specs always injects the same faults at the same
+logical points — wall-clock never enters the decision.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import threading
+import time
+from typing import Dict, Optional, Sequence, Type
+
+
+class InjectedFault(RuntimeError):
+    """An error injected by a FaultPlan (never raised by real code)."""
+
+
+class InjectedActorDeath(InjectedFault):
+    """Injected actor-thread death: the replica's loop dies as if a real
+    rollout raised — the supervisor must reclaim its claimed group."""
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One fault: where (``site``/``replica``/``at``), what (``kind``),
+    and how often (``after``/``times``)."""
+
+    site: str                            # actor|queue_put|publish|placement|drive
+    kind: str = "raise"                  # "raise" | "stall"
+    replica: Optional[str] = None        # None -> any replica
+    at: Optional[int] = None             # None -> any index/epoch/round
+    after: int = 0                       # skip this many matching occurrences
+    times: int = 1                       # fire at most this many times
+    delay: float = 0.0                   # stall duration (kind="stall")
+    exc: Type[BaseException] = InjectedFault  # raised type (kind="raise")
+
+    def __post_init__(self):
+        if self.kind not in ("raise", "stall"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.kind == "stall" and self.delay <= 0:
+            raise ValueError("a stall fault needs delay > 0")
+
+
+class FaultPlan:
+    """A thread-safe, deterministic schedule of ``FaultSpec``s.
+
+    ``fire`` is the single entry point production hooks call; it matches
+    the occurrence against the specs under a lock (so concurrent replicas
+    cannot double-fire a ``times=1`` spec) and then sleeps or raises
+    *outside* the lock.  ``fired`` counts injections per site for
+    counter-exact assertions.
+    """
+
+    SITES = ("actor", "queue_put", "publish", "placement", "drive")
+
+    def __init__(self, specs: Sequence[FaultSpec] = ()):
+        self.specs = list(specs)
+        self._remaining = [int(s.times) for s in self.specs]
+        self._skip = [int(s.after) for s in self.specs]
+        self._lock = threading.Lock()
+        self.fired: Dict[str, int] = {}
+
+    def fire(self, site: str, *, replica: Optional[str] = None,
+             index: Optional[int] = None) -> None:
+        """Report one occurrence at ``site``; stall or raise if a spec
+        matches.  No-op (one lock round-trip) otherwise."""
+        to_raise: Optional[BaseException] = None
+        delay = 0.0
+        with self._lock:
+            for j, s in enumerate(self.specs):
+                if (s.site != site
+                        or (s.replica is not None and replica != s.replica)
+                        or (s.at is not None and index != s.at)
+                        or self._remaining[j] <= 0):
+                    continue
+                if self._skip[j] > 0:
+                    self._skip[j] -= 1
+                    continue
+                self._remaining[j] -= 1
+                self.fired[site] = self.fired.get(site, 0) + 1
+                if s.kind == "stall":
+                    delay = s.delay
+                else:
+                    to_raise = s.exc(
+                        f"chaos: injected {site} fault"
+                        f" (replica={replica}, index={index})")
+                break
+        if delay > 0:
+            time.sleep(delay)
+        if to_raise is not None:
+            raise to_raise
+
+    def total_fired(self) -> int:
+        with self._lock:
+            return sum(self.fired.values())
+
+    def exhausted(self) -> bool:
+        """True when every spec has fired its full ``times`` budget."""
+        with self._lock:
+            return all(r <= 0 for r in self._remaining)
+
+    @classmethod
+    def random(cls, seed: int, *, replicas: Sequence[str],
+               max_index: int = 8, max_faults: int = 3,
+               kinds: Sequence[str] = ("raise", "stall"),
+               sites: Sequence[str] = ("actor", "queue_put"),
+               stall_delay: float = 0.3,
+               exc: Type[BaseException] = InjectedActorDeath) -> "FaultPlan":
+        """A seeded random schedule for property tests: same seed, same
+        plan.  Faults target random replicas at random group indices
+        (``at=None`` with probability 1/3 — "whatever you claim next")."""
+        rng = random.Random(seed)
+        specs = []
+        for _ in range(rng.randrange(max_faults + 1)):
+            site = rng.choice(list(sites))
+            kind = rng.choice(list(kinds))
+            if site != "actor":
+                kind = "raise"  # stalls only make sense inside the actor
+            specs.append(FaultSpec(
+                site=site, kind=kind,
+                replica=rng.choice(list(replicas) + [None]),
+                at=rng.choice([None, rng.randrange(max_index)]),
+                delay=stall_delay if kind == "stall" else 0.0,
+                exc=InjectedFault if site != "actor" else exc))
+        return cls(specs)

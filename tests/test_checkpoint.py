@@ -68,6 +68,38 @@ def test_elastic_restore_with_shardings(tmp_path, tree):
         assert isinstance(leaf.sharding, NamedSharding)
 
 
+def test_torn_newest_checkpoint_falls_back(tmp_path, tree):
+    """Crash-safety regression (DESIGN.md §13): a truncated shard in the
+    newest checkpoint makes latest_step() skip it with a loud warning and
+    return the previous valid step; restore() of the torn step refuses."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)
+    mgr.save(2, tree)
+    # tear the newest: truncate one leaf's payload behind its npy header
+    step_dir = tmp_path / "step_000000002"
+    leaf = sorted(p for p in os.listdir(step_dir) if p.startswith("leaf_"))[0]
+    fp = step_dir / leaf
+    with open(fp, "r+b") as f:
+        f.truncate(os.path.getsize(fp) - 8)
+    assert not mgr.is_valid(2) and mgr.is_valid(1)
+    with pytest.warns(RuntimeWarning, match="torn or corrupt"):
+        assert mgr.latest_step() == 1
+    with pytest.raises(ValueError, match="torn or corrupt"):
+        mgr.restore(2, tree)
+    restored, _ = mgr.restore(1, tree)
+    assert tree_eq(tree, restored)
+
+
+def test_unparseable_manifest_falls_back(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, tree)
+    mgr.save(4, tree)
+    with open(tmp_path / "step_000000004" / "manifest.json", "w") as f:
+        f.write('{"step": 4, "leaves": {')  # torn mid-write
+    with pytest.warns(RuntimeWarning, match="torn or corrupt"):
+        assert mgr.latest_step() == 3
+
+
 def test_restore_latest_after_overwrite(tmp_path, tree):
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(1, tree)

@@ -119,7 +119,7 @@ def test_weight_publisher_counters_and_epochs():
     per_copy = tree_bytes(params)
     assert per_copy == 4 * 4 * 4 + 4 * 4
     assert pub.stats == {"publishes": 1, "bytes_published": 2 * per_copy,
-                         "host_bytes": 0, "epoch": 0}
+                         "host_bytes": 0, "publish_retries": 0, "epoch": 0}
     out = pub.publish(params)  # epoch auto-increments
     assert pub.stats["epoch"] == 1 and pub.stats["publishes"] == 2
     tree, epoch = pub.latest("fleet1")

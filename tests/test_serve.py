@@ -7,6 +7,7 @@ of PagePoolExhausted under a saturating system-prompt mix) — DESIGN.md §10.
 Async tests run via ``asyncio.run`` inside plain sync tests: the container
 has no pytest-asyncio, and the server's pump is an ordinary task."""
 import asyncio
+import time
 import types
 
 import numpy as np
@@ -275,6 +276,60 @@ def test_shedding_is_graceful_and_recovers():
             comp = await s.result()
             assert comp.completed
         assert srv.stats["completed"] == 4
+    asyncio.run(main())
+
+
+def test_saturated_carries_drain_rate_retry_hint():
+    """ServerSaturated tells the caller WHEN to retry: retry_after_s is
+    the mean gap between recent completions (0.1s fallback before any
+    completion data exists)."""
+    async def main():
+        eng = FakeEngine()
+        srv = AsyncLMServer(eng, None, None,
+                            ServeConfig(max_queue=2, max_backlog=2,
+                                        quantum=64, default_budget=4))
+        srv.submit(np.arange(4)), srv.submit(np.arange(4))
+        with pytest.raises(ServerSaturated) as ei:
+            srv.submit(np.arange(4))
+        assert ei.value.retry_after_s == pytest.approx(0.1)  # no drain data
+        # seed a measured drain rate: 4 completions 0.25s apart
+        now = time.perf_counter()
+        srv._finish_times = [now - 0.75, now - 0.5, now - 0.25, now]
+        with pytest.raises(ServerSaturated) as ei:
+            srv.submit(np.arange(4))
+        assert ei.value.retry_after_s == pytest.approx(0.25, rel=0.05)
+        assert srv.stats["shed"] == 2
+    asyncio.run(main())
+
+
+def test_submit_with_retry_bounded_then_succeeds():
+    """submit_with_retry paces itself by the server's own hint: bounded
+    attempts raise the final ServerSaturated when the queue stays full,
+    and a draining queue lets a later attempt through."""
+    async def main():
+        eng = FakeEngine()
+        srv = AsyncLMServer(eng, None, None,
+                            ServeConfig(max_queue=2, max_backlog=2,
+                                        quantum=64, default_budget=4))
+        held = [srv.submit(np.arange(4)) for _ in range(2)]
+        with pytest.raises(ValueError, match="attempts"):
+            await srv.submit_with_retry(np.arange(4), attempts=0)
+        # server stopped: every attempt sheds, the last one re-raises
+        with pytest.raises(ServerSaturated):
+            await srv.submit_with_retry(np.arange(4), attempts=3,
+                                        max_sleep_s=0.01)
+        assert srv.stats["shed"] == 3
+        # pump running: the queue drains underneath the retry loop
+        await srv.start()
+        stream = await srv.submit_with_retry(np.arange(4), attempts=50,
+                                             max_sleep_s=0.05)
+        await srv.drain()
+        await srv.stop()
+        comp = await stream.result()
+        assert comp.completed
+        for s in held:
+            assert (await s.result()).completed
+        assert srv.stats["completed"] == 3
     asyncio.run(main())
 
 
